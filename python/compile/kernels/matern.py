@@ -1,0 +1,262 @@
+"""Layer-1 Pallas kernels: the acquisition pipeline's compute hot spot.
+
+The single most-executed computation in the whole system is the
+Matérn-5/2 cross-covariance k(Q, X) between the B restart queries and
+the n training points — O(B·n·D) per L-BFGS-B iteration, inside every
+batched acquisition evaluation. This module implements it as a tiled
+Pallas kernel plus a Gram-matrix variant for the GP-fit path.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (B, n) grid is tiled
+into VMEM blocks via BlockSpec; the squared distance is computed in its
+expanded form ‖q‖² − 2 q·xᵀ + ‖x‖² so the dominant term is a
+(B_tile, D) × (D, n_tile) matmul that maps onto the MXU, with the two
+norm terms as cheap VPU row/column broadcasts. The paper targets CPU
+batching (PyTorch); on TPU the same batching insight becomes "make the
+batch dimension an MXU operand".
+
+On this image Pallas must run with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls); the BlockSpec structure is still what a
+real TPU lowering would use, and is what §Perf's VMEM/MXU estimates are
+computed from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 2.23606797749979
+
+# Hard cutoff on a·r: k < 5e-131 beyond this — numerically invisible,
+# but letting exp(−ar) underflow into subnormals costs 10-100× in every
+# downstream GEMM on x86 (measured: 33× on the fitted-GP acquisition
+# path, EXPERIMENTS.md §Perf). `where` produces exact (fast) zeros.
+AR_CUTOFF = 300.0
+
+
+def _matern_from_ar(ar, sf2):
+    """σ²(1 + ar + a²r²/3)e^{−ar} with the subnormal cutoff."""
+    safe = jnp.minimum(ar, AR_CUTOFF)
+    k = sf2 * (1.0 + safe + safe * safe / 3.0) * jnp.exp(-safe)
+    return jnp.where(ar > AR_CUTOFF, 0.0, k)
+
+
+def _grad_coeff_from_ar(ar, sf2, a):
+    """∂k/∂q scalar factor −σ²a²/3 (1+ar)e^{−ar} with the cutoff."""
+    safe = jnp.minimum(ar, AR_CUTOFF)
+    c = -(sf2 * a * a / 3.0) * (1.0 + safe) * jnp.exp(-safe)
+    return jnp.where(ar > AR_CUTOFF, 0.0, c)
+
+# Tile sizes for the (B, N) output grid. B is small (10 restarts) so one
+# tile usually covers it; N tiles at 128 keep the X-block (128 × D) plus
+# the Q-block and output comfortably inside VMEM for D ≤ 64.
+# VMEM estimate per block (f32): (TB·D + TN·D + TB·TN) · 4 bytes
+#   = (16·64 + 128·64 + 16·128)·4 ≈ 45 KiB  ≪ 16 MiB VMEM.
+TILE_B = 16
+TILE_N = 128
+
+
+def _matern_bwd_dq_kernel(q_ref, x_ref, ct_ref, params_ref, out_ref):
+    """Backward pass w.r.t. the queries: one (TILE_B, D) tile of
+    dL/dQ = Σ_j ct[b,j] · c(r_bj) · (q_b − x_j),
+    with c(r) = −σ² a²/3 (1 + a r) e^{−a r} (the analytic ∂k/∂q factor).
+
+    Each block sees its query tile, the FULL training slab (N ≤ 512 →
+    ≤160 KiB f64 in VMEM), and its cotangent rows.
+    """
+    q = q_ref[...]  # (TB, D)
+    x = x_ref[...]  # (N, D)
+    ct = ct_ref[...]  # (TB, N)
+    a = SQRT5 / jnp.exp(params_ref[0])
+    sf2 = jnp.exp(params_ref[1])
+
+    qq = jnp.sum(q * q, axis=-1, keepdims=True)
+    xx = jnp.sum(x * x, axis=-1)[None, :]
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=q.dtype
+    )
+    d2 = jnp.maximum(qq - 2.0 * cross + xx, 0.0)
+    ar = a * jnp.sqrt(d2)
+    coeff = _grad_coeff_from_ar(ar, sf2, a)  # (TB, N)
+    w = ct * coeff
+    # dq_b = Σ_j w[b,j] (q_b − x_j) = (Σ_j w[b,j]) q_b − w @ x
+    row_sum = jnp.sum(w, axis=-1, keepdims=True)
+    out_ref[...] = row_sum * q - jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=q.dtype
+    )
+
+
+def _matern_tile_kernel(q_ref, x_ref, params_ref, out_ref):
+    """One (TILE_B, TILE_N) tile of k(Q, X).
+
+    q_ref: (TILE_B, D) queries in VMEM.
+    x_ref: (TILE_N, D) training slab in VMEM.
+    params_ref: (2,) [log_len, log_sf2] in SMEM-like memory.
+    out_ref: (TILE_B, TILE_N) output tile.
+    """
+    q = q_ref[...]
+    x = x_ref[...]
+    a = SQRT5 / jnp.exp(params_ref[0])
+    sf2 = jnp.exp(params_ref[1])
+
+    # ‖q−x‖² = ‖q‖² − 2 q xᵀ + ‖x‖²; the q xᵀ term is the MXU matmul.
+    qq = jnp.sum(q * q, axis=-1, keepdims=True)  # (TB, 1)
+    xx = jnp.sum(x * x, axis=-1)[None, :]  # (1, TN)
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=q.dtype
+    )  # (TB, TN)
+    d2 = jnp.maximum(qq - 2.0 * cross + xx, 0.0)
+    ar = a * jnp.sqrt(d2)
+    out_ref[...] = _matern_from_ar(ar, sf2)
+
+
+def _matern52_cross_fwd_impl(q, x, log_len, log_sf2):
+    b, d = q.shape
+    n = x.shape[0]
+    dtype = q.dtype
+
+    tb = min(TILE_B, max(b, 1))
+    tn = min(TILE_N, max(n, 1))
+    grid = (pl.cdiv(b, tb), pl.cdiv(n, tn))
+
+    params = jnp.stack([jnp.asarray(log_len, dtype), jnp.asarray(log_sf2, dtype)])
+
+    return pl.pallas_call(
+        _matern_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, x, params)
+
+
+def _matern52_dq_impl(q, x, ct, log_len, log_sf2):
+    """Pallas backward kernel: dL/dQ given cotangent ct = dL/dK (B, N)."""
+    b, d = q.shape
+    n = x.shape[0]
+    dtype = q.dtype
+    tb = min(TILE_B, max(b, 1))
+    grid = (pl.cdiv(b, tb),)
+    params = jnp.stack([jnp.asarray(log_len, dtype), jnp.asarray(log_sf2, dtype)])
+    return pl.pallas_call(
+        _matern_bwd_dq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), dtype),
+        interpret=True,
+    )(q, x, ct, params)
+
+
+@jax.custom_vjp
+def matern52_cross(q, x, log_len, log_sf2):
+    """Pallas Matérn-5/2 cross-covariance k(Q, X) → (B, N).
+
+    `pallas_call` defines no autodiff rule, so the VJP is attached
+    analytically: the query-gradient (the artifact's hot backward path)
+    is itself a Pallas kernel; the rarely-used x / hyperparameter
+    cotangents are cheap jnp expressions that XLA fuses.
+    """
+    return _matern52_cross_fwd_impl(q, x, log_len, log_sf2)
+
+
+def _matern52_cross_fwd(q, x, log_len, log_sf2):
+    out = _matern52_cross_fwd_impl(q, x, log_len, log_sf2)
+    return out, (q, x, log_len, log_sf2)
+
+
+def _matern52_cross_bwd(res, ct):
+    q, x, log_len, log_sf2 = res
+    dq = _matern52_dq_impl(q, x, ct, log_len, log_sf2)
+
+    # Cold-path cotangents in plain jnp (exact, fused by XLA).
+    a = SQRT5 / jnp.exp(log_len)
+    sf2 = jnp.exp(log_sf2)
+    diff = q[:, None, :] - x[None, :, :]  # (B, N, D)
+    d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+    r = jnp.sqrt(d2)
+    ar = a * r
+    coeff = _grad_coeff_from_ar(ar, sf2, a)  # ∂k/∂q factor
+    dx = -jnp.einsum("bn,bn,bnd->nd", ct, coeff, diff)
+    # ∂k/∂logℓ = σ² a²/3 · r² (1 + a r) e^{−a r}
+    ar_safe = jnp.minimum(ar, AR_CUTOFF)
+    ear = jnp.exp(-ar_safe)
+    dk_dlog_len = jnp.where(
+        ar > AR_CUTOFF, 0.0, sf2 * (a * a / 3.0) * d2 * (1.0 + ar_safe) * ear
+    )
+    dlog_len = jnp.sum(ct * dk_dlog_len)
+    k = _matern_from_ar(ar, sf2)
+    dlog_sf2 = jnp.sum(ct * k)
+    return dq, dx, dlog_len, dlog_sf2
+
+
+matern52_cross.defvjp(_matern52_cross_fwd, _matern52_cross_bwd)
+
+
+def _gram_tile_kernel(xi_ref, xj_ref, params_ref, out_ref):
+    """One tile of the noisy Gram matrix K(X, X) + σ_n² I.
+
+    The noise is added on the true diagonal only, detected from the
+    global tile coordinates.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    xi = xi_ref[...]
+    xj = xj_ref[...]
+    a = SQRT5 / jnp.exp(params_ref[0])
+    sf2 = jnp.exp(params_ref[1])
+    noise = jnp.exp(params_ref[2])
+
+    qq = jnp.sum(xi * xi, axis=-1, keepdims=True)
+    xx = jnp.sum(xj * xj, axis=-1)[None, :]
+    cross = jax.lax.dot_general(
+        xi, xj, (((1,), (1,)), ((), ())), preferred_element_type=xi.dtype
+    )
+    d2 = jnp.maximum(qq - 2.0 * cross + xx, 0.0)
+    ar = a * jnp.sqrt(d2)
+    k = _matern_from_ar(ar, sf2)
+
+    # Global row/col ids of this tile → diagonal mask.
+    tb, tn = out_ref.shape
+    rows = i * tb + jax.lax.broadcasted_iota(jnp.int32, (tb, tn), 0)
+    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tb, tn), 1)
+    out_ref[...] = k + jnp.where(rows == cols, noise, jnp.zeros_like(k))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matern52_gram(x, log_len, log_sf2, log_noise):
+    """Pallas noisy Gram matrix K + σ_n² I → (N, N) (GP-fit path)."""
+    n, d = x.shape
+    dtype = x.dtype
+    tn = min(TILE_N, max(n, 1))
+    grid = (pl.cdiv(n, tn), pl.cdiv(n, tn))
+    params = jnp.stack(
+        [
+            jnp.asarray(log_len, dtype),
+            jnp.asarray(log_sf2, dtype),
+            jnp.asarray(log_noise, dtype),
+        ]
+    )
+    return pl.pallas_call(
+        _gram_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tn, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), dtype),
+        interpret=True,
+    )(x, x, params)

@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its `ref_*` twin to float tolerance (enforced by
+``python/tests/test_kernels.py`` with hypothesis sweeps over shapes and
+dtypes). The L2 model (``compile.model``) calls the Pallas versions so
+the kernels lower into the AOT artifact; the refs never ship.
+"""
+
+import jax.numpy as jnp
+
+SQRT5 = 2.23606797749979
+
+
+def ref_sqdist(q, x):
+    """Pairwise squared Euclidean distances.
+
+    Args:
+      q: (B, D) query points.
+      x: (N, D) reference points.
+
+    Returns:
+      (B, N) matrix of squared distances.
+    """
+    # Expanded form ‖q‖² − 2 q·x + ‖x‖² (the MXU-friendly formulation the
+    # Pallas kernel uses), clipped at zero against cancellation.
+    qq = jnp.sum(q * q, axis=-1, keepdims=True)  # (B, 1)
+    xx = jnp.sum(x * x, axis=-1)  # (N,)
+    d2 = qq - 2.0 * q @ x.T + xx[None, :]
+    return jnp.maximum(d2, 0.0)
+
+
+def ref_matern52_cross(q, x, log_len, log_sf2):
+    """Matérn-5/2 cross-covariance k(Q, X).
+
+    k(r) = σ_f² (1 + a r + a²r²/3) exp(−a r),  a = √5/ℓ.
+
+    Args:
+      q: (B, D) queries.
+      x: (N, D) training points.
+      log_len, log_sf2: scalar log hyperparameters.
+
+    Returns:
+      (B, N) covariance matrix.
+    """
+    a = SQRT5 / jnp.exp(log_len)
+    sf2 = jnp.exp(log_sf2)
+    r = jnp.sqrt(ref_sqdist(q, x))
+    ar = a * r
+    # Same subnormal cutoff as the Pallas kernel and the Rust engine
+    # (kernels/matern.py AR_CUTOFF): k < 5e-131 becomes an exact zero.
+    ar_safe = jnp.minimum(ar, 300.0)
+    k = sf2 * (1.0 + ar_safe + ar_safe * ar_safe / 3.0) * jnp.exp(-ar_safe)
+    return jnp.where(ar > 300.0, 0.0, k)
+
+
+def ref_matern52_gram(x, log_len, log_sf2, log_noise):
+    """Noisy Matérn-5/2 Gram matrix K + σ_n² I over training points."""
+    k = ref_matern52_cross(x, x, log_len, log_sf2)
+    return k + jnp.exp(log_noise) * jnp.eye(x.shape[0], dtype=x.dtype)

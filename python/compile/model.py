@@ -1,0 +1,322 @@
+"""Layer-2 JAX model: GP posterior + LogEI, batched over restarts.
+
+This is the computation the Rust coordinator executes per L-BFGS-B
+iteration through the AOT artifact. Design decisions that matter:
+
+* **Precomputed solves as inputs.** The artifact takes ``K⁻¹`` of the
+  (real-rows-only, noise-added) kernel matrix and ``alpha = K⁻¹ y``
+  from the Rust side, which factorizes K once per GP fit anyway.
+  Padded rows carry zeros in ``alpha``/``mask`` (and anything in the
+  padded block of ``K⁻¹``), so padding changes nothing (tested in
+  ``tests/test_model.py::test_mask_invariance``).
+* **Batched value-and-grad in one program.** `jax.vmap(jax.value_and_grad)`
+  over the B query rows — the whole point of the paper's batched
+  evaluation — so one PJRT execution returns all B values and B×D
+  gradients with a shared forward pass structure XLA can fuse.
+* **f64.** The Rust L-BFGS-B runs in f64; mixed precision would perturb
+  trajectories (the paper's "modulo floating-point nondeterminism"
+  caveat). We keep the artifact in f64 end to end.
+* The Matérn cross-covariance calls the **Pallas kernel**
+  (``kernels.matern``), so Layer 1 lowers into this same HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matern
+from .kernels.ref import ref_matern52_gram
+
+jax.config.update("jax_enable_x64", True)
+
+LOG_2PI = 1.8378770664093453
+INV_SQRT_2PI = 0.3989422804014327
+SQRT_PI = 1.772453850905516
+SQRT_2 = 1.4142135623730951
+
+
+def log_normal_pdf(z):
+    return -0.5 * z * z - 0.5 * LOG_2PI
+
+
+@jax.custom_vjp
+def erfc_hlo(x):
+    """Machine-precision erfc built ONLY from primitive HLO ops.
+
+    `jax.scipy.special.erfc` lowers to the dedicated `erf` HLO opcode,
+    which the xla_extension 0.5.1 text parser predates — artifacts using
+    it fail to load in the Rust runtime. This mirrors the Rust
+    implementation (rust/src/gp/stats.rs): Maclaurin series for |x| < 2,
+    Lentz continued fraction for x ≥ 2.
+
+    Two compile-time considerations shape the implementation (measured:
+    27.7 s → ~1 s artifact compile on xla_extension 0.5.1, §Perf):
+    * the iterations run as `lax.fori_loop` (one compact While HLO)
+      rather than an unrolled chain of ~128 instruction groups;
+    * the derivative is attached analytically via `custom_vjp`
+      (erfc′(x) = −2/√π e^{−x²}), so autodiff never transposes the
+      loops at all.
+    """
+    return _erfc_fwd_impl(x)
+
+
+def _erfc_fwd_impl(x):
+    ax = jnp.abs(x)
+
+    # --- series branch (|x| < 2): erf(x) = 2/√π Σ (−x²)ⁿ x /(n!(2n+1))
+    xs = jnp.minimum(ax, 2.0)
+    x2 = xs * xs
+
+    def series_body(n, carry):
+        term, acc = carry
+        nf = n.astype(xs.dtype)
+        term = term * (-x2) / nf
+        return term, acc + term / (2.0 * nf + 1.0)
+
+    _, acc = jax.lax.fori_loop(1, 48, series_body, (xs, xs))
+    small = 1.0 - (2.0 / SQRT_PI) * acc
+
+    # --- continued-fraction branch (x ≥ 2):
+    # erfc(x) = e^{−x²}/√π / (x + ½/(x + 1/(x + 3/2/(x + …))))
+    xc = jnp.clip(ax, 2.0, 30.0)
+    tiny = 1e-300
+
+    def cf_body(k, carry):
+        f, c, d = carry
+        a = k.astype(xc.dtype) / 2.0
+        d = xc + a * d
+        d = jnp.where(jnp.abs(d) < tiny, tiny, d)
+        c = xc + a / c
+        c = jnp.where(jnp.abs(c) < tiny, tiny, c)
+        d = 1.0 / d
+        return f * (c * d), c, d
+
+    f, _, _ = jax.lax.fori_loop(1, 48, cf_body, (xc, xc, jnp.zeros_like(xc)))
+    large = jnp.exp(-xc * xc) / (SQRT_PI * f)
+
+    pos = jnp.where(ax < 2.0, small, large)
+    return jnp.where(x < 0.0, 2.0 - pos, pos)
+
+
+def _erfc_fwd(x):
+    return _erfc_fwd_impl(x), x
+
+
+def _erfc_bwd(x, ct):
+    # erfc′(x) = −2/√π · e^{−x²}; clamp the exponent so the unselected-
+    # branch rule (inf·0) can never produce NaN for extreme inputs.
+    x2 = jnp.minimum(x * x, 700.0)
+    return (ct * (-2.0 / SQRT_PI) * jnp.exp(-x2),)
+
+
+erfc_hlo.defvjp(_erfc_fwd, _erfc_bwd)
+
+
+def log_h(z):
+    """Stable log h(z), h(z) = φ(z) + z·Φ(z) (Ament et al. 2023).
+
+    Mirrors the Rust implementation (rust/src/gp/stats.rs): direct
+    formula for z > −1, Mills-ratio form in the mid tail, asymptotic
+    series in the deep tail (z < −8). Uses [`erfc_hlo`] so the lowered
+    artifact contains no `erf` opcode.
+    """
+    # Large-z region (z > 8): Φ(z) = 1 − O(1e-16), φ(z) ≤ 5e-15, so
+    # h(z) = z to machine precision.
+    big = jnp.log(jnp.maximum(z, 1e-300))
+
+    # Direct region (−1 < z ≤ 8); input clamped so the unselected branch
+    # stays finite for extreme z.
+    zd = jnp.clip(z, -2.0, 8.5)
+    phi = INV_SQRT_2PI * jnp.exp(-0.5 * zd * zd)
+    cdf = 0.5 * erfc_hlo(-zd / SQRT_2)
+    direct = jnp.where(
+        z > 8.0, big, jnp.log(jnp.maximum(phi + zd * cdf, 1e-300))
+    )
+
+    # Mid tail (−30 < z ≤ −1): h = φ(z)(1 + z t), t = Φ/φ. Both Φ and φ
+    # stay ≥ ~1e-200 down to z = −30, so the ratio is exact — but it
+    # must be formed in the LOG domain: the naive quotient's vjp divides
+    # by φ², which underflows past |z| ≈ 26.6 and turns the (zeroed-out,
+    # but still computed) branch gradient into inf·0 = NaN.
+    zm = jnp.clip(z, -30.5, -1.0)
+    t = jnp.exp(
+        jnp.log(jnp.maximum(0.5 * erfc_hlo(-zm / SQRT_2), 1e-300))
+        - log_normal_pdf(zm)
+    )
+    one_plus_zt = 1.0 + zm * t
+    mid = log_normal_pdf(zm) + jnp.log(jnp.maximum(one_plus_zt, 1e-300))
+
+    # Deep tail (z ≤ −30): h(z) ≈ φ(z)/z² (1 − 3/z² + 15/z⁴); series
+    # error ≤ 105/z⁶ ≈ 1.4e-7 at the switch point.
+    z_safe = jnp.minimum(z, -1.0)
+    iz2 = 1.0 / (z_safe * z_safe)
+    deep = (
+        log_normal_pdf(z)
+        - 2.0 * jnp.log(-z_safe)
+        + jnp.log(jnp.maximum(1.0 - 3.0 * iz2 + 15.0 * iz2 * iz2, 1e-300))
+    )
+
+    return jnp.where(z > -1.0, direct, jnp.where(z > -30.0, mid, deep))
+
+
+def posterior_batch(q_batch, x_train, mask, k_inv, alpha, log_len, log_sf2):
+    """GP posterior (μ, σ²) at B query points in one shot.
+
+    ONE Pallas cross-covariance call for the whole batch (B, N_pad) —
+    this is the paper's batched evaluation — followed by pure GEMMs:
+    `μ = K* α`, `σ² = σ_f² − rowsum((K* K⁻¹) ∘ K*)`.
+
+    The precomputed `K⁻¹` comes from the Rust side (which factorizes K
+    once per GP fit anyway). A triangular solve against L would be the
+    textbook form, but CPU-jax lowers `solve_triangular` to a LAPACK
+    typed-FFI custom call that xla_extension 0.5.1 cannot compile — and
+    on TPU the GEMM form is what you want regardless (MXU, not a
+    sequential substitution).
+    """
+    kstar = matern.matern52_cross(q_batch, x_train, log_len, log_sf2)
+    kstar = kstar * mask[None, :]  # padded rows contribute nothing
+    mean = kstar @ alpha  # (B,)
+    v = kstar @ k_inv  # (B, N_pad)
+    var = jnp.exp(log_sf2) - jnp.sum(v * kstar, axis=1)
+    return mean, jnp.maximum(var, 1e-18)
+
+
+def neg_logei_batch(q_batch, x_train, mask, k_inv, alpha, params):
+    """−LogEI at B queries; params = [log_len, log_sf2, log_noise, f_best]."""
+    log_len, log_sf2, f_best = params[0], params[1], params[3]
+    mean, var = posterior_batch(
+        q_batch, x_train, mask, k_inv, alpha, log_len, log_sf2
+    )
+    sigma = jnp.sqrt(var)
+    z = (f_best - mean) / sigma
+    return -(jnp.log(sigma) + log_h(z))
+
+
+def acq_value_and_grad(q_batch, x_train, mask, k_inv, alpha, params):
+    """Batched (−LogEI, ∇) over B queries — THE artifact entry point.
+
+    The per-restart gradients come from ONE backward pass through the
+    *sum* of the batch values: since restart b's value depends only on
+    row b of `q_batch` (eq. 1's additive separability), the gradient of
+    the sum w.r.t. `q_batch` has exactly the per-restart gradients as
+    rows. This is the same algebraic fact C-BE exploits — used here
+    purely for evaluation batching, with the QN updates decoupled on the
+    Rust side (the paper's D-BE split).
+
+    Returns (vals (B,), grads (B, D)).
+    """
+
+    def summed(q):
+        vals = neg_logei_batch(q, x_train, mask, k_inv, alpha, params)
+        return jnp.sum(vals), vals
+
+    (_, vals), grads = jax.value_and_grad(summed, has_aux=True)(q_batch)
+    return vals, grads
+
+
+def cholesky_hlo(a):
+    """In-graph right-looking Cholesky via `lax.fori_loop` — plain While
+    HLO, because `jnp.linalg.cholesky` lowers to a LAPACK FFI custom
+    call on CPU that the 0.5.1 runtime cannot compile. O(n) loop steps
+    of O(n²) vector work, used only on the (cold) GP-fit path."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, m):
+        dkk = jnp.sqrt(jnp.maximum(m[k, k], 1e-300))
+        col = jnp.where(idx > k, m[:, k] / dkk, 0.0)
+        m = m - col[:, None] * col[None, :]
+        m = m.at[:, k].set(jnp.where(idx > k, col, m[:, k]))
+        m = m.at[k, k].set(dkk)
+        return m
+
+    m = jax.lax.fori_loop(0, n, body, a)
+    # Zero the strict upper triangle (left dirty by the updates).
+    return jnp.where(idx[:, None] >= idx[None, :], m, 0.0)
+
+
+def solve_lower_hlo(l, b):
+    """Forward substitution `L y = b` via fori_loop (While HLO)."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(i, y):
+        s = jnp.sum(jnp.where(idx < i, l[i, :] * y, 0.0))
+        return y.at[i].set((b[i] - s) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def solve_lower_t_hlo(l, y):
+    """Back substitution `Lᵀ x = y` via fori_loop."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, x):
+        i = n - 1 - k
+        s = jnp.sum(jnp.where(idx > i, l[:, i] * x, 0.0))
+        return x.at[i].set((y[i] - s) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+def mll_value_and_grad(theta, x_train, mask, y_std):
+    """GP marginal log likelihood and ∂/∂θ — the GP-fit artifact.
+
+    theta = [log_len, log_sf2, log_noise]. Padded rows are excluded by
+    giving them unit diagonal/zero off-diagonal in the masked Gram
+    matrix and zero targets, which contributes a constant to the MLL.
+
+    Returns (mll, grad(3,)).
+    """
+
+    def mll(t):
+        n_pad = x_train.shape[0]
+        k = ref_matern52_gram(x_train, t[0], t[1], t[2])
+        mm = mask[:, None] * mask[None, :]
+        eye = jnp.eye(n_pad, dtype=x_train.dtype)
+        k = k * mm + (1.0 - mask)[:, None] * eye * (1.0 - mask)[None, :]
+        # In-graph Cholesky + substitutions (no LAPACK custom calls).
+        lfac = cholesky_hlo(k)
+        ym = y_std * mask
+        a = solve_lower_t_hlo(lfac, solve_lower_hlo(lfac, ym))
+        n_real = jnp.sum(mask)
+        logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(lfac)) * mask)
+        return (
+            -0.5 * jnp.dot(ym, a)
+            - 0.5 * logdet
+            - 0.5 * n_real * LOG_2PI
+        )
+
+    return jax.value_and_grad(mll)(theta)
+
+
+def make_acq_fn(n_pad, batch, dim):
+    """Shape-specialized acquisition function for AOT lowering."""
+
+    def fn(q_batch, x_train, mask, k_inv, alpha, params):
+        return acq_value_and_grad(q_batch, x_train, mask, k_inv, alpha, params)
+
+    specs = (
+        jax.ShapeDtypeStruct((batch, dim), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad, dim), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float64),
+        jax.ShapeDtypeStruct((4,), jnp.float64),
+    )
+    return fn, specs
+
+
+def make_mll_fn(n_pad, dim):
+    """Shape-specialized MLL function for AOT lowering."""
+
+    def fn(theta, x_train, mask, y_std):
+        return mll_value_and_grad(theta, x_train, mask, y_std)
+
+    specs = (
+        jax.ShapeDtypeStruct((3,), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad, dim), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float64),
+        jax.ShapeDtypeStruct((n_pad,), jnp.float64),
+    )
+    return fn, specs

@@ -1,0 +1,31 @@
+use dbe_bo::batcheval::{BatchAcqEvaluator, NativeGpEvaluator};
+use dbe_bo::gp::{GpParams, GpRegressor};
+use dbe_bo::rng::Pcg64;
+use dbe_bo::runtime::{Manifest, PjrtEvaluator, PjrtRuntime};
+use std::path::Path;
+
+fn main() {
+    let (n, d, seed) = (30usize, 2usize, 2u64);
+    let mut rng = Pcg64::seeded(seed);
+    let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+    let y: Vec<f64> = x.iter().map(|p| {
+        let s: f64 = p.iter().map(|v| (v - 0.4).powi(2)).sum();
+        s + 0.05 * (7.0 * p[0]).sin()
+    }).collect();
+    let gp = GpRegressor::fit(x, &y, GpParams::default()).unwrap();
+    println!("params: len={} sf2={} noise={}", gp.params.lengthscale(), gp.params.signal_var(), gp.params.noise_var());
+    let native = NativeGpEvaluator::new(&gp);
+    let manifest = Manifest::load(Path::new("artifacts")).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let pjrt = PjrtEvaluator::from_gp(&runtime, &manifest, &gp).unwrap();
+    let mut rng = Pcg64::seeded(100 + seed);
+    let qs: Vec<Vec<f64>> = (0..10).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+    let (nv, _) = native.eval_batch(&qs).unwrap();
+    let (pv, _) = pjrt.eval_batch(&qs).unwrap();
+    for i in 0..10 {
+        let p = gp.posterior(&qs[i]);
+        let sigma = p.var.sqrt();
+        let z = (gp.best_y_std() - p.mean) / sigma;
+        println!("q{i}: native={:.6} pjrt={:.6} | mu={:.6e} var={:.6e} z={:.3}", nv[i], pv[i], p.mean, p.var, z);
+    }
+}

@@ -1,0 +1,11 @@
+"""Tiny scipy-free normal pdf/cdf for test oracles (scipy may be absent)."""
+
+import math
+
+
+def norm_pdf(z: float) -> float:
+    return math.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+
+
+def norm_cdf(z: float) -> float:
+    return 0.5 * math.erfc(-z / math.sqrt(2.0))

@@ -1,0 +1,60 @@
+"""AOT lowering sanity: HLO text parses structurally and the manifest is
+consistent. (Full load-and-execute parity with Rust lives in
+rust/tests/pjrt_parity.rs.)"""
+
+import os
+import tempfile
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot  # noqa: E402
+
+
+def test_acq_lowering_produces_hlo_text():
+    text = aot.lower_acq(dim=2, n_pad=8, batch=3)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # f64 end to end.
+    assert "f64" in text
+    # Batched output: (3,) values and (3, 2) grads.
+    assert "f64[3]" in text
+    assert "f64[3,2]" in text
+
+
+def test_mll_lowering_produces_hlo_text():
+    text = aot.lower_mll(dim=2, n_pad=8)
+    assert "HloModule" in text
+    assert "f64[3]" in text  # gradient w.r.t. 3 hyperparameters
+
+
+def test_build_writes_manifest_and_is_incremental():
+    with tempfile.TemporaryDirectory() as tmp:
+        manifest = aot.build(tmp, dims=[2], buckets=[8], batch=3)
+        assert len(manifest) == 2  # acq + mll
+        files = set(os.listdir(tmp))
+        assert "manifest.txt" in files
+        assert "acq_d2_n8_b3.hlo.txt" in files
+        assert "mll_d2_n8.hlo.txt" in files
+        # Incremental: second build must not rewrite (compare mtimes).
+        paths = [os.path.join(tmp, f) for f in files]
+        mtimes = {p: os.path.getmtime(p) for p in paths if not p.endswith("manifest.txt")}
+        aot.build(tmp, dims=[2], buckets=[8], batch=3)
+        for p, t in mtimes.items():
+            assert os.path.getmtime(p) == t, f"{p} was rewritten"
+
+
+def test_manifest_format():
+    with tempfile.TemporaryDirectory() as tmp:
+        aot.build(tmp, dims=[2], buckets=[8], batch=3)
+        with open(os.path.join(tmp, "manifest.txt")) as f:
+            lines = [l.strip() for l in f if l.strip() and not l.startswith("#")]
+        assert len(lines) == 2
+        kinds = set()
+        for line in lines:
+            kind, dim, n_pad, batch, fname = line.split()
+            kinds.add(kind)
+            assert int(dim) == 2 and int(n_pad) == 8
+            assert os.path.exists(os.path.join(tmp, fname))
+        assert kinds == {"acq", "mll"}

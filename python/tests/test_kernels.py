@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, and hyperparameters; every case must
+match `ref.py` to dtype-appropriate tolerance. This is the CORE
+correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import matern, ref  # noqa: E402
+
+
+def _points(rng, n, d, dtype):
+    return jnp.asarray(rng.uniform(-2.0, 2.0, size=(n, d)), dtype=dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    n=st.integers(1, 70),
+    d=st.integers(1, 9),
+    log_len=st.floats(-1.5, 1.5),
+    log_sf2=st.floats(-1.0, 1.0),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+)
+def test_matern_cross_matches_ref(b, n, d, log_len, log_sf2, seed, dtype):
+    rng = np.random.default_rng(seed)
+    q = _points(rng, b, d, dtype)
+    x = _points(rng, n, d, dtype)
+    got = matern.matern52_cross(q, x, log_len, log_sf2)
+    want = ref.ref_matern52_cross(q, x, log_len, log_sf2)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    assert got.shape == (b, n)
+    assert got.dtype == dtype
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 50),
+    d=st.integers(1, 6),
+    log_len=st.floats(-1.0, 1.0),
+    log_noise=st.floats(-8.0, -1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_matches_ref(n, d, log_len, log_noise, seed):
+    rng = np.random.default_rng(seed)
+    x = _points(rng, n, d, jnp.float64)
+    got = matern.matern52_gram(x, log_len, 0.3, log_noise)
+    want = ref.ref_matern52_gram(x, log_len, 0.3, log_noise)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_cross_shapes_beyond_one_tile():
+    """Exercise the multi-tile grid path (n > TILE_N, b > TILE_B)."""
+    rng = np.random.default_rng(0)
+    q = _points(rng, matern.TILE_B + 5, 3, jnp.float64)
+    x = _points(rng, matern.TILE_N + 37, 3, jnp.float64)
+    got = matern.matern52_cross(q, x, 0.1, 0.2)
+    want = ref.ref_matern52_cross(q, x, 0.1, 0.2)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_cross_diag_equals_signal_variance():
+    rng = np.random.default_rng(1)
+    x = _points(rng, 8, 4, jnp.float64)
+    k = matern.matern52_cross(x, x, -0.3, 0.7)
+    np.testing.assert_allclose(np.diag(k), np.exp(0.7), rtol=1e-12)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(2)
+    x = _points(rng, 24, 3, jnp.float64)
+    k = np.asarray(matern.matern52_gram(x, 0.0, 0.0, -4.0))
+    np.testing.assert_allclose(k, k.T, rtol=1e-12)
+    evals = np.linalg.eigvalsh(k)
+    assert evals.min() > 0, f"min eig {evals.min()}"
+
+
+def test_zero_distance_smoothness():
+    """Identical q and x rows: no NaN from sqrt(0) in the gradient path."""
+    x = jnp.zeros((3, 2), dtype=jnp.float64)
+    g = jax.grad(lambda q: matern.matern52_cross(q, x, 0.0, 0.0).sum())(
+        jnp.zeros((2, 2), dtype=jnp.float64)
+    )
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("b,n", [(1, 1), (1, 130), (17, 1), (10, 256)])
+def test_edge_shapes(b, n):
+    rng = np.random.default_rng(3)
+    q = _points(rng, b, 5, jnp.float64)
+    x = _points(rng, n, 5, jnp.float64)
+    got = matern.matern52_cross(q, x, 0.0, 0.0)
+    want = ref.ref_matern52_cross(q, x, 0.0, 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)

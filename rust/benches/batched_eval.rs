@@ -1,0 +1,62 @@
+//! Bench: batched acquisition evaluation throughput — the paper's §4
+//! cost model `O(B(n² + nD))` for evaluations vs `O(BmD)` for updates.
+//!
+//! Sweeps batch size B and training-set size n over the native GP
+//! oracle, and (when artifacts exist) the PJRT artifact, printing
+//! points/second. This quantifies WHY batching evaluations pays:
+//! per-point cost drops as B grows.
+
+use dbe_bo::batcheval::{BatchAcqEvaluator, NativeGpEvaluator};
+use dbe_bo::benchx::Bencher;
+use dbe_bo::gp::{GpParams, GpRegressor};
+use dbe_bo::rng::Pcg64;
+
+fn fitted_gp(n: usize, d: usize) -> GpRegressor {
+    let mut rng = Pcg64::seeded(1);
+    let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+    let y: Vec<f64> = x.iter().map(|p| p.iter().map(|v| (v - 0.4).powi(2)).sum()).collect();
+    GpRegressor::with_params(x, &y, GpParams::default()).unwrap()
+}
+
+fn main() {
+    let d = 5;
+    println!("# batched_eval — native GP oracle, D={d}");
+    let mut b = Bencher::new(3, 15);
+    for &n in &[32usize, 64, 128, 256] {
+        let gp = fitted_gp(n, d);
+        let ev = NativeGpEvaluator::new(&gp);
+        let mut rng = Pcg64::seeded(9);
+        for &batch in &[1usize, 2, 5, 10] {
+            let qs: Vec<Vec<f64>> = (0..batch).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+            let stats =
+                b.bench(&format!("native n={n:<4} B={batch:<3}"), || ev.eval_batch(&qs).unwrap());
+            let pps = batch as f64 / stats.median_secs();
+            println!("    -> {pps:.0} points/s");
+        }
+    }
+
+    // PJRT path (optional).
+    if let Ok(manifest) = dbe_bo::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        let runtime = dbe_bo::runtime::PjrtRuntime::cpu().unwrap();
+        println!("\n# batched_eval — PJRT artifact oracle, D={d}");
+        for &n in &[32usize, 64, 128] {
+            let gp = fitted_gp(n, d);
+            match dbe_bo::runtime::PjrtEvaluator::from_gp(&runtime, &manifest, &gp) {
+                Ok(ev) => {
+                    let mut rng = Pcg64::seeded(9);
+                    for &batch in &[1usize, 10] {
+                        let qs: Vec<Vec<f64>> =
+                            (0..batch).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+                        let stats = b.bench(&format!("pjrt   n={n:<4} B={batch:<3}"), || {
+                            ev.eval_batch(&qs).unwrap()
+                        });
+                        println!("    -> {:.0} points/s", batch as f64 / stats.median_secs());
+                    }
+                }
+                Err(e) => println!("  (skipped n={n}: {e})"),
+            }
+        }
+    } else {
+        println!("\n(pjrt sweep skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: one full acquisition-optimization call (the paper's §5 inner
+//! loop) under each MSO strategy, across training-set sizes — the
+//! headline wall-clock comparison of Table 1's Runtime column,
+//! isolated from the BO loop.
+
+use dbe_bo::batcheval::NativeGpEvaluator;
+use dbe_bo::benchx::Bencher;
+use dbe_bo::gp::{GpParams, GpRegressor};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use dbe_bo::rng::Pcg64;
+
+fn main() {
+    let d = 5;
+    let b_restarts = 10;
+    let mut bench = Bencher::new(2, 9);
+
+    println!("# mso_strategies — one LogEI maximization, D={d}, B={b_restarts}, m=10, pgtol=1e-2");
+    for &n in &[32usize, 64, 128, 256] {
+        let mut rng = Pcg64::seeded(4);
+        let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| p.iter().map(|v| (v - 0.35).powi(2)).sum::<f64>() + 0.1 * (9.0 * p[0]).sin())
+            .collect();
+        let gp = GpRegressor::with_params(x, &y, GpParams::default()).unwrap();
+        let ev = NativeGpEvaluator::new(&gp);
+        let x0s: Vec<Vec<f64>> =
+            (0..b_restarts).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+        let cfg = MsoConfig {
+            bounds: vec![(0.0, 1.0); d],
+            lbfgsb: LbfgsbOptions {
+                memory: 10,
+                pgtol: 1e-2,
+                ftol: 0.0,
+                max_iters: 200,
+                max_evals: 50_000,
+            },
+        };
+
+        let mut row = Vec::new();
+        for strat in MsoStrategy::all() {
+            let stats = bench.bench(&format!("{:<9} n={n:<4}", strat.name()), || {
+                run_mso(strat, &ev, &x0s, &cfg).unwrap()
+            });
+            row.push((strat, stats.median_secs()));
+        }
+        let seq = row[0].1;
+        println!(
+            "    -> speedup vs SEQ: C-BE {:.2}x, D-BE {:.2}x (paper: D-BE up to 1.5-1.76x)",
+            seq / row[1].1,
+            seq / row[2].1
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench: fast rendition of Table 1 (BO on Rastrigin) — whole-study
+//! end-to-end wall clock per strategy. `cargo bench` keeps this small
+//! (20 trials × 2 seeds × D=5); the full protocol lives behind
+//! `dbe-bo repro table1 [--paper]`.
+
+use dbe_bo::config::BenchProtocol;
+use dbe_bo::repro::table_bench;
+
+fn main() {
+    let protocol = BenchProtocol {
+        objectives: vec!["rastrigin".into()],
+        dims: vec![5],
+        trials: 20,
+        seeds: 2,
+        out_dir: "results".into(),
+        ..BenchProtocol::default()
+    };
+    let results = table_bench::run(&protocol, &["rastrigin".to_string()]).unwrap();
+    table_bench::report("Table 1 (bench-fast)", &protocol, &results).unwrap();
+}

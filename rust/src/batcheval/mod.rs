@@ -1,0 +1,105 @@
+//! Batched objective evaluation — the interface between the MSO engine
+//! (L3 hot loop) and whatever computes acquisition values: the native
+//! Rust GP ([`native`]), the AOT-compiled PJRT artifact
+//! (`runtime::PjrtEvaluator`), or a synthetic test function
+//! ([`synthetic`]).
+//!
+//! Everything is phrased as **minimization**: acquisition maximization
+//! is handled by evaluating `−LogEI` (and its gradient).
+
+pub mod native;
+pub mod synthetic;
+
+pub use native::NativeGpEvaluator;
+pub use synthetic::SyntheticEvaluator;
+
+use crate::Result;
+
+/// A batched value+gradient oracle.
+///
+/// `eval_batch` is THE hot call of the whole system: one invocation per
+/// outer QN iteration in D-BE/C-BE (B points), one per iteration per
+/// restart in SEQ. OPT. (1 point). Implementations should amortize all
+/// per-batch work (e.g. a single GEMM against the GP training set, or a
+/// single PJRT execution).
+///
+/// No `Send`/`Sync` supertrait: the PJRT executable handles are
+/// `Rc`-based and thread-bound, and the MSO engine is single-threaded
+/// by design. The coordinator requires `+ Send` explicitly where it
+/// moves an evaluator onto a worker thread.
+pub trait BatchAcqEvaluator {
+    /// Input dimension D.
+    fn dim(&self) -> usize;
+
+    /// Evaluate the objective and gradient at each of the given points.
+    ///
+    /// Returns `(values, gradients)` with `values.len() == xs.len()` and
+    /// `gradients[i].len() == dim()`.
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)>;
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &str {
+        "evaluator"
+    }
+}
+
+/// Counts batch calls and total points through an inner evaluator —
+/// used by tests and by the paper-table harness to report evaluation
+/// statistics.
+pub struct CountingEvaluator<E> {
+    inner: E,
+    batches: std::sync::atomic::AtomicUsize,
+    points: std::sync::atomic::AtomicUsize,
+}
+
+impl<E: BatchAcqEvaluator> CountingEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        CountingEvaluator {
+            inner,
+            batches: std::sync::atomic::AtomicUsize::new(0),
+            points: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.batches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.points.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<E: BatchAcqEvaluator> BatchAcqEvaluator for CountingEvaluator<E> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        self.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.points.fetch_add(xs.len(), std::sync::atomic::Ordering::Relaxed);
+        self.inner.eval_batch(xs)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bbob::Rosenbrock;
+
+    #[test]
+    fn counting_wrapper_counts() {
+        let ev = CountingEvaluator::new(SyntheticEvaluator::new(Box::new(Rosenbrock::new(3))));
+        let xs = vec![vec![1.0; 3], vec![2.0; 3]];
+        let (v, g) = ev.eval_batch(&xs).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(g[0].len(), 3);
+        let _ = ev.eval_batch(&xs[..1].to_vec()).unwrap();
+        assert_eq!(ev.n_batches(), 2);
+        assert_eq!(ev.n_points(), 3);
+    }
+}

@@ -1,0 +1,80 @@
+//! Native-Rust batched acquisition evaluator: GP posterior + LogEI with
+//! no PJRT dependency. This is the oracle used by `cargo test`, the
+//! quickstart example, and as the correctness reference for the AOT
+//! artifact path.
+
+use super::BatchAcqEvaluator;
+use crate::gp::{GpRegressor, LogEi};
+use crate::Result;
+
+/// Evaluates `−LogEI` (and gradient) over a fitted GP.
+pub struct NativeGpEvaluator<'a> {
+    acq: LogEi<'a>,
+    dim: usize,
+}
+
+impl<'a> NativeGpEvaluator<'a> {
+    pub fn new(gp: &'a GpRegressor) -> Self {
+        let dim = gp.train_x()[0].len();
+        NativeGpEvaluator { acq: LogEi::new(gp), dim }
+    }
+
+    pub fn acquisition(&self) -> &LogEi<'a> {
+        &self.acq
+    }
+}
+
+impl<'a> BatchAcqEvaluator for NativeGpEvaluator<'a> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        Ok(self.acq.eval_batch(xs))
+    }
+
+    fn name(&self) -> &str {
+        "native-gp-logei"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::GpParams;
+    use crate::optim::lbfgsb::LbfgsbOptions;
+    use crate::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn mso_over_native_gp_finds_high_acquisition_point() {
+        // Fit a GP on a quadratic bowl; the acquisition optimum should
+        // beat every random probe by a clear margin.
+        let mut rng = Pcg64::seeded(7);
+        let x: Vec<Vec<f64>> = (0..20).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let y: Vec<f64> =
+            x.iter().map(|p| (p[0] - 0.4).powi(2) + (p[1] - 0.6).powi(2)).collect();
+        let gp = GpRegressor::fit(x, &y, GpParams::default()).unwrap();
+        let ev = NativeGpEvaluator::new(&gp);
+
+        let x0s: Vec<Vec<f64>> = (0..5).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let cfg = MsoConfig {
+            bounds: vec![(0.0, 1.0); 2],
+            lbfgsb: LbfgsbOptions { pgtol: 1e-6, ..Default::default() },
+        };
+        let res = run_mso(MsoStrategy::Dbe, &ev, &x0s, &cfg).unwrap();
+
+        let best_random = (0..200)
+            .map(|_| {
+                let q = rng.uniform_vec(2, 0.0, 1.0);
+                ev.eval_batch(std::slice::from_ref(&q)).unwrap().0[0]
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            res.best_f <= best_random + 1e-9,
+            "MSO {} worse than random {}",
+            res.best_f,
+            best_random
+        );
+    }
+}

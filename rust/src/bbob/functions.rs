@@ -1,0 +1,511 @@
+//! The BBOB functions used by the paper, plus Rosenbrock.
+
+use super::transforms::*;
+use super::Objective;
+use crate::linalg::Matrix;
+
+/// Shared BBOB instance data: optimum location/value and rotations.
+#[derive(Clone)]
+pub struct BbobFn {
+    pub dim: usize,
+    pub x_opt: Vec<f64>,
+    pub f_opt: f64,
+    pub r: Matrix,
+    pub q: Matrix,
+}
+
+impl BbobFn {
+    fn new(dim: usize, seed: u64) -> Self {
+        BbobFn {
+            dim,
+            x_opt: draw_x_opt(dim, seed),
+            f_opt: draw_f_opt(seed),
+            r: rotation_matrix(dim, seed.wrapping_mul(2654435761).wrapping_add(1)),
+            q: rotation_matrix(dim, seed.wrapping_mul(2654435761).wrapping_add(2)),
+        }
+    }
+
+    fn shift(&self, x: &[f64]) -> Vec<f64> {
+        x.iter().zip(&self.x_opt).map(|(a, b)| a - b).collect()
+    }
+}
+
+const BBOB_BOUNDS: (f64, f64) = (-5.0, 5.0);
+
+macro_rules! bbob_boilerplate {
+    () => {
+        fn dim(&self) -> usize {
+            self.inst.dim
+        }
+        fn bounds(&self) -> Vec<(f64, f64)> {
+            vec![BBOB_BOUNDS; self.inst.dim]
+        }
+        fn f_opt(&self) -> Option<f64> {
+            Some(self.inst.f_opt)
+        }
+    };
+}
+
+// ---------------------------------------------------------------- Sphere (f1)
+
+/// BBOB f1: `‖x − x_opt‖² + f_opt`. Separable, unimodal.
+pub struct Sphere {
+    inst: BbobFn,
+}
+
+impl Sphere {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        Sphere { inst: BbobFn::new(dim, seed) }
+    }
+}
+
+impl Objective for Sphere {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "sphere"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let z = self.inst.shift(x);
+        z.iter().map(|v| v * v).sum::<f64>() + self.inst.f_opt
+    }
+
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        self.inst.shift(x).iter().map(|v| 2.0 * v).collect()
+    }
+}
+
+// ----------------------------------------------------------- Ellipsoidal (f2)
+
+/// BBOB f2: `Σ 10^{6i/(D−1)} z_i²`, `z = T_osz(x − x_opt)`. Ill-conditioned.
+pub struct Ellipsoidal {
+    inst: BbobFn,
+    weights: Vec<f64>,
+}
+
+impl Ellipsoidal {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        let weights = (0..dim)
+            .map(|i| {
+                if dim == 1 {
+                    1.0
+                } else {
+                    1e6f64.powf(i as f64 / (dim - 1) as f64)
+                }
+            })
+            .collect();
+        Ellipsoidal { inst: BbobFn::new(dim, seed), weights }
+    }
+}
+
+impl Objective for Ellipsoidal {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "ellipsoidal"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let z = t_osz(&self.inst.shift(x));
+        z.iter().zip(&self.weights).map(|(v, w)| w * v * v).sum::<f64>() + self.inst.f_opt
+    }
+}
+
+// ------------------------------------------------------ Attractive Sector (f6)
+
+/// BBOB f6: highly asymmetric unimodal function; a narrow "sector"
+/// pointing at the optimum is 10⁴ times flatter than the rest.
+pub struct AttractiveSector {
+    inst: BbobFn,
+    /// Q Λ^10 R, precomputed.
+    m: Matrix,
+}
+
+impl AttractiveSector {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        let inst = BbobFn::new(dim, seed);
+        let lam = lambda_alpha(10.0, dim);
+        // m = Q * diag(lam) * R
+        let mut lr = inst.r.clone();
+        for i in 0..dim {
+            for j in 0..dim {
+                lr[(i, j)] *= lam[i];
+            }
+        }
+        let m = inst.q.matmul(&lr);
+        AttractiveSector { inst, m }
+    }
+}
+
+impl Objective for AttractiveSector {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "attractive_sector"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let z = self.m.matvec(&self.inst.shift(x));
+        let s: f64 = z
+            .iter()
+            .zip(&self.inst.x_opt)
+            .map(|(&zi, &xo)| {
+                let si = if zi * xo > 0.0 { 100.0 } else { 1.0 };
+                (si * zi).powi(2)
+            })
+            .sum();
+        super::transforms::t_osz_scalar(s).powf(0.9) + self.inst.f_opt
+    }
+}
+
+// ----------------------------------------------------- Step Ellipsoidal (f7)
+
+/// BBOB f7: plateaus everywhere — gradients are zero except between
+/// steps, stressing the GP model rather than the local optimizer.
+pub struct StepEllipsoidal {
+    inst: BbobFn,
+    weights: Vec<f64>,
+}
+
+impl StepEllipsoidal {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        let weights = (0..dim)
+            .map(|i| {
+                if dim == 1 {
+                    1.0
+                } else {
+                    1e2f64.powf(i as f64 / (dim - 1) as f64)
+                }
+            })
+            .collect();
+        StepEllipsoidal { inst: BbobFn::new(dim, seed), weights }
+    }
+}
+
+impl Objective for StepEllipsoidal {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "step_ellipsoidal"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let lam = lambda_alpha(10.0, self.inst.dim);
+        let mut zhat = self.inst.r.matvec(&self.inst.shift(x));
+        for (zi, li) in zhat.iter_mut().zip(&lam) {
+            *zi *= li;
+        }
+        let z1_abs = zhat.first().map(|v| v.abs()).unwrap_or(0.0);
+        let ztilde: Vec<f64> = zhat
+            .iter()
+            .map(|&v| {
+                if v.abs() > 0.5 {
+                    (0.5 + v).floor()
+                } else {
+                    (0.5 + 10.0 * v).floor() / 10.0
+                }
+            })
+            .collect();
+        let z = self.inst.q.matvec(&ztilde);
+        let s: f64 = z.iter().zip(&self.weights).map(|(v, w)| w * v * v).sum();
+        0.1 * (z1_abs / 1e4).max(s) + boundary_penalty(x) + self.inst.f_opt
+    }
+}
+
+// ------------------------------------------------------------ Rastrigin (f15)
+
+/// BBOB f15 (rotated Rastrigin): ~10^D local optima on a spherical
+/// global trend — the paper's headline Table 1 objective.
+pub struct Rastrigin {
+    inst: BbobFn,
+    /// R Λ^10 Q, precomputed.
+    m: Matrix,
+}
+
+impl Rastrigin {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        let inst = BbobFn::new(dim, seed);
+        let lam = lambda_alpha(10.0, dim);
+        let mut lq = inst.q.clone();
+        for i in 0..dim {
+            for j in 0..dim {
+                lq[(i, j)] *= lam[i];
+            }
+        }
+        let m = inst.r.matmul(&lq);
+        Rastrigin { inst, m }
+    }
+}
+
+impl Objective for Rastrigin {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "rastrigin"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let d = self.inst.dim as f64;
+        let inner = t_asy(&t_osz(&self.inst.r.matvec(&self.inst.shift(x))), 0.2);
+        let z = self.m.matvec(&inner);
+        let cos_sum: f64 = z.iter().map(|v| (2.0 * std::f64::consts::PI * v).cos()).sum();
+        let norm_sq: f64 = z.iter().map(|v| v * v).sum();
+        10.0 * (d - cos_sum) + norm_sq + self.inst.f_opt
+    }
+}
+
+// ------------------------------------------------------------ Bent Cigar (f12)
+
+/// BBOB f12: `z₁² + 10⁶ Σ_{i>1} z_i²`, `z = R T_asy^{0.5}(R(x − x_opt))`.
+/// A single smooth dominant direction — stresses step-length adaptation.
+pub struct BentCigar {
+    inst: BbobFn,
+}
+
+impl BentCigar {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        BentCigar { inst: BbobFn::new(dim, seed) }
+    }
+}
+
+impl Objective for BentCigar {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "bent_cigar"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let inner = t_asy(&self.inst.r.matvec(&self.inst.shift(x)), 0.5);
+        let z = self.inst.r.matvec(&inner);
+        let mut s = z[0] * z[0];
+        for zi in &z[1..] {
+            s += 1e6 * zi * zi;
+        }
+        s + self.inst.f_opt
+    }
+}
+
+// ------------------------------------------------------ Different Powers (f14)
+
+/// BBOB f14: `√(Σ |z_i|^{2 + 4i/(D−1)})`, `z = R(x − x_opt)` — the
+/// sensitivity to each variable shrinks toward the optimum at a
+/// different rate per coordinate.
+pub struct DifferentPowers {
+    inst: BbobFn,
+}
+
+impl DifferentPowers {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        DifferentPowers { inst: BbobFn::new(dim, seed) }
+    }
+}
+
+impl Objective for DifferentPowers {
+    bbob_boilerplate!();
+
+    fn name(&self) -> &str {
+        "different_powers"
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let z = self.inst.r.matvec(&self.inst.shift(x));
+        let d = self.inst.dim;
+        let s: f64 = z
+            .iter()
+            .enumerate()
+            .map(|(i, zi)| {
+                let e = if d == 1 {
+                    2.0
+                } else {
+                    2.0 + 4.0 * i as f64 / (d - 1) as f64
+                };
+                zi.abs().powf(e)
+            })
+            .sum();
+        s.sqrt() + self.inst.f_opt
+    }
+}
+
+// ------------------------------------------------------------- Rosenbrock
+
+/// Classic (untransformed) Rosenbrock on `[0, 3]^D`, exactly as used in
+/// the paper's Figures 1–5: minimum at `(1, …, 1)` with value 0, which is
+/// interior to the box so the L-BFGS-B analysis happens at an
+/// unconstrained stationary point.
+pub struct Rosenbrock {
+    dim: usize,
+}
+
+impl Rosenbrock {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 2, "rosenbrock needs dim >= 2");
+        Rosenbrock { dim }
+    }
+}
+
+impl Objective for Rosenbrock {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn name(&self) -> &str {
+        "rosenbrock"
+    }
+
+    fn bounds(&self) -> Vec<(f64, f64)> {
+        vec![(0.0, 3.0); self.dim]
+    }
+
+    fn f_opt(&self) -> Option<f64> {
+        Some(0.0)
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.dim - 1 {
+            let a = x[i + 1] - x[i] * x[i];
+            let b = 1.0 - x[i];
+            s += 100.0 * a * a + b * b;
+        }
+        s
+    }
+
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.dim;
+        let mut g = vec![0.0; n];
+        for i in 0..n - 1 {
+            let a = x[i + 1] - x[i] * x[i];
+            g[i] += -400.0 * x[i] * a - 2.0 * (1.0 - x[i]);
+            g[i + 1] += 200.0 * a;
+        }
+        g
+    }
+
+    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        let n = self.dim;
+        let mut g = vec![0.0; n];
+        let mut s = 0.0;
+        for i in 0..n - 1 {
+            let a = x[i + 1] - x[i] * x[i];
+            let b = 1.0 - x[i];
+            s += 100.0 * a * a + b * b;
+            g[i] += -400.0 * x[i] * a - 2.0 * b;
+            g[i + 1] += 200.0 * a;
+        }
+        (s, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, assert_close, fd_gradient};
+
+    #[test]
+    fn sphere_optimum_is_x_opt() {
+        let f = Sphere::new(5, 11);
+        assert_close(f.value(&f.inst.x_opt), f.inst.f_opt, 1e-12);
+        // Any other point is worse.
+        let mut x = f.inst.x_opt.clone();
+        x[0] += 1.0;
+        assert!(f.value(&x) > f.inst.f_opt);
+    }
+
+    #[test]
+    fn sphere_grad_analytic_matches_fd() {
+        let f = Sphere::new(4, 3);
+        let x = vec![0.1, -1.0, 2.0, 0.7];
+        assert_allclose(&f.grad(&x), &fd_gradient(&|y| f.value(y), &x, 1e-6), 1e-5);
+    }
+
+    #[test]
+    fn ellipsoidal_optimum() {
+        let f = Ellipsoidal::new(5, 13);
+        assert_close(f.value(&f.inst.x_opt.clone()), f.inst.f_opt, 1e-9);
+    }
+
+    #[test]
+    fn attractive_sector_optimum_and_asymmetry() {
+        let f = AttractiveSector::new(4, 17);
+        let x_opt = f.inst.x_opt.clone();
+        assert_close(f.value(&x_opt), f.inst.f_opt, 1e-6);
+        // The sector penalty makes the function strongly asymmetric:
+        // opposite displacements differ (the rotation scrambles *which*
+        // side wins, so only asymmetry itself is asserted).
+        let eps = 0.3;
+        let plus: Vec<f64> = x_opt.iter().map(|v| v + eps).collect();
+        let minus: Vec<f64> = x_opt.iter().map(|v| v - eps).collect();
+        let (fp, fm) = (f.value(&plus), f.value(&minus));
+        assert!((fp - fm).abs() > 1e-3 * fp.abs().max(fm.abs()), "{fp} vs {fm}");
+        // And both are worse than the optimum.
+        assert!(fp > f.inst.f_opt && fm > f.inst.f_opt);
+    }
+
+    #[test]
+    fn step_ellipsoidal_has_plateaus() {
+        let f = StepEllipsoidal::new(3, 19);
+        // Tiny perturbations should usually not change the (floored) value.
+        let x = vec![1.0, 2.0, -1.0];
+        let v0 = f.value(&x);
+        let v1 = f.value(&[1.0 + 1e-9, 2.0, -1.0]);
+        assert_close(v0, v1, 1e-12);
+    }
+
+    #[test]
+    fn rastrigin_optimum_and_multimodality() {
+        let f = Rastrigin::new(3, 23);
+        let x_opt = f.inst.x_opt.clone();
+        assert_close(f.value(&x_opt), f.inst.f_opt, 1e-9);
+        // Global structure: far away should be much worse.
+        let far: Vec<f64> = x_opt.iter().map(|v| v + 3.0).collect();
+        assert!(f.value(&far) > f.inst.f_opt + 10.0);
+    }
+
+    #[test]
+    fn rosenbrock_minimum_and_gradient() {
+        let f = Rosenbrock::new(5);
+        let ones = vec![1.0; 5];
+        assert_close(f.value(&ones), 0.0, 1e-15);
+        assert_allclose(&f.grad(&ones), &vec![0.0; 5], 1e-12);
+        let x = vec![0.3, 1.7, 0.2, 2.5, 0.9];
+        assert_allclose(&f.grad(&x), &fd_gradient(&|y| f.value(y), &x, 1e-6), 1e-3);
+        let (v, g) = f.value_grad(&x);
+        assert_close(v, f.value(&x), 1e-15);
+        assert_allclose(&g, &f.grad(&x), 1e-15);
+    }
+
+    #[test]
+    fn bent_cigar_optimum_and_anisotropy() {
+        let f = BentCigar::new(4, 31);
+        let x_opt = f.inst.x_opt.clone();
+        assert_close(f.value(&x_opt), f.inst.f_opt, 1e-6);
+        // Perturbations are ~10⁶× anisotropic across (rotated) axes, so
+        // a generic displacement must be dominated by the 1e6 term.
+        let mut xp = x_opt.clone();
+        xp[0] += 0.1;
+        assert!(f.value(&xp) - f.inst.f_opt > 1.0);
+    }
+
+    #[test]
+    fn different_powers_optimum_and_growth() {
+        let f = DifferentPowers::new(5, 37);
+        let x_opt = f.inst.x_opt.clone();
+        assert_close(f.value(&x_opt), f.inst.f_opt, 1e-9);
+        let near: Vec<f64> = x_opt.iter().map(|v| v + 0.01).collect();
+        let far: Vec<f64> = x_opt.iter().map(|v| v + 1.0).collect();
+        assert!(f.value(&near) < f.value(&far));
+        assert!(f.value(&near) > f.inst.f_opt);
+    }
+
+    #[test]
+    fn instances_deterministic() {
+        let a = Rastrigin::new(6, 5);
+        let b = Rastrigin::new(6, 5);
+        let x = vec![0.5; 6];
+        assert_eq!(a.value(&x), b.value(&x));
+        let c = Rastrigin::new(6, 6);
+        assert!(a.value(&x) != c.value(&x));
+    }
+}

@@ -1,0 +1,91 @@
+//! COCO/BBOB benchmark-function substrate.
+//!
+//! The paper evaluates BO on four BBOB functions — Sphere (f1),
+//! Attractive Sector (f6), Step Ellipsoidal (f7), and Rastrigin (f15) —
+//! plus the classic Rosenbrock for the off-diagonal-artifact analysis
+//! (Figs 1–5). No COCO C library is available offline, so this module is
+//! a faithful Rust port of the function definitions and their
+//! transformations (Hansen et al. 2009): `T_osz`, `T_asy^β`, `Λ^α`,
+//! seeded orthogonal rotations, and the boundary penalty.
+//!
+//! Instances are deterministic in `(function, dim, seed)`.
+
+mod functions;
+mod transforms;
+
+pub use functions::{
+    AttractiveSector, BbobFn, BentCigar, DifferentPowers, Ellipsoidal, Rastrigin, Rosenbrock,
+    Sphere, StepEllipsoidal,
+};
+pub use transforms::{boundary_penalty, lambda_alpha, rotation_matrix, t_asy, t_osz};
+
+/// A box-bounded objective to be *minimized*.
+///
+/// Implemented by all BBOB functions and by the synthetic acquisition
+/// surrogates used in tests. `grad` defaults to central finite
+/// differences; functions with cheap analytic gradients override it.
+pub trait Objective: Send + Sync {
+    fn dim(&self) -> usize;
+    fn name(&self) -> &str;
+    fn value(&self, x: &[f64]) -> f64;
+    /// Box bounds, one `(lo, hi)` per dimension.
+    fn bounds(&self) -> Vec<(f64, f64)>;
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let f = |y: &[f64]| self.value(y);
+        crate::testing::fd_gradient(&f, x, 1e-6)
+    }
+    /// Value and gradient together (hot path; override when the forward
+    /// pass can be shared).
+    fn value_grad(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        (self.value(x), self.grad(x))
+    }
+    /// Known optimal value, if available (for regret reporting).
+    fn f_opt(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Construct one of the paper's objectives by name.
+///
+/// Names: `sphere`, `ellipsoidal`, `attractive_sector` (alias `as`),
+/// `step_ellipsoidal` (alias `se`), `rastrigin`, `rosenbrock`.
+pub fn by_name(name: &str, dim: usize, seed: u64) -> crate::Result<Box<dyn Objective>> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "sphere" => Box::new(Sphere::new(dim, seed)),
+        "ellipsoidal" => Box::new(Ellipsoidal::new(dim, seed)),
+        "attractive_sector" | "as" => Box::new(AttractiveSector::new(dim, seed)),
+        "step_ellipsoidal" | "se" => Box::new(StepEllipsoidal::new(dim, seed)),
+        "rastrigin" => Box::new(Rastrigin::new(dim, seed)),
+        "bent_cigar" => Box::new(BentCigar::new(dim, seed)),
+        "different_powers" => Box::new(DifferentPowers::new(dim, seed)),
+        "rosenbrock" => Box::new(Rosenbrock::new(dim)),
+        other => {
+            return Err(crate::Error::Config(format!("unknown objective '{other}'")));
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_constructs_all() {
+        for name in ["sphere", "ellipsoidal", "as", "se", "rastrigin", "bent_cigar", "different_powers", "rosenbrock"] {
+            let f = by_name(name, 4, 1).unwrap();
+            assert_eq!(f.dim(), 4);
+            let x = vec![0.5; 4];
+            assert!(f.value(&x).is_finite());
+        }
+        assert!(by_name("nope", 4, 1).is_err());
+    }
+
+    #[test]
+    fn default_grad_matches_fd_on_sphere() {
+        let f = Sphere::new(3, 7);
+        let x = vec![1.0, -2.0, 0.3];
+        let g = f.grad(&x);
+        let gfd = crate::testing::fd_gradient(&|y| f.value(y), &x, 1e-6);
+        crate::testing::assert_allclose(&g, &gfd, 1e-4);
+    }
+}

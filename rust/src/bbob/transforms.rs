@@ -1,0 +1,175 @@
+//! BBOB coordinate transformations (Hansen et al. 2009, §0.2).
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Oscillation transform `T_osz`, applied elementwise.
+pub fn t_osz(x: &[f64]) -> Vec<f64> {
+    x.iter().map(|&xi| t_osz_scalar(xi)).collect()
+}
+
+pub(crate) fn t_osz_scalar(xi: f64) -> f64 {
+    if xi == 0.0 {
+        return 0.0;
+    }
+    let xhat = xi.abs().ln();
+    let (c1, c2) = if xi > 0.0 { (10.0, 7.9) } else { (5.5, 3.1) };
+    xi.signum() * (xhat + 0.049 * ((c1 * xhat).sin() + (c2 * xhat).sin())).exp()
+}
+
+/// Asymmetry transform `T_asy^β`, applied elementwise.
+pub fn t_asy(x: &[f64], beta: f64) -> Vec<f64> {
+    let d = x.len();
+    x.iter()
+        .enumerate()
+        .map(|(i, &xi)| {
+            if xi > 0.0 {
+                let exponent = 1.0
+                    + beta * (i as f64 / (d.max(2) - 1) as f64) * xi.sqrt();
+                xi.powf(exponent)
+            } else {
+                xi
+            }
+        })
+        .collect()
+}
+
+/// Diagonal conditioning matrix `Λ^α` as a vector of diagonal entries:
+/// `λ_i = α^{i/(2(D−1))}`.
+pub fn lambda_alpha(alpha: f64, dim: usize) -> Vec<f64> {
+    (0..dim)
+        .map(|i| {
+            if dim == 1 {
+                1.0
+            } else {
+                alpha.powf(0.5 * i as f64 / (dim - 1) as f64)
+            }
+        })
+        .collect()
+}
+
+/// Seeded random orthogonal matrix: Gram–Schmidt of a standard-normal
+/// matrix. Deterministic in `seed`.
+pub fn rotation_matrix(dim: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed, 0xb0b);
+    loop {
+        let mut m = Matrix::zeros(dim, dim);
+        for i in 0..dim {
+            for j in 0..dim {
+                m[(i, j)] = rng.normal();
+            }
+        }
+        if let Some(q) = gram_schmidt(&m) {
+            return q;
+        }
+        // Degenerate draw (essentially impossible); redraw.
+    }
+}
+
+fn gram_schmidt(m: &Matrix) -> Option<Matrix> {
+    let n = m.rows();
+    let mut q = m.clone();
+    for i in 0..n {
+        for j in 0..i {
+            // Project row i off row j. Split-borrow to copy row j first.
+            let rj: Vec<f64> = q.row(j).to_vec();
+            let proj = crate::linalg::dot(q.row(i), &rj);
+            let ri = q.row_mut(i);
+            for (a, b) in ri.iter_mut().zip(&rj) {
+                *a -= proj * b;
+            }
+        }
+        let norm = crate::linalg::norm2(q.row(i));
+        if norm < 1e-10 {
+            return None;
+        }
+        for v in q.row_mut(i) {
+            *v /= norm;
+        }
+    }
+    Some(q)
+}
+
+/// BBOB boundary penalty: `Σ max(0, |x_i| − 5)²`.
+pub fn boundary_penalty(x: &[f64]) -> f64 {
+    x.iter().map(|&xi| (xi.abs() - 5.0).max(0.0).powi(2)).sum()
+}
+
+/// Draw the optimum location `x_opt` uniform in [-4, 4]^D (BBOB §0.1).
+pub fn draw_x_opt(dim: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 0x0f7);
+    rng.uniform_vec(dim, -4.0, 4.0)
+}
+
+/// Draw the optimum value `f_opt` (clipped Cauchy per BBOB; we use a
+/// clipped normal which preserves the role of an arbitrary offset).
+pub fn draw_f_opt(seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed, 0xf09);
+    (100.0 * rng.normal()).clamp(-1000.0, 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn t_osz_fixes_zero_and_sign() {
+        assert_eq!(t_osz_scalar(0.0), 0.0);
+        assert!(t_osz_scalar(2.0) > 0.0);
+        assert!(t_osz_scalar(-2.0) < 0.0);
+        // T_osz(1) = sign*exp(0 + 0.049*(sin 0 + sin 0)) = 1
+        assert_close(t_osz_scalar(1.0), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn t_asy_identity_for_nonpositive() {
+        let x = vec![-1.0, 0.0, -3.5];
+        assert_eq!(t_asy(&x, 0.5), x);
+    }
+
+    #[test]
+    fn t_asy_increases_positive_tail() {
+        let x = vec![4.0, 4.0, 4.0];
+        let y = t_asy(&x, 0.5);
+        // i=0 is unchanged (exponent 1), later coords grow.
+        assert_close(y[0], 4.0, 1e-12);
+        assert!(y[2] > y[1] && y[1] > y[0]);
+    }
+
+    #[test]
+    fn lambda_alpha_endpoints() {
+        let l = lambda_alpha(100.0, 5);
+        assert_close(l[0], 1.0, 1e-12);
+        assert_close(l[4], 10.0, 1e-12); // 100^(1/2)
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let q = rotation_matrix(6, 42);
+        let prod = q.matmul(&q.transpose());
+        let err = prod.sub(&Matrix::eye(6)).max_abs();
+        assert!(err < 1e-10, "err={err}");
+    }
+
+    #[test]
+    fn rotation_deterministic_in_seed() {
+        let a = rotation_matrix(4, 9);
+        let b = rotation_matrix(4, 9);
+        assert!(a.sub(&b).max_abs() == 0.0);
+        let c = rotation_matrix(4, 10);
+        assert!(a.sub(&c).max_abs() > 1e-3);
+    }
+
+    #[test]
+    fn penalty_zero_inside_box() {
+        assert_eq!(boundary_penalty(&[5.0, -5.0, 0.0]), 0.0);
+        assert!(boundary_penalty(&[6.0]) > 0.99);
+    }
+
+    #[test]
+    fn x_opt_in_range() {
+        let x = draw_x_opt(10, 3);
+        assert!(x.iter().all(|v| (-4.0..4.0).contains(v)));
+    }
+}

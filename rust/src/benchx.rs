@@ -1,0 +1,236 @@
+//! Micro/bench harness (no `criterion` offline).
+//!
+//! Provides warmup + repeated timed runs with median/IQR statistics and a
+//! table printer whose rows match the paper's benchmark tables. Used by
+//! the `rust/benches/*.rs` targets (built with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over timed repetitions.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub reps: usize,
+    pub median: Duration,
+    pub p25: Duration,
+    pub p75: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} median {:>10}  IQR [{:>10}, {:>10}]  ({} reps)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p25),
+            fmt_dur(self.p75),
+            self.reps
+        )
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark runner: `warmup` untimed runs, then `reps` timed runs.
+pub struct Bencher {
+    warmup: usize,
+    reps: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, reps: 7, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bencher { warmup, reps: reps.max(1), results: Vec::new() }
+    }
+
+    /// Time `f`, which should perform one complete unit of work and
+    /// return a value that is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+        }
+        let stats = summarize(name, &mut times);
+        println!("{stats}");
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+fn summarize(name: &str, times: &mut [Duration]) -> BenchStats {
+    times.sort_unstable();
+    let n = times.len();
+    let q = |p: f64| times[((n - 1) as f64 * p).round() as usize];
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    BenchStats {
+        name: name.to_string(),
+        reps: n,
+        median: q(0.5),
+        p25: q(0.25),
+        p75: q(0.75),
+        min: times[0],
+        max: times[n - 1],
+        mean,
+    }
+}
+
+/// Opaque value sink (std-only `black_box` stand-in, stable across rustc
+/// versions).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // read_volatile of a pointer to x prevents the value from being
+    // optimized away without affecting codegen of the benched region.
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+/// Median of a float slice (used by the table harnesses).
+pub fn median(xs: &mut [f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// (25th, 75th) percentiles via linear interpolation.
+pub fn iqr(xs: &mut [f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| {
+        let idx = p * (xs.len() - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        let w = idx - lo as f64;
+        xs[lo] * (1.0 - w) + xs[hi] * w
+    };
+    (pct(0.25), pct(0.75))
+}
+
+/// Simple fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |f: &dyn Fn(usize) -> String| {
+            let cells: Vec<String> = widths.iter().enumerate().map(|(i, _)| f(i)).collect();
+            println!("| {} |", cells.join(" | "));
+        };
+        line(&|i| format!("{:<w$}", self.headers[i], w = widths[i]));
+        line(&|i| "-".repeat(widths[i]));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{:<w$}", c, w = w)).collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn iqr_sorted() {
+        let (lo, hi) = iqr(&mut [1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((lo - 2.0).abs() < 1e-12);
+        assert!((hi - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bencher_produces_stats() {
+        let mut b = Bencher::new(1, 3);
+        let s = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.reps, 3);
+        assert!(s.median >= s.min && s.median <= s.max);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["D", "Method", "Value"]);
+        t.row(&["5".into(), "D-BE".into(), "10.85".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(50)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

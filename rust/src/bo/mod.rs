@@ -1,0 +1,51 @@
+//! Bayesian-optimization loop (Optuna-GPSampler-shaped).
+//!
+//! [`Study`] owns the trial history and the suggest/observe cycle:
+//! fit a Matérn-5/2 GP on the (unit-cube-normalized, standardized)
+//! history, then maximize LogEI by multi-start L-BFGS-B with one of the
+//! paper's three strategies. The MSO strategy is the experiment knob of
+//! Tables 1–2; everything else is shared.
+
+mod study;
+
+pub use study::{Study, StudyConfig, StudyStats, Trial};
+
+/// Result of an optimization run.
+#[derive(Clone, Debug)]
+pub struct BestResult {
+    pub x: Vec<f64>,
+    pub value: f64,
+    /// Trial index that produced it.
+    pub trial: usize,
+}
+
+/// Map a point from the unit cube to the search box.
+pub(crate) fn denormalize(u: &[f64], bounds: &[(f64, f64)]) -> Vec<f64> {
+    u.iter().zip(bounds).map(|(ui, &(lo, hi))| lo + ui * (hi - lo)).collect()
+}
+
+/// Map a point from the search box to the unit cube.
+pub(crate) fn normalize(x: &[f64], bounds: &[(f64, f64)]) -> Vec<f64> {
+    x.iter()
+        .zip(bounds)
+        .map(|(xi, &(lo, hi))| ((xi - lo) / (hi - lo)).clamp(0.0, 1.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_round_trip() {
+        let bounds = vec![(-5.0, 5.0), (0.0, 2.0)];
+        let x = vec![2.5, 0.5];
+        let u = normalize(&x, &bounds);
+        assert!((u[0] - 0.75).abs() < 1e-15);
+        assert!((u[1] - 0.25).abs() < 1e-15);
+        let back = denormalize(&u, &bounds);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

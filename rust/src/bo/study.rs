@@ -1,0 +1,317 @@
+//! The BO study: history, GP fit, MSO-based suggestion.
+
+use super::{denormalize, normalize, BestResult};
+use crate::batcheval::{BatchAcqEvaluator, NativeGpEvaluator};
+use crate::gp::{GpParams, GpRegressor};
+use crate::optim::lbfgsb::LbfgsbOptions;
+use crate::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use crate::rng::Pcg64;
+use crate::Result;
+use std::time::{Duration, Instant};
+
+/// One evaluated trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub x: Vec<f64>,
+    pub value: f64,
+}
+
+/// Study configuration. Defaults follow the paper's benchmark protocol
+/// (§5): B = 10 restarts, L-BFGS-B with m = 10, 200-iteration cap and
+/// `‖∇α‖∞ ≤ 1e-2` termination, 10 random startup trials.
+#[derive(Clone, Debug)]
+pub struct StudyConfig {
+    pub dim: usize,
+    pub bounds: Vec<(f64, f64)>,
+    /// Total trials (paper: 300).
+    pub n_trials: usize,
+    /// Random startup trials before the GP engages.
+    pub n_startup: usize,
+    /// MSO restarts B (paper: 10).
+    pub restarts: usize,
+    /// Acquisition-optimization strategy (the experiment knob).
+    pub strategy: MsoStrategy,
+    /// L-BFGS-B options for the acquisition optimization.
+    pub lbfgsb: LbfgsbOptions,
+    /// Re-fit GP hyperparameters every k trials (1 = every trial).
+    pub fit_every: usize,
+}
+
+impl Default for StudyConfig {
+    fn default() -> Self {
+        StudyConfig {
+            dim: 0,
+            bounds: Vec::new(),
+            n_trials: 100,
+            n_startup: 10,
+            restarts: 10,
+            strategy: MsoStrategy::Dbe,
+            lbfgsb: LbfgsbOptions {
+                memory: 10,
+                pgtol: 1e-2,
+                ftol: 0.0,
+                max_iters: 200,
+                max_evals: 20_000,
+            },
+            fit_every: 1,
+        }
+    }
+}
+
+/// Aggregated per-study timing/iteration statistics — the raw numbers
+/// behind the paper's Runtime and Iters. columns.
+#[derive(Clone, Debug, Default)]
+pub struct StudyStats {
+    /// Wall time spent inside acquisition optimization (MSO).
+    pub acq_wall: Duration,
+    /// Wall time spent fitting GP hyperparameters.
+    pub fit_wall: Duration,
+    /// Total study wall time.
+    pub total_wall: Duration,
+    /// L-BFGS-B iteration counts, one entry per (trial, restart).
+    pub iters: Vec<usize>,
+    /// Batched-evaluator calls across all suggestions.
+    pub n_batches: usize,
+    /// Points pushed through the evaluator.
+    pub n_points: usize,
+}
+
+impl StudyStats {
+    /// Median L-BFGS-B iteration count (paper "Iters." column).
+    pub fn median_iters(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.iters.iter().map(|&i| i as f64).collect();
+        crate::benchx::median(&mut v)
+    }
+}
+
+/// Builds a batched evaluator from the trial's freshly fitted GP —
+/// the hook the PJRT runtime uses to put the AOT artifact on the hot
+/// path (see `examples/e2e_pjrt_bo.rs`). The returned evaluator owns
+/// its data (it cannot borrow the GP).
+pub type EvalFactory =
+    Box<dyn Fn(&GpRegressor) -> crate::Result<Box<dyn BatchAcqEvaluator>>>;
+
+/// A Bayesian-optimization study over a box-bounded objective.
+pub struct Study {
+    cfg: StudyConfig,
+    rng: Pcg64,
+    trials: Vec<Trial>,
+    /// Warm-started GP hyperparameters.
+    gp_params: GpParams,
+    pub stats: StudyStats,
+    /// Most recent suggestion's pending normalized point (for observe).
+    pending: Option<Vec<f64>>,
+    /// Optional evaluator override (e.g. the PJRT artifact path).
+    eval_factory: Option<EvalFactory>,
+}
+
+impl Study {
+    pub fn new(cfg: StudyConfig, seed: u64) -> Self {
+        assert_eq!(cfg.dim, cfg.bounds.len(), "dim must match bounds");
+        assert!(cfg.dim > 0, "dim must be positive");
+        Study {
+            cfg,
+            rng: Pcg64::seeded(seed),
+            trials: Vec::new(),
+            gp_params: GpParams::default(),
+            stats: StudyStats::default(),
+            pending: None,
+            eval_factory: None,
+        }
+    }
+
+    /// Route acquisition evaluations through a custom evaluator built
+    /// per-trial from the fitted GP (e.g. [`crate::runtime::PjrtEvaluator`]).
+    pub fn set_eval_factory(&mut self, factory: EvalFactory) {
+        self.eval_factory = Some(factory);
+    }
+
+    pub fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+
+    pub fn config(&self) -> &StudyConfig {
+        &self.cfg
+    }
+
+    /// Best trial so far.
+    pub fn best(&self) -> Option<BestResult> {
+        self.trials
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.value.partial_cmp(&b.1.value).unwrap())
+            .map(|(i, t)| BestResult { x: t.x.clone(), value: t.value, trial: i })
+    }
+
+    /// Ask for the next point to evaluate (raw search-space units).
+    pub fn suggest(&mut self) -> Result<Vec<f64>> {
+        let x = if self.trials.len() < self.cfg.n_startup {
+            self.rng.point_in_box(&self.cfg.bounds)
+        } else {
+            self.suggest_model_based()?
+        };
+        self.pending = Some(x.clone());
+        Ok(x)
+    }
+
+    /// Model-based suggestion: GP fit + MSO over the acquisition. Uses
+    /// the evaluator factory when set (PJRT path), the native GP oracle
+    /// otherwise.
+    pub fn suggest_model_based(&mut self) -> Result<Vec<f64>> {
+        let t_total = Instant::now();
+        // Normalized history.
+        let xs_norm: Vec<Vec<f64>> =
+            self.trials.iter().map(|t| normalize(&t.x, &self.cfg.bounds)).collect();
+        let ys: Vec<f64> = self.trials.iter().map(|t| t.value).collect();
+
+        // GP fit (warm-started; optionally only every k trials).
+        let t_fit = Instant::now();
+        let refit = (self.trials.len() - self.cfg.n_startup) % self.cfg.fit_every.max(1) == 0;
+        let gp = if refit {
+            let gp = GpRegressor::fit(xs_norm, &ys, self.gp_params)?;
+            self.gp_params = gp.params;
+            gp
+        } else {
+            GpRegressor::with_params(xs_norm, &ys, self.gp_params)?
+        };
+        self.stats.fit_wall += t_fit.elapsed();
+
+        // Restart points: B−1 uniform + the incumbent (GPSampler-style).
+        let mut x0s: Vec<Vec<f64>> = (0..self.cfg.restarts.saturating_sub(1))
+            .map(|_| self.rng.uniform_vec(self.cfg.dim, 0.0, 1.0))
+            .collect();
+        if let Some(best) = self.best() {
+            x0s.push(normalize(&best.x, &self.cfg.bounds));
+        } else {
+            x0s.push(self.rng.uniform_vec(self.cfg.dim, 0.0, 1.0));
+        }
+
+        let mso_cfg = MsoConfig {
+            bounds: vec![(0.0, 1.0); self.cfg.dim],
+            lbfgsb: self.cfg.lbfgsb,
+        };
+
+        let t_acq = Instant::now();
+        let res = match &self.eval_factory {
+            Some(factory) => {
+                let ev = factory(&gp)?;
+                run_mso(self.cfg.strategy, ev.as_ref(), &x0s, &mso_cfg)?
+            }
+            None => {
+                let ev = NativeGpEvaluator::new(&gp);
+                run_mso(self.cfg.strategy, &ev, &x0s, &mso_cfg)?
+            }
+        };
+        self.stats.acq_wall += t_acq.elapsed();
+        self.stats.n_batches += res.n_batches;
+        self.stats.n_points += res.n_points;
+        self.stats.iters.extend(res.restarts.iter().map(|r| r.iters));
+        self.stats.total_wall += t_total.elapsed();
+
+        Ok(denormalize(&res.best_x, &self.cfg.bounds))
+    }
+
+    /// Report the objective value for the last suggested point.
+    pub fn observe(&mut self, x: Vec<f64>, value: f64) {
+        self.pending = None;
+        self.trials.push(Trial { x, value });
+    }
+
+    /// Convenience driver: run the full suggest/observe loop against a
+    /// closure objective.
+    pub fn optimize(&mut self, f: impl Fn(&[f64]) -> f64) -> BestResult {
+        let t0 = Instant::now();
+        for _ in self.trials.len()..self.cfg.n_trials {
+            let x = self.suggest().expect("suggestion failed");
+            let y = f(&x);
+            self.observe(x, y);
+        }
+        self.stats.total_wall = t0.elapsed();
+        self.best().expect("at least one trial")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(dim: usize, strategy: MsoStrategy) -> StudyConfig {
+        StudyConfig {
+            dim,
+            bounds: vec![(-5.0, 5.0); dim],
+            n_trials: 18,
+            n_startup: 6,
+            restarts: 4,
+            strategy,
+            ..StudyConfig::default()
+        }
+    }
+
+    #[test]
+    fn bo_beats_random_on_sphere() {
+        let f = |x: &[f64]| x.iter().map(|v| v * v).sum::<f64>();
+        let mut study = Study::new(quick_cfg(2, MsoStrategy::Dbe), 42);
+        let best = study.optimize(f);
+
+        // Random search with the same budget.
+        let mut rng = Pcg64::seeded(42);
+        let rand_best = (0..18)
+            .map(|_| {
+                let x = rng.point_in_box(&[(-5.0, 5.0); 2]);
+                f(&x)
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best.value < rand_best,
+            "BO {} should beat random {}",
+            best.value,
+            rand_best
+        );
+    }
+
+    #[test]
+    fn all_strategies_run_a_study() {
+        for strategy in MsoStrategy::all() {
+            let f = |x: &[f64]| (x[0] - 1.0).powi(2) + (x[1] + 2.0).powi(2);
+            let mut study = Study::new(quick_cfg(2, strategy), 7);
+            let best = study.optimize(f);
+            assert!(best.value < 5.0, "{}: {}", strategy.name(), best.value);
+            assert!(study.stats.acq_wall > Duration::ZERO);
+            assert!(!study.stats.iters.is_empty());
+        }
+    }
+
+    #[test]
+    fn startup_trials_are_random_and_in_bounds() {
+        let mut study = Study::new(quick_cfg(3, MsoStrategy::Dbe), 1);
+        for _ in 0..6 {
+            let x = study.suggest().unwrap();
+            assert!(x.iter().all(|&v| (-5.0..5.0).contains(&v)));
+            study.observe(x, 1.0);
+        }
+        assert_eq!(study.trials().len(), 6);
+    }
+
+    #[test]
+    fn stats_accumulate_per_restart_iters() {
+        let f = |x: &[f64]| x[0].powi(2);
+        let mut study = Study::new(quick_cfg(1, MsoStrategy::Dbe), 3);
+        study.optimize(f);
+        // 18 trials − 6 startup = 12 model-based, ×4 restarts each.
+        assert_eq!(study.stats.iters.len(), 12 * 4);
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut study = Study::new(quick_cfg(1, MsoStrategy::SeqOpt), 5);
+        study.observe(vec![1.0], 10.0);
+        study.observe(vec![2.0], -3.0);
+        study.observe(vec![3.0], 5.0);
+        let b = study.best().unwrap();
+        assert_eq!(b.value, -3.0);
+        assert_eq!(b.trial, 1);
+    }
+}

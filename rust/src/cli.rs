@@ -1,0 +1,138 @@
+//! Minimal CLI argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, and bare `--flag` forms plus
+//! positional arguments; typed getters with defaults.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    /// Comma-separated list of usizes.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{key}: bad entry '{s}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|v| v.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["repro", "fig1", "--dim", "5", "--fast", "--out=results"]);
+        assert_eq!(a.positional, vec!["repro", "fig1"]);
+        assert_eq!(a.get_usize("dim", 0).unwrap(), 5);
+        assert!(a.has("fast"));
+        assert_eq!(a.get_str("out", "x"), "results");
+        assert_eq!(a.get_str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--dim", "abc"]);
+        assert!(a.get_usize("dim", 0).is_err());
+        let a = parse(&["--tol", "1e-3"]);
+        assert!((a.get_f64("tol", 0.0).unwrap() - 1e-3).abs() < 1e-18);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--dims", "5,10,20"]);
+        assert_eq!(a.get_usize_list("dims", &[]).unwrap(), vec![5, 10, 20]);
+        let a = parse(&[]);
+        assert_eq!(a.get_usize_list("dims", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--dim", "3"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("dim", 0).unwrap(), 3);
+    }
+}

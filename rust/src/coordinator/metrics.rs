@@ -1,0 +1,100 @@
+//! Atomic metrics registry for the coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Counters shared by services/routers. All methods are lock-free.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Evaluation requests accepted.
+    pub requests: AtomicU64,
+    /// Oracle batches dispatched.
+    pub batches: AtomicU64,
+    /// Total points evaluated.
+    pub points: AtomicU64,
+    /// Cumulative oracle wall time in nanoseconds.
+    pub oracle_nanos: AtomicU64,
+    /// Requests that failed.
+    pub failures: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, points: usize, wall: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.points.fetch_add(points as u64, Ordering::Relaxed);
+        self.oracle_nanos.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Mean points per oracle batch — the batching-efficiency headline.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.points.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            points: self.points.load(Ordering::Relaxed),
+            oracle: Duration::from_nanos(self.oracle_nanos.load(Ordering::Relaxed)),
+            failures: self.failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub points: u64,
+    pub oracle: Duration,
+    pub failures: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} batches={} points={} oracle={:.1}ms failures={}",
+            self.requests,
+            self.batches,
+            self.points,
+            self.oracle.as_secs_f64() * 1e3,
+            self.failures
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(10, Duration::from_millis(2));
+        m.record_batch(6, Duration::from_millis(1));
+        assert_eq!(m.snapshot().batches, 2);
+        assert_eq!(m.snapshot().points, 16);
+        assert!((m.mean_batch_size() - 8.0).abs() < 1e-12);
+        assert_eq!(m.snapshot().oracle, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert!(format!("{s}").contains("batches=0"));
+    }
+}

@@ -1,0 +1,26 @@
+//! Thread-channel coordination layer.
+//!
+//! The paper's coroutine decouples optimizer states *within* one MSO
+//! call; this module scales the same idea *across* concurrent BO
+//! studies and OS threads, vLLM-router-style:
+//!
+//! * [`service::BatchService`] — a worker thread owning a
+//!   [`crate::batcheval::BatchAcqEvaluator`]; clients submit evaluation
+//!   requests over an mpsc channel and the service **coalesces** queued
+//!   requests into one oracle batch (size- and deadline-triggered
+//!   microbatching).
+//! * [`router::Router`] — routes requests across several services
+//!   (least-loaded pick) for multi-worker deployments.
+//! * [`metrics::Metrics`] — atomic counters surfaced by the CLI.
+//!
+//! All of it is std-only (`std::thread` + `std::sync::mpsc`): tokio is
+//! unavailable offline, and the workload — few long-lived workers, small
+//! message rate — is exactly what blocking channels are good at.
+
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use router::Router;
+pub use service::{BatchService, ServiceConfig};

@@ -1,0 +1,122 @@
+//! Least-loaded routing across multiple batch services.
+
+use super::service::BatchService;
+use crate::batcheval::BatchAcqEvaluator;
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Routes evaluation batches across workers, picking the one with the
+/// fewest in-flight points (ties broken round-robin).
+pub struct Router {
+    workers: Vec<BatchService>,
+    inflight: Vec<Arc<AtomicU64>>,
+    rr: AtomicU64,
+}
+
+impl Router {
+    pub fn new(workers: Vec<BatchService>) -> Result<Self> {
+        if workers.is_empty() {
+            return Err(Error::Coordinator("router needs at least one worker".into()));
+        }
+        let dim = workers[0].dim();
+        if workers.iter().any(|w| w.dim() != dim) {
+            return Err(Error::Coordinator("router workers disagree on dimension".into()));
+        }
+        let inflight = workers.iter().map(|_| Arc::new(AtomicU64::new(0))).collect();
+        Ok(Router { workers, inflight, rr: AtomicU64::new(0) })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn pick(&self) -> usize {
+        let rr = self.rr.fetch_add(1, Ordering::Relaxed) as usize;
+        let mut best = rr % self.workers.len();
+        let mut best_load = self.inflight[best].load(Ordering::Relaxed);
+        for k in 0..self.workers.len() {
+            let i = (rr + k) % self.workers.len();
+            let load = self.inflight[i].load(Ordering::Relaxed);
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    /// Total points routed to each worker so far (diagnostics).
+    pub fn worker_points(&self) -> Vec<u64> {
+        self.workers.iter().map(|w| w.metrics.snapshot().points).collect()
+    }
+}
+
+impl BatchAcqEvaluator for Router {
+    fn dim(&self) -> usize {
+        self.workers[0].dim()
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        let w = self.pick();
+        self.inflight[w].fetch_add(xs.len() as u64, Ordering::Relaxed);
+        let out = self.workers[w].eval(xs.to_vec());
+        self.inflight[w].fetch_sub(xs.len() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn name(&self) -> &str {
+        "router"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::SyntheticEvaluator;
+    use crate::bbob::{Objective, Rosenbrock};
+    use crate::coordinator::service::ServiceConfig;
+
+    fn make_router(n: usize) -> (Router, Vec<std::thread::JoinHandle<()>>) {
+        let mut workers = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let (svc, h) = BatchService::spawn(
+                Box::new(SyntheticEvaluator::new(Box::new(Rosenbrock::new(2)))),
+                ServiceConfig::default(),
+            );
+            workers.push(svc);
+            handles.push(h);
+        }
+        (Router::new(workers).unwrap(), handles)
+    }
+
+    #[test]
+    fn routes_and_answers_correctly() {
+        let (router, _handles) = make_router(3);
+        let f = Rosenbrock::new(2);
+        for i in 0..30 {
+            let p = vec![0.1 * (i % 10) as f64, 1.0];
+            let (vals, _) = router.eval_batch(std::slice::from_ref(&p)).unwrap();
+            assert_eq!(vals[0], f.value(&p));
+        }
+        // Work must be spread across workers.
+        let loads = router.worker_points();
+        assert_eq!(loads.iter().sum::<u64>(), 30);
+        assert!(loads.iter().filter(|&&l| l > 0).count() >= 2, "{loads:?}");
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched() {
+        assert!(Router::new(Vec::new()).is_err());
+        let (svc2, _h2) = BatchService::spawn(
+            Box::new(SyntheticEvaluator::new(Box::new(Rosenbrock::new(2)))),
+            ServiceConfig::default(),
+        );
+        let (svc3, _h3) = BatchService::spawn(
+            Box::new(SyntheticEvaluator::new(Box::new(Rosenbrock::new(3)))),
+            ServiceConfig::default(),
+        );
+        assert!(Router::new(vec![svc2, svc3]).is_err());
+    }
+}

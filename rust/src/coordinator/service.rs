@@ -1,0 +1,282 @@
+//! Batch-coalescing evaluation service.
+//!
+//! One worker thread owns the evaluator. Clients (e.g. concurrent BO
+//! studies, or the B workers of a distributed D-BE) send
+//! `(points, reply)` requests; the worker drains everything queued
+//! (up to `max_batch` points, waiting at most `max_wait` after the
+//! first request) and dispatches ONE oracle call for the coalesced
+//! batch — the same microbatching discipline a vLLM-style router uses,
+//! applied to acquisition evaluations.
+
+use super::metrics::Metrics;
+use crate::batcheval::BatchAcqEvaluator;
+use crate::error::{Error, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Coalesce at most this many points into one oracle call.
+    pub max_batch: usize,
+    /// After the first queued request, wait at most this long for more.
+    pub max_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_batch: 64, max_wait: Duration::from_micros(200) }
+    }
+}
+
+struct Request {
+    points: Vec<Vec<f64>>,
+    reply: Sender<Result<(Vec<f64>, Vec<Vec<f64>>)>>,
+}
+
+/// Handle to a running batch service. Cloning shares the same worker.
+#[derive(Clone)]
+pub struct BatchService {
+    tx: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    dim: usize,
+}
+
+impl BatchService {
+    /// Spawn the worker thread owning `evaluator`.
+    pub fn spawn(
+        evaluator: Box<dyn BatchAcqEvaluator + Send>,
+        cfg: ServiceConfig,
+    ) -> (Self, JoinHandle<()>) {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let m = Arc::clone(&metrics);
+        let dim = evaluator.dim();
+        let handle = std::thread::spawn(move || worker_loop(evaluator, cfg, rx, m));
+        (BatchService { tx, metrics, dim }, handle)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Evaluate a batch through the service (blocking).
+    pub fn eval(&self, points: Vec<Vec<f64>>) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request { points, reply: reply_tx })
+            .map_err(|_| Error::Coordinator("service worker is gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("service dropped the reply".into()))?
+    }
+}
+
+/// A [`BatchAcqEvaluator`] view of the service, so MSO strategies can
+/// run against a shared coalescing worker transparently.
+impl BatchAcqEvaluator for BatchService {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        self.eval(xs.to_vec())
+    }
+
+    fn name(&self) -> &str {
+        "batch-service"
+    }
+}
+
+fn worker_loop(
+    evaluator: Box<dyn BatchAcqEvaluator + Send>,
+    cfg: ServiceConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // Block for the first request; exit when all senders are gone.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let mut pending = vec![first];
+        let mut total_points = pending[0].points.len();
+        let deadline = Instant::now() + cfg.max_wait;
+
+        // Coalesce whatever arrives before the deadline / size cap.
+        while total_points < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    total_points += r.points.len();
+                    pending.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // One oracle call for the whole coalesced batch.
+        let all_points: Vec<Vec<f64>> =
+            pending.iter().flat_map(|r| r.points.iter().cloned()).collect();
+        let t0 = Instant::now();
+        let outcome = evaluator.eval_batch(&all_points);
+        metrics.record_batch(all_points.len(), t0.elapsed());
+
+        match outcome {
+            Ok((vals, grads)) => {
+                let mut off = 0;
+                for req in pending {
+                    let k = req.points.len();
+                    let chunk = (
+                        vals[off..off + k].to_vec(),
+                        grads[off..off + k].to_vec(),
+                    );
+                    off += k;
+                    let _ = req.reply.send(Ok(chunk)); // receiver may be gone
+                }
+            }
+            Err(e) => {
+                metrics.failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let msg = e.to_string();
+                for req in pending {
+                    let _ = req.reply.send(Err(Error::Coordinator(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::SyntheticEvaluator;
+    use crate::bbob::{Objective, Rosenbrock};
+    use crate::testing::forall;
+
+    fn spawn_rosen(d: usize, cfg: ServiceConfig) -> (BatchService, JoinHandle<()>) {
+        BatchService::spawn(Box::new(SyntheticEvaluator::new(Box::new(Rosenbrock::new(d)))), cfg)
+    }
+
+    #[test]
+    fn answers_match_direct_evaluation() {
+        let (svc, handle) = spawn_rosen(3, ServiceConfig::default());
+        let f = Rosenbrock::new(3);
+        let pts = vec![vec![0.5; 3], vec![2.0, 1.0, 0.1]];
+        let (vals, grads) = svc.eval(pts.clone()).unwrap();
+        for (i, p) in pts.iter().enumerate() {
+            let (v, g) = f.value_grad(p);
+            assert_eq!(vals[i], v);
+            assert_eq!(grads[i], g);
+        }
+        drop(svc);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_answers() {
+        // The routing invariant: coalescing must never cross-wire
+        // replies. Hammer the service from many threads and check every
+        // reply against the direct oracle.
+        let (svc, handle) =
+            spawn_rosen(2, ServiceConfig { max_batch: 16, max_wait: Duration::from_millis(1) });
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let svc = svc.clone();
+            joins.push(std::thread::spawn(move || {
+                let f = Rosenbrock::new(2);
+                for i in 0..50 {
+                    let p = vec![0.1 + 0.01 * t as f64, 0.2 + 0.01 * i as f64];
+                    let (vals, grads) = svc.eval(vec![p.clone()]).unwrap();
+                    let (v, g) = f.value_grad(&p);
+                    assert_eq!(vals[0], v, "client {t} iteration {i} got wrong value");
+                    assert_eq!(grads[0], g);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // Coalescing must have actually happened at least sometimes
+        // (400 requests; some land in shared batches).
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.points, 400);
+        assert!(snap.batches <= snap.points, "{snap}");
+        drop(svc);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn batch_size_cap_respected() {
+        let (svc, handle) =
+            spawn_rosen(2, ServiceConfig { max_batch: 4, max_wait: Duration::from_millis(5) });
+        // One request with 10 points still evaluates all 10 (cap only
+        // limits *coalescing*, not correctness).
+        let pts: Vec<Vec<f64>> = (0..10).map(|i| vec![0.1 * i as f64, 0.5]).collect();
+        let (vals, _) = svc.eval(pts).unwrap();
+        assert_eq!(vals.len(), 10);
+        drop(svc);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn property_batch_reply_partition() {
+        // Property: for any request-size pattern, each client's reply
+        // has exactly its own length and matches the oracle.
+        forall("service reply partition", 10, |g| {
+            let (svc, handle) = spawn_rosen(
+                2,
+                ServiceConfig { max_batch: g.size(16), max_wait: Duration::from_micros(300) },
+            );
+            let f = Rosenbrock::new(2);
+            let n_clients = g.size(5);
+            let mut joins = Vec::new();
+            for c in 0..n_clients {
+                let svc = svc.clone();
+                let k = 1 + (c % 3);
+                joins.push(std::thread::spawn(move || -> std::result::Result<(), String> {
+                    let pts: Vec<Vec<f64>> =
+                        (0..k).map(|i| vec![0.3 + 0.1 * c as f64, 0.2 + 0.1 * i as f64]).collect();
+                    let f = Rosenbrock::new(2);
+                    let (vals, _) = svc.eval(pts.clone()).map_err(|e| e.to_string())?;
+                    if vals.len() != k {
+                        return Err(format!("client {c}: got {} values, want {k}", vals.len()));
+                    }
+                    for (i, p) in pts.iter().enumerate() {
+                        if vals[i] != f.value(p) {
+                            return Err(format!("client {c}: wrong value at {i}"));
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            let _ = &f;
+            for j in joins {
+                j.join().map_err(|_| "client panicked".to_string())??;
+            }
+            drop(svc);
+            handle.join().map_err(|_| "worker panicked".to_string())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mso_runs_through_service() {
+        use crate::optim::lbfgsb::LbfgsbOptions;
+        use crate::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+        let (svc, handle) = spawn_rosen(3, ServiceConfig::default());
+        let cfg = MsoConfig { bounds: vec![(0.0, 3.0); 3], lbfgsb: LbfgsbOptions::default() };
+        let x0s = vec![vec![2.0; 3], vec![0.5; 3]];
+        let res = run_mso(MsoStrategy::Dbe, &svc, &x0s, &cfg).unwrap();
+        assert!(res.best_f < 1e-6);
+        drop(svc);
+        handle.join().unwrap();
+    }
+}

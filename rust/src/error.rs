@@ -1,0 +1,70 @@
+//! Crate-wide error type (std-only; no `thiserror`/`eyre` offline).
+
+use std::fmt;
+
+/// Unified error for all dbe-bo layers.
+#[derive(Debug)]
+pub enum Error {
+    /// Linear-algebra failure (e.g. Cholesky of a non-PD matrix).
+    Linalg(String),
+    /// Optimizer failure (line search, invalid bounds, NaN objective).
+    Optim(String),
+    /// GP model failure (degenerate data, fit divergence).
+    Gp(String),
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// Configuration / CLI error.
+    Config(String),
+    /// Coordinator/channel failure.
+    Coordinator(String),
+    /// I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Linalg(m) => write!(f, "linalg error: {m}"),
+            Error::Optim(m) => write!(f, "optimizer error: {m}"),
+            Error::Gp(m) => write!(f, "gp error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(Error::Linalg("x".into()).to_string().contains("linalg"));
+        assert!(Error::Optim("x".into()).to_string().contains("optimizer"));
+        assert!(Error::Gp("x".into()).to_string().contains("gp"));
+        assert!(Error::Runtime("x".into()).to_string().contains("runtime"));
+        assert!(Error::Config("x".into()).to_string().contains("config"));
+        assert!(Error::Coordinator("x".into()).to_string().contains("coordinator"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("missing"));
+    }
+}

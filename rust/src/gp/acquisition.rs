@@ -1,0 +1,322 @@
+//! LogEI acquisition (Ament et al. 2023) with analytic input-gradients.
+//!
+//! For minimization BO with incumbent `f*` (standardized):
+//! `EI(x) = σ(x)·h(z)`, `z = (f* − μ(x))/σ(x)`, `h(z) = φ(z) + zΦ(z)`,
+//! `LogEI = log σ + log h(z)`.
+//!
+//! Gradient (chain rule, with `∇σ = ∇σ²/(2σ)`):
+//! `∇EI = −Φ(z)∇μ + φ(z)∇σ`  ⇒
+//! `∇LogEI = (−Φ(z)∇μ + φ(z)∇σ) / (σ h(z))`,
+//! computed through the stable ratios of [`super::stats::ei_grad_ratios`].
+
+use super::regressor::{GpRegressor, Posterior};
+use super::stats::{ei_grad_ratios, log_h};
+
+/// LogEI over a fitted GP. Values/gradients are for the
+/// **negated** acquisition (−LogEI), so the MSO machinery can minimize.
+pub struct LogEi<'a> {
+    gp: &'a GpRegressor,
+    /// Incumbent in standardized space.
+    f_best: f64,
+}
+
+impl<'a> LogEi<'a> {
+    pub fn new(gp: &'a GpRegressor) -> Self {
+        LogEi { gp, f_best: gp.best_y_std() }
+    }
+
+    /// Override the incumbent (tests / artifact parity checks).
+    pub fn with_incumbent(gp: &'a GpRegressor, f_best: f64) -> Self {
+        LogEi { gp, f_best }
+    }
+
+    pub fn incumbent(&self) -> f64 {
+        self.f_best
+    }
+
+    /// (−LogEI, ∇(−LogEI)) from a posterior evaluation.
+    pub fn neg_logei_from_posterior(&self, p: &Posterior) -> (f64, Vec<f64>) {
+        let sigma = p.var.sqrt();
+        let z = (self.f_best - p.mean) / sigma;
+        let logei = sigma.ln() + log_h(z);
+
+        let (cdf_ratio, pdf_ratio) = ei_grad_ratios(z);
+        // ∇LogEI = (−Φ/h·∇μ + φ/h·∇σ) / σ, ∇σ = ∇σ²/(2σ)
+        let inv_sigma = 1.0 / sigma;
+        let grad: Vec<f64> = p
+            .dmean
+            .iter()
+            .zip(&p.dvar)
+            .map(|(dm, dv)| {
+                let dsigma = 0.5 * dv * inv_sigma;
+                -(-cdf_ratio * dm + pdf_ratio * dsigma) * inv_sigma
+            })
+            .collect();
+        (-logei, grad)
+    }
+
+    /// Batched (−LogEI, ∇): one GP batch pass + cheap per-point math.
+    pub fn eval_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+        let posts = self.gp.posterior_batch(qs);
+        let mut vals = Vec::with_capacity(qs.len());
+        let mut grads = Vec::with_capacity(qs.len());
+        for p in &posts {
+            let (v, g) = self.neg_logei_from_posterior(p);
+            vals.push(v);
+            grads.push(g);
+        }
+        (vals, grads)
+    }
+
+    /// Raw (unnegated) LogEI at one point (reporting convenience).
+    pub fn logei(&self, q: &[f64]) -> f64 {
+        -self.eval_batch(std::slice::from_ref(&q.to_vec())).0[0]
+    }
+}
+
+/// Lower-confidence bound `LCB(x) = μ(x) − β·σ(x)` (the minimization
+/// twin of UCB), with analytic gradients. Simpler and cheaper than
+/// LogEI; included as an alternative acquisition for the library and
+/// for acquisition-choice ablations.
+pub struct Lcb<'a> {
+    gp: &'a GpRegressor,
+    pub beta: f64,
+}
+
+impl<'a> Lcb<'a> {
+    pub fn new(gp: &'a GpRegressor, beta: f64) -> Self {
+        Lcb { gp, beta }
+    }
+
+    /// Batched (LCB, ∇LCB) — already minimization-oriented.
+    pub fn eval_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+        let posts = self.gp.posterior_batch(qs);
+        let mut vals = Vec::with_capacity(qs.len());
+        let mut grads = Vec::with_capacity(qs.len());
+        for p in &posts {
+            let sigma = p.var.sqrt();
+            vals.push(p.mean - self.beta * sigma);
+            let c = self.beta / (2.0 * sigma);
+            grads.push(
+                p.dmean.iter().zip(&p.dvar).map(|(dm, dv)| dm - c * dv).collect(),
+            );
+        }
+        (vals, grads)
+    }
+}
+
+/// Log probability of improvement `log PI(x) = log Φ(z)`,
+/// `z = (f* − μ)/σ`, stable in the tail via `log h`-style handling.
+/// Negated for minimization like [`LogEi`].
+pub struct LogPi<'a> {
+    gp: &'a GpRegressor,
+    f_best: f64,
+}
+
+impl<'a> LogPi<'a> {
+    pub fn new(gp: &'a GpRegressor) -> Self {
+        LogPi { gp, f_best: gp.best_y_std() }
+    }
+
+    /// Batched (−logPI, ∇).
+    pub fn eval_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+        use super::stats::{cdf_over_pdf, log_normal_pdf, normal_cdf};
+        let posts = self.gp.posterior_batch(qs);
+        let mut vals = Vec::with_capacity(qs.len());
+        let mut grads = Vec::with_capacity(qs.len());
+        for p in &posts {
+            let sigma = p.var.sqrt();
+            let z = (self.f_best - p.mean) / sigma;
+            // log Φ(z): direct above z = −1; φ·Mills below (no underflow).
+            let (log_cdf, pdf_over_cdf) = if z > -1.0 {
+                let cdf = normal_cdf(z);
+                (cdf.ln(), (log_normal_pdf(z).exp()) / cdf)
+            } else {
+                let t = cdf_over_pdf(z); // Φ/φ
+                (log_normal_pdf(z) + t.ln(), 1.0 / t)
+            };
+            vals.push(-log_cdf);
+            // ∇(−logΦ(z)) = −(φ/Φ)·∇z, ∇z = (−∇μ − z∇σ)/σ.
+            let inv_sigma = 1.0 / sigma;
+            grads.push(
+                p.dmean
+                    .iter()
+                    .zip(&p.dvar)
+                    .map(|(dm, dv)| {
+                        let dsigma = 0.5 * dv * inv_sigma;
+                        pdf_over_cdf * (dm + z * dsigma) * inv_sigma
+                    })
+                    .collect(),
+            );
+        }
+        (vals, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::kernel::GpParams;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_allclose, fd_gradient};
+
+    fn fitted_gp(seed: u64) -> GpRegressor {
+        let mut rng = Pcg64::seeded(seed);
+        let x: Vec<Vec<f64>> = (0..15).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let y: Vec<f64> = x.iter().map(|p| (p[0] - 0.3).powi(2) + (p[1] - 0.7).powi(2)).collect();
+        GpRegressor::fit(x, &y, GpParams::default()).unwrap()
+    }
+
+    /// GP with appreciable noise so σ(x) (and hence z) stays O(1):
+    /// near-interpolating fits drive z to ±1e5 where central differences
+    /// are meaningless and the FD comparison would only test FD failure.
+    fn noisy_gp(seed: u64) -> GpRegressor {
+        let mut rng = Pcg64::seeded(seed);
+        let x: Vec<Vec<f64>> = (0..15).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let y: Vec<f64> = x.iter().map(|p| (p[0] - 0.3).powi(2) + (p[1] - 0.7).powi(2)).collect();
+        let params = GpParams {
+            log_len: (0.4f64).ln(),
+            log_sf2: 0.0,
+            log_noise: (3e-2f64).ln(),
+        };
+        GpRegressor::with_params(x, &y, params).unwrap()
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        let gp = noisy_gp(1);
+        let acq = LogEi::new(&gp);
+        for q in [vec![0.5, 0.5], vec![0.31, 0.69], vec![0.9, 0.1]] {
+            let (_, g) = {
+                let (v, gs) = acq.eval_batch(std::slice::from_ref(&q));
+                (v[0], gs[0].clone())
+            };
+            let gfd = fd_gradient(
+                &|v| acq.eval_batch(std::slice::from_ref(&v.to_vec())).0[0],
+                &q,
+                1e-6,
+            );
+            assert_allclose(&g, &gfd, 1e-3);
+        }
+    }
+
+    #[test]
+    fn finite_even_when_ei_underflows() {
+        // Probe right on top of the incumbent where plain EI ≈ 0: LogEI
+        // must stay finite (the whole point of the log formulation).
+        let gp = fitted_gp(2);
+        let acq = LogEi::new(&gp);
+        // Training point with the minimum y — z is deeply negative there.
+        let best_idx = (0..gp.n_train())
+            .min_by(|&a, &b| {
+                gp.train_y_std()[a].partial_cmp(&gp.train_y_std()[b]).unwrap()
+            })
+            .unwrap();
+        let q = gp.train_x()[best_idx].clone();
+        let (v, g) = {
+            let (vs, gs) = acq.eval_batch(std::slice::from_ref(&q));
+            (vs[0], gs[0].clone())
+        };
+        assert!(v.is_finite(), "neg-logEI not finite at incumbent: {v}");
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prefers_unexplored_over_known_bad() {
+        let gp = fitted_gp(3);
+        let acq = LogEi::new(&gp);
+        // A far corner (unexplored, high σ) should have higher LogEI
+        // than a point on top of a known-bad observation.
+        let worst_idx = (0..gp.n_train())
+            .max_by(|&a, &b| {
+                gp.train_y_std()[a].partial_cmp(&gp.train_y_std()[b]).unwrap()
+            })
+            .unwrap();
+        let bad = gp.train_x()[worst_idx].clone();
+        let good_logei = acq.logei(&[0.31, 0.69]); // near the basin
+        let bad_logei = acq.logei(&bad);
+        assert!(good_logei > bad_logei, "{good_logei} !> {bad_logei}");
+    }
+
+    #[test]
+    fn lcb_gradient_matches_fd() {
+        let gp = noisy_gp(5);
+        let acq = Lcb::new(&gp, 2.0);
+        let q = vec![0.45, 0.55];
+        let (_, g) = acq.eval_batch(std::slice::from_ref(&q));
+        let gfd = fd_gradient(
+            &|v| acq.eval_batch(std::slice::from_ref(&v.to_vec())).0[0],
+            &q,
+            1e-6,
+        );
+        assert_allclose(&g[0], &gfd, 1e-4);
+    }
+
+    #[test]
+    fn lcb_beta_zero_is_posterior_mean() {
+        let gp = noisy_gp(6);
+        let acq = Lcb::new(&gp, 0.0);
+        let q = vec![0.3, 0.3];
+        let (v, _) = acq.eval_batch(std::slice::from_ref(&q));
+        let p = gp.posterior(&q);
+        assert!((v[0] - p.mean).abs() < 1e-14);
+    }
+
+    #[test]
+    fn logpi_gradient_matches_fd_and_is_finite_in_tail() {
+        let gp = noisy_gp(7);
+        let acq = LogPi::new(&gp);
+        let q = vec![0.52, 0.48];
+        let (_, g) = acq.eval_batch(std::slice::from_ref(&q));
+        let gfd = fd_gradient(
+            &|v| acq.eval_batch(std::slice::from_ref(&v.to_vec())).0[0],
+            &q,
+            1e-6,
+        );
+        assert_allclose(&g[0], &gfd, 1e-3);
+        // Tail: directly on a training point (z deep negative) stays finite.
+        let qt = gp.train_x()[0].clone();
+        let (v, gt) = acq.eval_batch(std::slice::from_ref(&qt));
+        assert!(v[0].is_finite());
+        assert!(gt[0].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn ei_prefers_lower_lcb_regions_roughly() {
+        // Sanity cross-check between acquisitions: the LogEI argmin and
+        // the LCB argmin over a probe grid should sit in the same basin.
+        let gp = noisy_gp(8);
+        let ei = LogEi::new(&gp);
+        let lcb = Lcb::new(&gp, 2.0);
+        let mut best_ei = (f64::INFINITY, 0usize);
+        let mut best_lcb = (f64::INFINITY, 0usize);
+        let mut rng = crate::rng::Pcg64::seeded(3);
+        let grid: Vec<Vec<f64>> = (0..100).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let (ev, _) = ei.eval_batch(&grid);
+        let (lv, _) = lcb.eval_batch(&grid);
+        for i in 0..grid.len() {
+            if ev[i] < best_ei.0 {
+                best_ei = (ev[i], i);
+            }
+            if lv[i] < best_lcb.0 {
+                best_lcb = (lv[i], i);
+            }
+        }
+        let d: f64 = crate::linalg::sqdist(&grid[best_ei.1], &grid[best_lcb.1]).sqrt();
+        assert!(d < 0.6, "acquisition argmins far apart: {d}");
+    }
+
+    #[test]
+    fn batch_matches_single_eval() {
+        let gp = fitted_gp(4);
+        let acq = LogEi::new(&gp);
+        let mut rng = Pcg64::seeded(11);
+        let qs: Vec<Vec<f64>> = (0..6).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let (vals, grads) = acq.eval_batch(&qs);
+        for (i, q) in qs.iter().enumerate() {
+            let (v1, g1) = acq.eval_batch(std::slice::from_ref(q));
+            assert_eq!(vals[i], v1[0]);
+            assert_eq!(grads[i], g1[0]);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! Matérn-5/2 covariance (the paper's GP kernel) with analytic
+//! derivatives w.r.t. inputs and (log-)hyperparameters.
+
+use crate::linalg::{sqdist, Matrix};
+
+/// GP hyperparameters, stored in log space (the space the MLL is
+/// optimized in; unconstrained-ish inside generous log bounds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpParams {
+    /// log lengthscale ℓ.
+    pub log_len: f64,
+    /// log signal variance σ_f².
+    pub log_sf2: f64,
+    /// log noise variance σ_n².
+    pub log_noise: f64,
+}
+
+impl Default for GpParams {
+    fn default() -> Self {
+        // Sensible defaults for unit-cube inputs / standardized targets.
+        GpParams { log_len: (0.3f64).ln(), log_sf2: 0.0, log_noise: (1e-4f64).ln() }
+    }
+}
+
+impl GpParams {
+    pub fn lengthscale(&self) -> f64 {
+        self.log_len.exp()
+    }
+
+    pub fn signal_var(&self) -> f64 {
+        self.log_sf2.exp()
+    }
+
+    pub fn noise_var(&self) -> f64 {
+        self.log_noise.exp()
+    }
+
+    /// Pack into the optimizer vector (order: ℓ, σ_f², σ_n²).
+    pub fn to_vec(&self) -> Vec<f64> {
+        vec![self.log_len, self.log_sf2, self.log_noise]
+    }
+
+    pub fn from_slice(v: &[f64]) -> Self {
+        GpParams { log_len: v[0], log_sf2: v[1], log_noise: v[2] }
+    }
+
+    /// Box bounds used when fitting (unit-cube inputs assumed).
+    ///
+    /// The noise floor of 1e-6 (BoTorch uses 1e-4) bounds the kernel
+    /// condition number: below it, near-interpolating fits make the
+    /// posterior-variance cancellation `σ_f² − k*ᵀK⁻¹k*` numerically
+    /// meaningless in ANY engine (see rust/tests/pjrt_parity.rs).
+    pub fn fit_bounds() -> Vec<(f64, f64)> {
+        vec![
+            ((1e-3f64).ln(), (1e2f64).ln()),  // lengthscale
+            ((1e-3f64).ln(), (1e3f64).ln()),  // signal variance
+            ((1e-6f64).ln(), (1e0f64).ln()),  // noise variance
+        ]
+    }
+}
+
+const SQRT5: f64 = 2.23606797749979;
+
+/// Hard cutoff on the scaled distance `a·r`: beyond this the kernel is
+/// < 5e-131 — numerically invisible — but letting `exp(−ar)` underflow
+/// into subnormals costs 10–100× in every downstream GEMM (measured in
+/// EXPERIMENTS.md §Perf: 33× on the PJRT acquisition path with fitted
+/// short lengthscales). Exact zeros are fast; subnormals are not.
+const AR_CUTOFF: f64 = 300.0;
+
+/// Matérn-5/2: `k(r) = σ_f² (1 + ar + a²r²/3) e^{−ar}`, `a = √5/ℓ`.
+#[derive(Clone, Copy, Debug)]
+pub struct Matern52 {
+    pub sf2: f64,
+    /// a = √5 / ℓ
+    pub a: f64,
+}
+
+impl Matern52 {
+    pub fn new(params: &GpParams) -> Self {
+        Matern52 { sf2: params.signal_var(), a: SQRT5 / params.lengthscale() }
+    }
+
+    /// k(x, x′).
+    #[inline]
+    pub fn eval(&self, x: &[f64], xp: &[f64]) -> f64 {
+        self.eval_r(sqdist(x, xp).sqrt())
+    }
+
+    /// k as a function of the distance r.
+    #[inline]
+    pub fn eval_r(&self, r: f64) -> f64 {
+        let ar = self.a * r;
+        if ar > AR_CUTOFF {
+            return 0.0;
+        }
+        self.sf2 * (1.0 + ar + ar * ar / 3.0) * (-ar).exp()
+    }
+
+    /// ∂k/∂x (gradient w.r.t. the *first* argument). Smooth at r = 0:
+    /// `∂k/∂x = −(σ² a²/3)(1 + ar) e^{−ar} (x − x′)`.
+    pub fn grad_x(&self, x: &[f64], xp: &[f64]) -> Vec<f64> {
+        let c = self.grad_coeff(sqdist(x, xp).sqrt());
+        x.iter().zip(xp).map(|(xi, xpi)| c * (xi - xpi)).collect()
+    }
+
+    /// The scalar factor `c(r)` with `∂k/∂x = c(r)·(x − x′)` — used by
+    /// the batched-gradient hot path to avoid recomputing exp per
+    /// coordinate.
+    #[inline]
+    pub fn grad_coeff(&self, r: f64) -> f64 {
+        let ar = self.a * r;
+        if ar > AR_CUTOFF {
+            return 0.0;
+        }
+        -(self.sf2 * self.a * self.a / 3.0) * (1.0 + ar) * (-ar).exp()
+    }
+
+    /// ∂k/∂(log ℓ) as a function of r:
+    /// `σ² (a²/3) r² (1 + ar) e^{−ar}`.
+    #[inline]
+    pub fn dk_dlog_len(&self, r: f64) -> f64 {
+        let ar = self.a * r;
+        if ar > AR_CUTOFF {
+            return 0.0;
+        }
+        self.sf2 * (self.a * self.a / 3.0) * r * r * (1.0 + ar) * (-ar).exp()
+    }
+
+    /// Noiseless kernel matrix over rows of `x` (n × n, symmetric).
+    pub fn matrix(&self, x: &[Vec<f64>]) -> Matrix {
+        let n = x.len();
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            k[(i, i)] = self.sf2;
+            for j in 0..i {
+                let v = self.eval(&x[i], &x[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+
+    /// Cross-covariance matrix k(Q, X): rows = queries, cols = train.
+    /// This is the O(B·n·D) hot spot the Pallas kernel (L1) implements;
+    /// the Rust version is the always-available native path.
+    pub fn cross_matrix(&self, queries: &[Vec<f64>], train: &[Vec<f64>]) -> Matrix {
+        let b = queries.len();
+        let n = train.len();
+        let mut k = Matrix::zeros(b, n);
+        for (qi, q) in queries.iter().enumerate() {
+            let row = k.row_mut(qi);
+            for (ti, t) in train.iter().enumerate() {
+                row[ti] = self.eval(q, t);
+            }
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, assert_close, fd_gradient};
+
+    fn kern() -> Matern52 {
+        Matern52::new(&GpParams { log_len: (0.7f64).ln(), log_sf2: (2.0f64).ln(), log_noise: 0.0 })
+    }
+
+    #[test]
+    fn value_at_zero_distance_is_signal_var() {
+        let k = kern();
+        let x = vec![0.3, 0.4];
+        assert_close(k.eval(&x, &x), 2.0, 1e-15);
+    }
+
+    #[test]
+    fn decreasing_in_distance_and_positive() {
+        let k = kern();
+        let mut prev = f64::INFINITY;
+        for i in 0..50 {
+            let r = i as f64 * 0.2;
+            let v = k.eval_r(r);
+            assert!(v > 0.0);
+            assert!(v < prev || i == 0);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn grad_x_matches_fd() {
+        let k = kern();
+        let xp = vec![0.1, 0.9, 0.5];
+        let x = vec![0.4, 0.2, 0.8];
+        let g = k.grad_x(&x, &xp);
+        let gfd = fd_gradient(&|y| k.eval(y, &xp), &x, 1e-6);
+        assert_allclose(&g, &gfd, 1e-6);
+    }
+
+    #[test]
+    fn grad_smooth_at_zero_distance() {
+        let k = kern();
+        let x = vec![0.5, 0.5];
+        let g = k.grad_x(&x, &x);
+        assert_allclose(&g, &[0.0, 0.0], 1e-15);
+    }
+
+    #[test]
+    fn dk_dlog_len_matches_fd() {
+        let r = 0.8;
+        let p0 = GpParams { log_len: (0.7f64).ln(), log_sf2: (2.0f64).ln(), log_noise: 0.0 };
+        let h = 1e-6;
+        let kp = Matern52::new(&GpParams { log_len: p0.log_len + h, ..p0 });
+        let km = Matern52::new(&GpParams { log_len: p0.log_len - h, ..p0 });
+        let fd = (kp.eval_r(r) - km.eval_r(r)) / (2.0 * h);
+        assert_close(Matern52::new(&p0).dk_dlog_len(r), fd, 1e-6);
+    }
+
+    #[test]
+    fn kernel_matrix_is_psd() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(33);
+        let x: Vec<Vec<f64>> = (0..12).map(|_| rng.uniform_vec(3, 0.0, 1.0)).collect();
+        let k = kern().matrix(&x);
+        // PSD check via jittered Cholesky (tiny jitter allowed).
+        assert!(crate::linalg::cholesky_jittered(&k).is_ok());
+    }
+
+    #[test]
+    fn cross_matrix_matches_pointwise() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(5);
+        let q: Vec<Vec<f64>> = (0..3).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let t: Vec<Vec<f64>> = (0..5).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let k = kern();
+        let m = k.cross_matrix(&q, &t);
+        for i in 0..3 {
+            for j in 0..5 {
+                assert_close(m[(i, j)], k.eval(&q[i], &t[j]), 1e-15);
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Native Gaussian-process stack: Matérn-5/2 kernel, exact inference,
+//! MLL hyperparameter fitting (via the in-tree L-BFGS-B), and the LogEI
+//! acquisition with analytic gradients.
+//!
+//! This is the always-available oracle behind
+//! [`crate::batcheval::NativeGpEvaluator`]. The AOT/PJRT pipeline
+//! (`python/compile` + [`crate::runtime`]) computes the *same* posterior
+//! and LogEI from precomputed `(L, α)` inputs; the parity between the
+//! two paths is tested in `rust/tests/pjrt_parity.rs`.
+
+pub mod acquisition;
+pub mod kernel;
+pub mod regressor;
+pub mod standardize;
+pub mod stats;
+
+pub use acquisition::{Lcb, LogEi, LogPi};
+pub use kernel::{GpParams, Matern52};
+pub use regressor::{mll_value_grad, GpRegressor, Posterior};
+pub use standardize::Standardizer;

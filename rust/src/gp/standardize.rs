@@ -1,0 +1,69 @@
+//! Target standardization (Optuna-GPSampler-style): the GP always sees
+//! zero-mean unit-variance targets; the BO loop works in raw units.
+
+/// y ↔ (y − μ)/σ transform.
+#[derive(Clone, Copy, Debug)]
+pub struct Standardizer {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Standardizer {
+    /// Fit to raw targets; degenerate (constant) data gets σ = 1 so the
+    /// transform stays invertible.
+    pub fn fit(y: &[f64]) -> Self {
+        assert!(!y.is_empty());
+        let n = y.len() as f64;
+        let mean = y.iter().sum::<f64>() / n;
+        let var = y.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        let std = if var > 1e-30 { var.sqrt() } else { 1.0 };
+        Standardizer { mean, std }
+    }
+
+    #[inline]
+    pub fn forward(&self, y: f64) -> f64 {
+        (y - self.mean) / self.std
+    }
+
+    #[inline]
+    pub fn inverse(&self, z: f64) -> f64 {
+        z * self.std + self.mean
+    }
+
+    pub fn forward_vec(&self, y: &[f64]) -> Vec<f64> {
+        y.iter().map(|&v| self.forward(v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn standardizes_to_zero_mean_unit_var() {
+        let y = vec![1.0, 2.0, 3.0, 4.0, 10.0];
+        let s = Standardizer::fit(&y);
+        let z = s.forward_vec(&y);
+        let mean: f64 = z.iter().sum::<f64>() / z.len() as f64;
+        let var: f64 = z.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / z.len() as f64;
+        assert_close(mean, 0.0, 1e-12);
+        assert_close(var, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn round_trip() {
+        let y = vec![-3.0, 0.5, 7.0];
+        let s = Standardizer::fit(&y);
+        for &v in &y {
+            assert_close(s.inverse(s.forward(v)), v, 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_data_does_not_blow_up() {
+        let s = Standardizer::fit(&[5.0, 5.0, 5.0]);
+        assert_eq!(s.std, 1.0);
+        assert_close(s.forward(5.0), 0.0, 1e-15);
+    }
+}

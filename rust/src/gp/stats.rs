@@ -1,0 +1,237 @@
+//! Gaussian special functions (std has no `erf`): machine-precision
+//! `erfc`/`erfcx` via power series + Lentz continued fraction, the
+//! normal pdf/cdf, and the numerically-stable `log h(z)` of
+//! LogEI (Ament et al. 2023), where `h(z) = φ(z) + z·Φ(z)`.
+
+use std::f64::consts::PI;
+
+const SQRT_PI: f64 = 1.772453850905516;
+const SQRT_2: f64 = std::f64::consts::SQRT_2;
+
+/// erf via its Maclaurin series; converges to machine precision for
+/// |x| ≤ 2 in ≤ ~40 terms.
+fn erf_series(x: f64) -> f64 {
+    let x2 = x * x;
+    let mut term = x;
+    let mut sum = x;
+    for n in 1..200 {
+        let nf = n as f64;
+        term *= -x2 / nf;
+        let add = term / (2.0 * nf + 1.0);
+        sum += add;
+        if add.abs() < 1e-17 * sum.abs().max(1e-300) {
+            break;
+        }
+    }
+    (2.0 / SQRT_PI) * sum
+}
+
+/// Continued fraction for `erfcx(x) = e^{x²} erfc(x)`, x ≥ 2 (Lentz).
+///
+/// erfc(x) = e^{−x²}/√π · 1/(x + ½/(x + 1/(x + 3/2/(x + 2/(x + …)))))
+fn erfcx_cf(x: f64) -> f64 {
+    debug_assert!(x >= 2.0);
+    let tiny = 1e-300;
+    let mut f = x;
+    let mut c = f;
+    let mut d = 0.0;
+    for k in 1..200 {
+        let a = k as f64 / 2.0; // ½, 1, 3/2, 2, …
+        // denominator b = x each level (the CF alternates but with this
+        // normalization every partial denominator is x).
+        d = x + a * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = x + a / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    1.0 / (SQRT_PI * f)
+}
+
+/// Complementary error function, |relative error| ≲ 1e-15.
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    if x < 2.0 {
+        1.0 - erf_series(x)
+    } else if x > 27.0 {
+        0.0 // underflows double precision (e^{-729})
+    } else {
+        erfcx_cf(x) * (-x * x).exp()
+    }
+}
+
+/// Scaled complementary error function `e^{x²} erfc(x)` (no underflow
+/// for large x). Defined for x ≥ 0 here (that's all the Mills ratio
+/// needs).
+pub fn erfcx(x: f64) -> f64 {
+    debug_assert!(x >= 0.0);
+    if x < 2.0 {
+        (x * x).exp() * (1.0 - erf_series(x))
+    } else {
+        erfcx_cf(x)
+    }
+}
+
+/// Standard normal pdf.
+#[inline]
+pub fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * PI).sqrt()
+}
+
+/// Standard normal cdf.
+#[inline]
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / SQRT_2)
+}
+
+/// Mills-type ratio `Φ(z)/φ(z)`, stable for z ≤ 0 via erfcx.
+pub fn cdf_over_pdf(z: f64) -> f64 {
+    if z >= 0.0 {
+        normal_cdf(z) / normal_pdf(z)
+    } else {
+        // Φ(z)/φ(z) = √(π/2) · erfcx(−z/√2)
+        (PI / 2.0).sqrt() * erfcx(-z / SQRT_2)
+    }
+}
+
+/// `log h(z)` with `h(z) = φ(z) + z Φ(z)` — the log of the unit-scale
+/// expected improvement (Ament et al. 2023). Stable over the whole real
+/// line; for z → −∞, `h(z) ~ φ(z)/z²`.
+pub fn log_h(z: f64) -> f64 {
+    if z > -1.0 {
+        // Direct: no cancellation here.
+        (normal_pdf(z) + z * normal_cdf(z)).ln()
+    } else {
+        // h = φ(z)(1 + z t), t = Φ/φ computed by erfcx; 1 + z t ∈ (0, 1)
+        // and is accurate because t is.
+        let t = cdf_over_pdf(z);
+        let one_plus_zt = 1.0 + z * t;
+        if one_plus_zt > 0.0 {
+            log_normal_pdf(z) + one_plus_zt.ln()
+        } else {
+            // Extreme tail: asymptotic h(z) ≈ φ(z)/z² (1 − 3/z² + 15/z⁴)
+            let iz2 = 1.0 / (z * z);
+            log_normal_pdf(z) - 2.0 * z.abs().ln()
+                + (1.0 - 3.0 * iz2 + 15.0 * iz2 * iz2).ln()
+        }
+    }
+}
+
+#[inline]
+pub fn log_normal_pdf(z: f64) -> f64 {
+    -0.5 * z * z - 0.5 * (2.0 * PI).ln()
+}
+
+/// The pair `(Φ(z)/h(z), φ(z)/h(z))` used by the LogEI gradient,
+/// computed stably in the log domain.
+pub fn ei_grad_ratios(z: f64) -> (f64, f64) {
+    let lh = log_h(z);
+    let log_phi = log_normal_pdf(z);
+    let pdf_ratio = (log_phi - lh).exp();
+    let cdf_ratio = if z >= -1.0 {
+        normal_cdf(z) / lh.exp()
+    } else {
+        // Φ/h = (Φ/φ)·(φ/h)
+        cdf_over_pdf(z) * pdf_ratio
+    };
+    (cdf_ratio, pdf_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn erfc_reference_values() {
+        // Reference values (Wolfram):
+        assert_close(erfc(0.0), 1.0, 1e-15);
+        assert_close(erfc(0.5), 0.4795001221869535, 1e-14);
+        assert_close(erfc(1.0), 0.15729920705028513, 1e-14);
+        assert_close(erfc(2.0), 0.004677734981063128, 1e-13);
+        assert_close(erfc(3.0), 2.209049699858544e-5, 1e-12);
+        assert_close(erfc(5.0), 1.5374597944280351e-12, 1e-10);
+        assert_close(erfc(-1.0), 2.0 - 0.15729920705028513, 1e-14);
+    }
+
+    #[test]
+    fn erfcx_matches_definition_and_large_x() {
+        for &x in &[0.1, 0.5, 1.0, 1.9] {
+            assert_close(erfcx(x), (x * x).exp() * erfc(x), 1e-13);
+        }
+        // Asymptotic: erfcx(x) ~ 1/(x√π)
+        assert_close(erfcx(50.0), 1.0 / (50.0 * SQRT_PI) * (1.0 - 0.5 / 2500.0), 1e-6);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry_and_values() {
+        assert_close(normal_cdf(0.0), 0.5, 1e-15);
+        assert_close(normal_cdf(1.0) + normal_cdf(-1.0), 1.0, 1e-14);
+        assert_close(normal_cdf(1.959963984540054), 0.975, 1e-12);
+    }
+
+    #[test]
+    fn log_h_matches_direct_in_easy_region() {
+        for &z in &[2.0, 0.5, 0.0, -0.5, -0.99] {
+            let direct = (normal_pdf(z) + z * normal_cdf(z)).ln();
+            assert_close(log_h(z), direct, 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_h_continuous_across_switches() {
+        // No jumps at the z = −1 region switch.
+        let a = log_h(-1.0 + 1e-9);
+        let b = log_h(-1.0 - 1e-9);
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn log_h_tail_asymptotic() {
+        // h(z) ≈ φ(z)/z² for very negative z.
+        let z = -20.0;
+        let approx = log_normal_pdf(z) - 2.0 * z.abs().ln();
+        assert!((log_h(z) - approx).abs() < 0.01, "{} vs {}", log_h(z), approx);
+        // And it must be finite far into the tail.
+        assert!(log_h(-100.0).is_finite());
+    }
+
+    #[test]
+    fn ei_grad_ratios_consistent_with_direct() {
+        for &z in &[1.0, 0.0, -0.9] {
+            let h = normal_pdf(z) + z * normal_cdf(z);
+            let (c, p) = ei_grad_ratios(z);
+            assert_close(c, normal_cdf(z) / h, 1e-10);
+            assert_close(p, normal_pdf(z) / h, 1e-10);
+        }
+        // Deep tail: Φ/h → z²/|z| ~ |z|, φ/h → z².
+        let (c, p) = ei_grad_ratios(-30.0);
+        assert_close(c, 30.0, 1e-2 * 30.0);
+        assert_close(p, 900.0, 1e-2 * 900.0);
+    }
+
+    #[test]
+    fn mills_ratio_positive_and_monotone() {
+        // Range capped where φ(z) stays normal (z ≲ 38): beyond that the
+        // ratio is +inf, which is correct but not comparable.
+        let mut prev = 0.0;
+        for i in 0..80 {
+            let z = -50.0 + i as f64;
+            let t = cdf_over_pdf(z);
+            assert!(t > 0.0);
+            assert!(t > prev, "Mills-type ratio must increase with z");
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # dbe-bo — Decoupled updates, Batched Evaluations for fast Bayesian optimization
+//!
+//! Production-quality reproduction of *"Batch Acquisition Function
+//! Evaluations and Decouple Optimizer Updates for Faster Bayesian
+//! Optimization"* (Irie, Watanabe, Onishi; 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a multi-start
+//!   acquisition optimizer with three interchangeable strategies
+//!   ([`optim::mso::SeqOpt`], [`optim::mso::Cbe`], [`optim::mso::Dbe`])
+//!   built on a from-scratch ask/tell L-BFGS-B ([`optim::lbfgsb`]), a
+//!   native Gaussian-process stack ([`gp`]), a BO study loop ([`bo`]),
+//!   and a thread-channel batching coordinator ([`coordinator`]).
+//! * **Layer 2 (JAX, build-time)** — GP posterior + LogEI value/grad
+//!   batched over restarts, AOT-lowered to HLO text per shape bucket
+//!   (`python/compile/model.py`).
+//! * **Layer 1 (Pallas, build-time)** — tiled Matérn-5/2 cross-covariance
+//!   kernel, the O(B·n·D) hot spot (`python/compile/kernels/`).
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT and exposes
+//! them as a [`batcheval::BatchAcqEvaluator`], so Python never runs on
+//! the request path.
+
+pub mod batcheval;
+pub mod bbob;
+pub mod benchx;
+pub mod bo;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod gp;
+pub mod linalg;
+pub mod optim;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+
+pub use error::{Error, Result};

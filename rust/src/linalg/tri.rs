@@ -1,0 +1,109 @@
+//! Triangular solves.
+
+use super::matrix::Matrix;
+
+/// Solve `L y = b` with `L` lower-triangular (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let s = super::dot(&row[..i], &y[..i]);
+        y[i] = (b[i] - s) / row[i];
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` with `L` lower-triangular (back substitution on the
+/// transpose, without materializing it).
+pub fn solve_lower_transpose(l: &Matrix, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(y.len(), n);
+    let mut x = y.to_vec();
+    for i in (0..n).rev() {
+        x[i] /= l[(i, i)];
+        let xi = x[i];
+        // Subtract the column below/behind: x[j] -= L[i][j-th? ]
+        // Lᵀ x = y  =>  for j < i: x[j] -= L[i][j] * x[i]
+        let row = l.row(i);
+        for j in 0..i {
+            x[j] -= row[j] * xi;
+        }
+    }
+    x
+}
+
+/// Solve `U x = b` with `U` upper-triangular (back substitution).
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    debug_assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let row = u.row(i);
+        let s = super::dot(&row[i + 1..], &x[i + 1..]);
+        x[i] = (b[i] - s) / row[i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_substitution() {
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let y = solve_lower(&l, &[4.0, 11.0]);
+        assert!((y[0] - 2.0).abs() < 1e-15);
+        assert!((y[1] - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn transpose_solve() {
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        // Lᵀ = [[2,1],[0,3]]; solve Lᵀ x = [5, 9] → x = [ (5-3)/2, 3 ] = [1, 3]
+        let x = solve_lower_transpose(&l, &[5.0, 9.0]);
+        assert!((x[0] - 1.0).abs() < 1e-15);
+        assert!((x[1] - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn upper_solve() {
+        let u = Matrix::from_rows(&[&[2.0, 1.0], &[0.0, 3.0]]);
+        let x = solve_upper(&u, &[5.0, 9.0]);
+        assert!((x[0] - 1.0).abs() < 1e-15);
+        assert!((x[1] - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn round_trip_random() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(3);
+        let n = 12;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..i {
+                l[(i, j)] = rng.normal() * 0.3;
+            }
+            l[(i, i)] = 1.0 + rng.uniform();
+        }
+        let x_true: Vec<f64> = rng.normal_vec(n);
+        // b = L (Lᵀ x)
+        let y = {
+            let mut y = vec![0.0; n];
+            for i in 0..n {
+                for j in i..n {
+                    y[i] += l[(j, i)] * x_true[j];
+                }
+            }
+            y
+        };
+        let b = l.matvec(&y);
+        let y2 = solve_lower(&l, &b);
+        let x = solve_lower_transpose(&l, &y2);
+        for (a, b) in x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! dbe-bo CLI — leader entrypoint.
+//!
+//! ```text
+//! dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [flags]
+//! dbe-bo bo    --objective rastrigin --dim 5 --strategy dbe [flags]
+//! dbe-bo mso   --objective rosenbrock --dim 5 --restarts 10 [flags]
+//! dbe-bo serve --objective rastrigin --dim 5 --workers 2 [flags]
+//! dbe-bo info
+//! ```
+
+use dbe_bo::bbob;
+use dbe_bo::bo::{Study, StudyConfig};
+use dbe_bo::cli::Args;
+use dbe_bo::config::BenchProtocol;
+use dbe_bo::coordinator::{BatchService, Router, ServiceConfig};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use dbe_bo::repro::{fig_convergence, fig_hessian, table_bench, Solver};
+use dbe_bo::rng::Pcg64;
+use dbe_bo::{Error, Result};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("repro") => cmd_repro(args),
+        Some("bo") => cmd_bo(args),
+        Some("mso") => cmd_mso(args),
+        Some("serve") => cmd_serve(args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dbe-bo — Decoupled QN updates + Batched acquisition Evaluations (D-BE)\n\
+         \n\
+         USAGE:\n\
+           dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [--fast|--paper] [--out DIR]\n\
+           dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe] [--trials N] [--seed S]\n\
+           dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe]\n\
+           dbe-bo serve --objective NAME --dim D [--workers K] [--studies M]\n\
+           dbe-bo info\n\
+         \n\
+         Repro targets regenerate every figure/table of the paper; see DESIGN.md §4."
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    println!("dbe-bo {}", env!("CARGO_PKG_VERSION"));
+    match dbe_bo::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    match dbe_bo::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => {
+            println!("artifacts: {} entries", m.entries.len());
+            for e in &m.entries {
+                println!("  {:?} dim={} n_pad={} batch={}", e.kind, e.dim, e.n_pad, e.batch);
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("repro needs a target (fig1..fig5, table1, table2)".into()))?
+        .clone();
+    let out_dir = args.get_str("out", "results");
+    let fast = args.has("fast");
+    let seed = args.get_u64("seed", 42)?;
+
+    match target.as_str() {
+        "fig1" | "fig3" | "fig4" => {
+            let (b, solver) = match target.as_str() {
+                "fig1" => (3, Solver::Lbfgsb { memory: 10 }),
+                "fig3" => (3, Solver::Bfgs),
+                _ => (10, Solver::Bfgs),
+            };
+            let cfg = fig_hessian::FigConfig {
+                b: args.get_usize("restarts", b)?,
+                d: args.get_usize("dim", 5)?,
+                solver,
+                seed,
+                out_dir: Some(out_dir),
+                label: target.clone(),
+            };
+            let r = fig_hessian::run(&cfg)?;
+            fig_hessian::report(&cfg, &r);
+        }
+        "fig2" | "fig5" => {
+            let solver = if target == "fig2" { Solver::Lbfgsb { memory: 10 } } else { Solver::Bfgs };
+            let cfg = fig_convergence::ConvConfig {
+                bs: args.get_usize_list("bs", &[1, 2, 5, 10])?,
+                d: args.get_usize("dim", 5)?,
+                solver,
+                runs_budget: args.get_usize("runs", if fast { 60 } else { 1000 })?,
+                max_iters: args.get_usize("iters", 150)?,
+                seed,
+                out_dir: Some(out_dir),
+                label: target.clone(),
+            };
+            let series = fig_convergence::run(&cfg)?;
+            fig_convergence::report(&cfg, &series);
+        }
+        "table1" => {
+            let protocol = BenchProtocol::from_args(args)?;
+            let results = table_bench::run(&protocol, &["rastrigin".to_string()])?;
+            table_bench::report("Table 1", &protocol, &results)?;
+        }
+        "table2" => {
+            let protocol = BenchProtocol::from_args(args)?;
+            let objectives = protocol.objectives.clone();
+            let results = table_bench::run(&protocol, &objectives)?;
+            table_bench::report("Table 2", &protocol, &results)?;
+        }
+        other => {
+            return Err(Error::Config(format!("unknown repro target '{other}'")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bo(args: &Args) -> Result<()> {
+    let name = args.get_str("objective", "rastrigin");
+    let dim = args.get_usize("dim", 5)?;
+    let seed = args.get_u64("seed", 0)?;
+    let strategy = MsoStrategy::parse(&args.get_str("strategy", "dbe"))?;
+    let objective = bbob::by_name(&name, dim, 1000 + dim as u64)?;
+    let cfg = StudyConfig {
+        dim,
+        bounds: objective.bounds(),
+        n_trials: args.get_usize("trials", 60)?,
+        n_startup: args.get_usize("startup", 10)?,
+        restarts: args.get_usize("restarts", 10)?,
+        strategy,
+        lbfgsb: LbfgsbOptions {
+            memory: 10,
+            pgtol: 1e-2,
+            ftol: 0.0,
+            max_iters: 200,
+            max_evals: 50_000,
+        },
+        fit_every: 1,
+    };
+    println!(
+        "BO on {name} (D={dim}) with {} — {} trials, B={}",
+        strategy.name(),
+        cfg.n_trials,
+        cfg.restarts
+    );
+    let mut study = Study::new(cfg, seed);
+    let t0 = std::time::Instant::now();
+    let best = study.optimize(|x| objective.value(x));
+    let wall = t0.elapsed();
+    println!(
+        "best value {:.6} (trial {}) | wall {:.2}s | acq-opt {:.2}s | gp-fit {:.2}s | median iters {:.1} | batches {} | points {}",
+        best.value,
+        best.trial,
+        wall.as_secs_f64(),
+        study.stats.acq_wall.as_secs_f64(),
+        study.stats.fit_wall.as_secs_f64(),
+        study.stats.median_iters(),
+        study.stats.n_batches,
+        study.stats.n_points,
+    );
+    if let Some(fopt) = objective.f_opt() {
+        println!("regret vs f_opt: {:.6}", best.value - fopt);
+    }
+    Ok(())
+}
+
+fn cmd_mso(args: &Args) -> Result<()> {
+    let name = args.get_str("objective", "rosenbrock");
+    let dim = args.get_usize("dim", 5)?;
+    let b = args.get_usize("restarts", 10)?;
+    let seed = args.get_u64("seed", 1)?;
+    let objective = bbob::by_name(&name, dim, 1000 + dim as u64)?;
+    let ev = dbe_bo::batcheval::SyntheticEvaluator::new(bbob::by_name(
+        &name,
+        dim,
+        1000 + dim as u64,
+    )?);
+    let mut rng = Pcg64::seeded(seed);
+    let bounds = objective.bounds();
+    let x0s: Vec<Vec<f64>> = (0..b).map(|_| rng.point_in_box(&bounds)).collect();
+    let cfg = MsoConfig {
+        bounds,
+        lbfgsb: LbfgsbOptions {
+            memory: 10,
+            pgtol: args.get_f64("pgtol", 1e-8)?,
+            ftol: 0.0,
+            max_iters: args.get_usize("iters", 200)?,
+            max_evals: 100_000,
+        },
+    };
+    let strategies: Vec<MsoStrategy> = match args.get_str("strategy", "all").as_str() {
+        "all" => MsoStrategy::all_with_ablations().to_vec(),
+        s => vec![MsoStrategy::parse(s)?],
+    };
+    println!("MSO on {name} (D={dim}, B={b})");
+    for strat in strategies {
+        let res = run_mso(strat, &ev, &x0s, &cfg)?;
+        println!(
+            "  {:<9} best {:>12.4e} | median iters {:>6.1} | batches {:>5} | points {:>6} | wall {:>8.2?}",
+            strat.name(),
+            res.best_f,
+            res.median_iters(),
+            res.n_batches,
+            res.n_points,
+            res.wall,
+        );
+    }
+    Ok(())
+}
+
+/// Demo of the coordination layer: several concurrent BO studies share
+/// routed batch-evaluation workers.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get_str("objective", "rastrigin");
+    let dim = args.get_usize("dim", 5)?;
+    let n_workers = args.get_usize("workers", 2)?;
+    let n_studies = args.get_usize("studies", 4)?;
+    let trials = args.get_usize("trials", 25)?;
+
+    println!("coordinator demo: {n_studies} concurrent studies on {name} (D={dim}), {n_workers} eval workers");
+    let mut workers = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n_workers {
+        let (svc, h) = BatchService::spawn(
+            Box::new(dbe_bo::batcheval::SyntheticEvaluator::new(bbob::by_name(
+                &name,
+                dim,
+                1000 + dim as u64,
+            )?)),
+            ServiceConfig::default(),
+        );
+        workers.push(svc);
+        handles.push(h);
+    }
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for s in 0..n_studies {
+        let name = name.clone();
+        // Each study thread gets its own Router handle over the SAME
+        // shared workers (mpsc senders clone; they are not Sync).
+        let worker_handles = workers.clone();
+        joins.push(std::thread::spawn(move || -> Result<f64> {
+            use dbe_bo::batcheval::BatchAcqEvaluator;
+            let router = Router::new(worker_handles)?;
+            let objective = bbob::by_name(&name, dim, 1000 + dim as u64)?;
+            let cfg = StudyConfig {
+                dim,
+                bounds: objective.bounds(),
+                n_trials: trials,
+                n_startup: 8,
+                restarts: 8,
+                strategy: MsoStrategy::Dbe,
+                ..StudyConfig::default()
+            };
+            let mut study = Study::new(cfg, 7000 + s as u64);
+            // Objective evaluations go through the routed, coalescing
+            // workers — the "expensive simulator behind a service"
+            // deployment shape.
+            let best = study.optimize(|x| {
+                router
+                    .eval_batch(std::slice::from_ref(&x.to_vec()))
+                    .expect("worker evaluation")
+                    .0[0]
+            });
+            Ok(best.value)
+        }));
+    }
+    let mut bests = Vec::new();
+    for j in joins {
+        bests.push(j.join().map_err(|_| Error::Coordinator("study panicked".into()))??);
+    }
+    println!("studies done in {:.2?}; best values: {bests:?}", t0.elapsed());
+    for (i, w) in workers.iter().enumerate() {
+        println!("worker {i}: {}", w.metrics.snapshot());
+    }
+    drop(workers);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}

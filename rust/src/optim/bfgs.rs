@@ -1,0 +1,433 @@
+//! Dense BFGS with gradient projection for box bounds (ask/tell).
+//!
+//! Used by the paper's Appendix B (Figs 3–5) to show that off-diagonal
+//! artifacts are not an artifact of *limited* memory: full-memory BFGS
+//! coupled across restarts exhibits them too. The dense inverse-Hessian
+//! approximation `H` is directly inspectable via [`Bfgs::h_matrix`].
+//!
+//! Bound handling: at each iteration the active set (coordinates at a
+//! bound whose gradient pushes outward) is frozen, the BFGS direction is
+//! computed on the free coordinates, and steps are clipped to the box —
+//! the standard projected-BFGS scheme, adequate for the paper's setting
+//! where the analysis happens near an interior optimum.
+
+use super::lbfgsb::linesearch::{SearchStatus, WolfeSearch};
+use crate::error::{Error, Result};
+use crate::linalg::{dot, norm_inf, Matrix};
+use crate::optim::{Ask, AskTellOptimizer, StopReason};
+
+/// BFGS options.
+#[derive(Clone, Copy, Debug)]
+pub struct BfgsOptions {
+    pub pgtol: f64,
+    pub ftol: f64,
+    pub max_iters: usize,
+    pub max_evals: usize,
+}
+
+impl Default for BfgsOptions {
+    fn default() -> Self {
+        BfgsOptions {
+            pgtol: 1e-5,
+            ftol: 1e7 * f64::EPSILON,
+            max_iters: 500,
+            max_evals: 20_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Phase {
+    Init,
+    LineSearch { dir: Vec<f64>, search: WolfeSearch, alpha_pending: f64 },
+    Done(StopReason),
+}
+
+/// Dense projected-BFGS solver.
+#[derive(Clone, Debug)]
+pub struct Bfgs {
+    opts: BfgsOptions,
+    bounds: Vec<(f64, f64)>,
+    /// Dense inverse-Hessian approximation.
+    h: Matrix,
+    /// Whether H has received at least one curvature update (before
+    /// that, it is the identity and we rescale on the first update).
+    h_initialized: bool,
+    x: Vec<f64>,
+    f: f64,
+    g: Vec<f64>,
+    best_x: Vec<f64>,
+    best_f: f64,
+    phase: Phase,
+    pending: Vec<f64>,
+    iters: usize,
+    evals: usize,
+    /// One steepest-descent restart allowed after a line-search failure
+    /// (mirrors the L-BFGS-B recovery).
+    restarted: bool,
+    /// Iteration count at the last H reset (stagnation detection).
+    iters_at_reset: usize,
+    /// Objective at the last H reset.
+    f_at_reset: f64,
+}
+
+impl Bfgs {
+    pub fn new(x0: Vec<f64>, bounds: Vec<(f64, f64)>, opts: BfgsOptions) -> Result<Self> {
+        if x0.len() != bounds.len() || x0.is_empty() {
+            return Err(Error::Optim("dimension mismatch or empty problem".into()));
+        }
+        for &(lo, hi) in &bounds {
+            if !(lo < hi) {
+                return Err(Error::Optim("invalid bounds".into()));
+            }
+        }
+        let n = x0.len();
+        let x: Vec<f64> =
+            x0.iter().zip(&bounds).map(|(v, &(lo, hi))| v.clamp(lo, hi)).collect();
+        Ok(Bfgs {
+            opts,
+            bounds,
+            h: Matrix::eye(n),
+            h_initialized: false,
+            pending: x.clone(),
+            x,
+            f: f64::INFINITY,
+            g: vec![0.0; n],
+            best_x: Vec::new(),
+            best_f: f64::INFINITY,
+            phase: Phase::Init,
+            iters: 0,
+            evals: 0,
+            restarted: false,
+            iters_at_reset: 0,
+            f_at_reset: f64::INFINITY,
+        })
+    }
+
+    /// The dense inverse-Hessian approximation (Figs 3–4).
+    pub fn h_matrix(&self) -> &Matrix {
+        &self.h
+    }
+
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        match self.phase {
+            Phase::Done(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    fn projected_grad_norm(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.x.len() {
+            let (lo, hi) = self.bounds[i];
+            let step = (self.x[i] - self.g[i]).clamp(lo, hi) - self.x[i];
+            m = m.max(step.abs());
+        }
+        m
+    }
+
+    /// Active coordinates: at a bound with the gradient pushing outward.
+    fn active_set(&self) -> Vec<bool> {
+        (0..self.x.len())
+            .map(|i| {
+                let (lo, hi) = self.bounds[i];
+                let span = (hi - lo).max(1e-300);
+                let at_lo = (self.x[i] - lo) <= 1e-12 * span;
+                let at_hi = (hi - self.x[i]) <= 1e-12 * span;
+                (at_lo && self.g[i] > 0.0) || (at_hi && self.g[i] < 0.0)
+            })
+            .collect()
+    }
+
+    fn start_iteration(&mut self) {
+        if self.projected_grad_norm() <= self.opts.pgtol {
+            self.phase = Phase::Done(StopReason::GradTol);
+            return;
+        }
+        // Stagnation recovery: a dense H corrupted by a long crawl
+        // through a curved valley (tiny accepted steps, skipped
+        // curvature updates) can stall progress entirely. If 40
+        // iterations since the last reset improved f by < 1%, drop the
+        // curvature and restart from steepest descent.
+        if self.iters >= self.iters_at_reset + 40 {
+            if self.f > self.f_at_reset - 0.01 * self.f_at_reset.abs().max(1e-12) {
+                self.h = Matrix::eye(self.x.len());
+                self.h_initialized = false;
+            }
+            self.iters_at_reset = self.iters;
+            self.f_at_reset = self.f;
+        }
+        if self.iters >= self.opts.max_iters {
+            self.phase = Phase::Done(StopReason::MaxIters);
+            return;
+        }
+        if self.evals >= self.opts.max_evals {
+            self.phase = Phase::Done(StopReason::MaxEvals);
+            return;
+        }
+
+        let active = self.active_set();
+        // Direction: d = −H g on free coords, 0 on active ones.
+        let mut g_masked = self.g.clone();
+        for (gi, &a) in g_masked.iter_mut().zip(&active) {
+            if a {
+                *gi = 0.0;
+            }
+        }
+        let mut dir: Vec<f64> = self.h.matvec(&g_masked).iter().map(|v| -v).collect();
+        for (di, &a) in dir.iter_mut().zip(&active) {
+            if a {
+                *di = 0.0;
+            }
+        }
+        let mut dg = dot(&dir, &self.g);
+        if dg >= 0.0 || norm_inf(&dir) < 1e-300 {
+            // Reset curvature, fall back to projected steepest descent.
+            self.h = Matrix::eye(self.x.len());
+            self.h_initialized = false;
+            dir = g_masked.iter().map(|v| -v).collect();
+            dg = dot(&dir, &self.g);
+            if dg >= 0.0 || norm_inf(&dir) < 1e-300 {
+                self.phase = Phase::Done(StopReason::GradTol);
+                return;
+            }
+        }
+
+        let mut alpha_max = f64::INFINITY;
+        for i in 0..dir.len() {
+            let (lo, hi) = self.bounds[i];
+            if dir[i] > 1e-300 {
+                alpha_max = alpha_max.min((hi - self.x[i]) / dir[i]);
+            } else if dir[i] < -1e-300 {
+                alpha_max = alpha_max.min((lo - self.x[i]) / dir[i]);
+            }
+        }
+        let alpha_max = alpha_max.max(1e-12);
+        let search = WolfeSearch::new(self.f, dg, 1.0f64.min(alpha_max), alpha_max);
+        let alpha_pending = match search.propose() {
+            SearchStatus::Evaluate(a) => a,
+            _ => unreachable!(),
+        };
+        self.pending = self.point_at(&dir, alpha_pending);
+        self.phase = Phase::LineSearch { dir, search, alpha_pending };
+    }
+
+    fn point_at(&self, dir: &[f64], alpha: f64) -> Vec<f64> {
+        self.x
+            .iter()
+            .zip(dir)
+            .zip(&self.bounds)
+            .map(|((xi, di), &(lo, hi))| (xi + alpha * di).clamp(lo, hi))
+            .collect()
+    }
+
+    fn bfgs_update(&mut self, s: &[f64], y: &[f64]) {
+        let sy = dot(s, y);
+        let yy = dot(y, y);
+        if !(sy.is_finite() && yy.is_finite()) || sy <= 2.2e-16 * yy {
+            return;
+        }
+        let n = s.len();
+        if !self.h_initialized {
+            // Scale the initial H to sᵀy/yᵀy (Nocedal & Wright 6.20).
+            let scale = sy / yy;
+            self.h = Matrix::eye(n);
+            for i in 0..n {
+                self.h[(i, i)] = scale;
+            }
+            self.h_initialized = true;
+        }
+        let rho = 1.0 / sy;
+        // H ← (I − ρ s yᵀ) H (I − ρ y sᵀ) + ρ s sᵀ
+        let hy = self.h.matvec(y); // H y
+        let yhy = dot(y, &hy);
+        // H ← H − ρ (s (Hy)ᵀ + (Hy) sᵀ) + ρ² yᵀHy s sᵀ + ρ s sᵀ
+        let c = rho * rho * yhy + rho;
+        for i in 0..n {
+            for j in 0..n {
+                self.h[(i, j)] += -rho * (s[i] * hy[j] + hy[i] * s[j]) + c * s[i] * s[j];
+            }
+        }
+    }
+
+    fn complete_iteration(&mut self, x_new: Vec<f64>, f_new: f64, g_new: Vec<f64>) {
+        let s: Vec<f64> = x_new.iter().zip(&self.x).map(|(a, b)| a - b).collect();
+        let y: Vec<f64> = g_new.iter().zip(&self.g).map(|(a, b)| a - b).collect();
+        self.bfgs_update(&s, &y);
+        let f_prev = self.f;
+        self.x = x_new;
+        self.f = f_new;
+        self.g = g_new;
+        self.iters += 1;
+        let denom = f_prev.abs().max(f_new.abs()).max(1.0);
+        if (f_prev - f_new) <= self.opts.ftol * denom {
+            self.phase = Phase::Done(StopReason::FTol);
+            return;
+        }
+        self.start_iteration();
+    }
+}
+
+impl AskTellOptimizer for Bfgs {
+    fn ask(&self) -> Ask {
+        match &self.phase {
+            Phase::Done(r) => Ask::Done(*r),
+            _ => Ask::Evaluate(self.pending.clone()),
+        }
+    }
+
+    fn tell(&mut self, f: f64, g: &[f64]) {
+        self.evals += 1;
+        if f.is_finite() && f < self.best_f {
+            self.best_f = f;
+            self.best_x = self.pending.clone();
+        }
+        match std::mem::replace(&mut self.phase, Phase::Done(StopReason::NumericalError)) {
+            Phase::Init => {
+                if !f.is_finite() || g.iter().any(|v| !v.is_finite()) {
+                    self.phase = Phase::Done(StopReason::NumericalError);
+                    return;
+                }
+                self.f = f;
+                self.g = g.to_vec();
+                self.start_iteration();
+            }
+            Phase::LineSearch { dir, mut search, alpha_pending } => {
+                let dphi = dot(g, &dir);
+                search.advance(f, dphi);
+                match search.propose() {
+                    SearchStatus::Evaluate(a) => {
+                        self.pending = self.point_at(&dir, a);
+                        self.phase = Phase::LineSearch { dir, search, alpha_pending: a };
+                    }
+                    SearchStatus::Done(a_acc) => {
+                        // Accept with the (f, g) just told if it matches,
+                        // otherwise finish at the evaluated point anyway —
+                        // dense BFGS is analysis-only; the simpler accept
+                        // suffices and keeps the trajectory deterministic.
+                        let a_use =
+                            if (a_acc - alpha_pending).abs() <= 1e-12 { a_acc } else { alpha_pending };
+                        let x_new = self.point_at(&dir, a_use);
+                        self.phase = Phase::Init;
+                        self.complete_iteration(x_new, f, g.to_vec());
+                    }
+                    SearchStatus::Failed => {
+                        if !self.restarted && self.h_initialized {
+                            // Reset curvature and retry once from
+                            // steepest descent before giving up.
+                            self.restarted = true;
+                            self.h = Matrix::eye(self.x.len());
+                            self.h_initialized = false;
+                            self.phase = Phase::Init; // placeholder
+                            self.start_iteration();
+                        } else {
+                            self.phase = Phase::Done(StopReason::LineSearchFailed);
+                        }
+                    }
+                }
+            }
+            done @ Phase::Done(_) => {
+                self.phase = done;
+            }
+        }
+    }
+
+    fn best_x(&self) -> &[f64] {
+        if self.best_x.is_empty() {
+            &self.x
+        } else {
+            &self.best_x
+        }
+    }
+
+    fn best_f(&self) -> f64 {
+        self.best_f
+    }
+
+    fn n_iters(&self) -> usize {
+        self.iters
+    }
+
+    fn n_evals(&self) -> usize {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bbob::{Objective, Rosenbrock};
+    use crate::optim::Ask;
+
+    fn run(opt: &mut Bfgs, f: impl Fn(&[f64]) -> (f64, Vec<f64>), cap: usize) -> StopReason {
+        for _ in 0..cap {
+            match opt.ask() {
+                Ask::Evaluate(x) => {
+                    let (v, g) = f(&x);
+                    opt.tell(v, &g);
+                }
+                Ask::Done(r) => return r,
+            }
+        }
+        panic!("no termination");
+    }
+
+    #[test]
+    fn quadratic_converges_in_few_iters() {
+        let mut opt =
+            Bfgs::new(vec![4.0, -3.0], vec![(-10.0, 10.0); 2], BfgsOptions::default()).unwrap();
+        let reason = run(
+            &mut opt,
+            |x| ((x[0] - 1.0).powi(2) + 2.0 * (x[1] - 2.0).powi(2),
+                 vec![2.0 * (x[0] - 1.0), 4.0 * (x[1] - 2.0)]),
+            500,
+        );
+        assert!(reason.is_converged(), "{reason:?}");
+        assert!((opt.best_x()[0] - 1.0).abs() < 1e-5);
+        assert!((opt.best_x()[1] - 2.0).abs() < 1e-5);
+        assert!(opt.n_iters() < 20);
+    }
+
+    #[test]
+    fn h_approaches_true_inverse_hessian_on_quadratic() {
+        // For f = ½xᵀAx, BFGS's H → A⁻¹ on the explored subspace.
+        let a = [2.0, 8.0];
+        let mut opt =
+            Bfgs::new(vec![3.0, 1.5], vec![(-10.0, 10.0); 2], BfgsOptions::default()).unwrap();
+        let _ = run(
+            &mut opt,
+            |x| (0.5 * (a[0] * x[0] * x[0] + a[1] * x[1] * x[1]),
+                 vec![a[0] * x[0], a[1] * x[1]]),
+            500,
+        );
+        let h = opt.h_matrix();
+        assert!((h[(0, 0)] - 1.0 / a[0]).abs() < 1e-2, "{:?}", h);
+        assert!((h[(1, 1)] - 1.0 / a[1]).abs() < 1e-2, "{:?}", h);
+    }
+
+    #[test]
+    fn rosenbrock_converges() {
+        let f = Rosenbrock::new(5);
+        let mut opt = Bfgs::new(vec![2.0, 0.5, 2.5, 0.3, 1.8], f.bounds(), BfgsOptions::default())
+            .unwrap();
+        let _ = run(&mut opt, |x| f.value_grad(x), 5000);
+        assert!(opt.best_f() < 1e-8, "f={}", opt.best_f());
+    }
+
+    #[test]
+    fn respects_active_bound() {
+        // Minimum at (5, 0) outside box x0 ∈ [0, 2].
+        let mut opt =
+            Bfgs::new(vec![1.0, 1.0], vec![(0.0, 2.0), (-2.0, 2.0)], BfgsOptions::default())
+                .unwrap();
+        let reason = run(
+            &mut opt,
+            |x| ((x[0] - 5.0).powi(2) + x[1] * x[1],
+                 vec![2.0 * (x[0] - 5.0), 2.0 * x[1]]),
+            500,
+        );
+        assert!(reason.is_converged(), "{reason:?}");
+        assert!((opt.best_x()[0] - 2.0).abs() < 1e-6);
+        assert!(opt.best_x()[1].abs() < 1e-6);
+    }
+}

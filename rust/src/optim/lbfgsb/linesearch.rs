@@ -1,0 +1,346 @@
+//! Resumable strong-Wolfe line search (Nocedal & Wright Algs 3.5/3.6).
+//!
+//! Implemented as an explicit state machine so the enclosing solver can
+//! be driven ask/tell: [`WolfeSearch::propose`] yields the next step
+//! size to evaluate, [`WolfeSearch::advance`] consumes `(φ(α), φ'(α))`
+//! and either requests another point or finishes.
+
+/// Line-search outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SearchStatus {
+    /// Evaluate φ and φ' at this step size next.
+    Evaluate(f64),
+    /// Finished: accepted step size.
+    Done(f64),
+    /// No acceptable point found.
+    Failed,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Phase {
+    Bracket,
+    Zoom,
+}
+
+/// Strong-Wolfe line search state.
+#[derive(Clone, Debug)]
+pub struct WolfeSearch {
+    c1: f64,
+    c2: f64,
+    phi0: f64,
+    dphi0: f64,
+    alpha_max: f64,
+    max_evals: usize,
+    evals: usize,
+    phase: Phase,
+    /// Previous trial in the bracketing phase.
+    alpha_prev: f64,
+    phi_prev: f64,
+    dphi_prev: f64,
+    /// Current pending trial step.
+    alpha_cur: f64,
+    /// Zoom interval: (lo, phi_lo, dphi_lo) and hi end.
+    alpha_lo: f64,
+    phi_lo: f64,
+    dphi_lo: f64,
+    alpha_hi: f64,
+    phi_hi: f64,
+    dphi_hi: f64,
+    /// Best Armijo-satisfying point seen (fallback accept).
+    best_armijo: Option<(f64, f64)>,
+    status: SearchStatus,
+}
+
+impl WolfeSearch {
+    /// Start a search given φ(0), φ'(0) < 0, a first trial step, and the
+    /// largest feasible step.
+    pub fn new(phi0: f64, dphi0: f64, alpha_init: f64, alpha_max: f64) -> Self {
+        let alpha0 = alpha_init.min(alpha_max).max(1e-16);
+        WolfeSearch {
+            c1: 1e-4,
+            c2: 0.9,
+            phi0,
+            dphi0,
+            alpha_max,
+            max_evals: 25,
+            evals: 0,
+            phase: Phase::Bracket,
+            alpha_prev: 0.0,
+            phi_prev: phi0,
+            dphi_prev: dphi0,
+            alpha_cur: alpha0,
+            alpha_lo: 0.0,
+            phi_lo: phi0,
+            dphi_lo: dphi0,
+            alpha_hi: 0.0,
+            phi_hi: 0.0,
+            dphi_hi: 0.0,
+            best_armijo: None,
+            status: SearchStatus::Evaluate(alpha0),
+        }
+    }
+
+    /// Current request.
+    pub fn propose(&self) -> SearchStatus {
+        self.status
+    }
+
+    fn armijo_ok(&self, alpha: f64, phi: f64) -> bool {
+        phi <= self.phi0 + self.c1 * alpha * self.dphi0
+    }
+
+    fn curvature_ok(&self, dphi: f64) -> bool {
+        dphi.abs() <= self.c2 * self.dphi0.abs()
+    }
+
+    /// Consume `(φ(α), φ'(α))` for the pending trial.
+    pub fn advance(&mut self, phi: f64, dphi: f64) {
+        let alpha = match self.status {
+            SearchStatus::Evaluate(a) => a,
+            _ => return,
+        };
+        self.evals += 1;
+
+        if !phi.is_finite() || !dphi.is_finite() {
+            // Step into a non-finite region: shrink hard toward 0.
+            if self.evals >= self.max_evals {
+                self.finish_fallback();
+                return;
+            }
+            self.alpha_cur = alpha * 0.1;
+            if self.alpha_cur < 1e-16 {
+                self.finish_fallback();
+                return;
+            }
+            self.status = SearchStatus::Evaluate(self.alpha_cur);
+            return;
+        }
+
+        if self.armijo_ok(alpha, phi) {
+            match self.best_armijo {
+                Some((_, best_phi)) if best_phi <= phi => {}
+                _ => self.best_armijo = Some((alpha, phi)),
+            }
+        }
+
+        if self.evals >= self.max_evals {
+            self.finish_fallback();
+            return;
+        }
+
+        match self.phase {
+            Phase::Bracket => self.advance_bracket(alpha, phi, dphi),
+            Phase::Zoom => self.advance_zoom(alpha, phi, dphi),
+        }
+    }
+
+    fn advance_bracket(&mut self, alpha: f64, phi: f64, dphi: f64) {
+        let first = self.evals == 1;
+        if !self.armijo_ok(alpha, phi) || (!first && phi >= self.phi_prev) {
+            // Bracketed between previous (good) and current (bad).
+            self.enter_zoom(self.alpha_prev, self.phi_prev, self.dphi_prev, alpha, phi, dphi);
+            return;
+        }
+        if self.curvature_ok(dphi) {
+            self.status = SearchStatus::Done(alpha);
+            return;
+        }
+        if dphi >= 0.0 {
+            // Went past a minimizer: bracket reversed.
+            self.enter_zoom(alpha, phi, dphi, self.alpha_prev, self.phi_prev, self.dphi_prev);
+            return;
+        }
+        if (alpha - self.alpha_max).abs() < 1e-15 || alpha >= self.alpha_max {
+            // Pinned at the feasible limit with Armijo satisfied: accept.
+            // Standard for bound-constrained searches — the step cannot
+            // grow, and sufficient decrease holds.
+            self.status = SearchStatus::Done(alpha);
+            return;
+        }
+        // Extrapolate.
+        self.alpha_prev = alpha;
+        self.phi_prev = phi;
+        self.dphi_prev = dphi;
+        self.alpha_cur = (2.0 * alpha).min(self.alpha_max);
+        self.status = SearchStatus::Evaluate(self.alpha_cur);
+    }
+
+    fn enter_zoom(
+        &mut self,
+        a_lo: f64,
+        p_lo: f64,
+        d_lo: f64,
+        a_hi: f64,
+        p_hi: f64,
+        d_hi: f64,
+    ) {
+        self.phase = Phase::Zoom;
+        self.alpha_lo = a_lo;
+        self.phi_lo = p_lo;
+        self.dphi_lo = d_lo;
+        self.alpha_hi = a_hi;
+        self.phi_hi = p_hi;
+        self.dphi_hi = d_hi;
+        self.propose_zoom_point();
+    }
+
+    fn propose_zoom_point(&mut self) {
+        let (a, b) = (self.alpha_lo, self.alpha_hi);
+        if (a - b).abs() < 1e-16 * (1.0 + a.abs()) {
+            self.finish_fallback();
+            return;
+        }
+        // Cubic interpolation using (phi, dphi) at both ends; fall back
+        // to bisection when the cubic is degenerate or outside a safe
+        // interior band (10% margins).
+        let trial = cubic_min(a, self.phi_lo, self.dphi_lo, b, self.phi_hi, self.dphi_hi)
+            .filter(|t| {
+                let lo = a.min(b);
+                let hi = a.max(b);
+                let margin = 0.1 * (hi - lo);
+                *t > lo + margin && *t < hi - margin
+            })
+            .unwrap_or_else(|| 0.5 * (a + b));
+        self.alpha_cur = trial;
+        self.status = SearchStatus::Evaluate(trial);
+    }
+
+    fn advance_zoom(&mut self, alpha: f64, phi: f64, dphi: f64) {
+        if !self.armijo_ok(alpha, phi) || phi >= self.phi_lo {
+            self.alpha_hi = alpha;
+            self.phi_hi = phi;
+            self.dphi_hi = dphi;
+        } else {
+            if self.curvature_ok(dphi) {
+                self.status = SearchStatus::Done(alpha);
+                return;
+            }
+            if dphi * (self.alpha_hi - self.alpha_lo) >= 0.0 {
+                self.alpha_hi = self.alpha_lo;
+                self.phi_hi = self.phi_lo;
+                self.dphi_hi = self.dphi_lo;
+            }
+            self.alpha_lo = alpha;
+            self.phi_lo = phi;
+            self.dphi_lo = dphi;
+        }
+        self.propose_zoom_point();
+    }
+
+    /// Accept the best Armijo point if any, else fail.
+    fn finish_fallback(&mut self) {
+        self.status = match self.best_armijo {
+            Some((alpha, _)) => SearchStatus::Done(alpha),
+            None => SearchStatus::Failed,
+        };
+    }
+}
+
+/// Minimizer of the cubic interpolant through `(a, fa, da)` and
+/// `(b, fb, db)`; `None` when degenerate.
+fn cubic_min(a: f64, fa: f64, da: f64, b: f64, fb: f64, db: f64) -> Option<f64> {
+    let d1 = da + db - 3.0 * (fa - fb) / (a - b);
+    let disc = d1 * d1 - da * db;
+    if disc < 0.0 {
+        return None;
+    }
+    let d2 = disc.sqrt() * (b - a).signum();
+    let denom = db - da + 2.0 * d2;
+    if denom.abs() < 1e-300 {
+        return None;
+    }
+    let t = b - (b - a) * (db + d2 - d1) / denom;
+    t.is_finite().then_some(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the search on an analytic φ.
+    fn run(
+        mut ls: WolfeSearch,
+        phi: impl Fn(f64) -> f64,
+        dphi: impl Fn(f64) -> f64,
+    ) -> SearchStatus {
+        for _ in 0..100 {
+            match ls.propose() {
+                SearchStatus::Evaluate(a) => ls.advance(phi(a), dphi(a)),
+                done => return done,
+            }
+        }
+        panic!("line search did not terminate");
+    }
+
+    #[test]
+    fn quadratic_accepts_near_minimizer() {
+        // φ(α) = (α − 1)², φ(0)=1, φ'(0)=−2; exact minimizer α=1.
+        let ls = WolfeSearch::new(1.0, -2.0, 1.0, 1e3);
+        match run(ls, |a| (a - 1.0).powi(2), |a| 2.0 * (a - 1.0)) {
+            SearchStatus::Done(alpha) => {
+                // α=1 satisfies both conditions immediately.
+                assert!((alpha - 1.0).abs() < 1e-12);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wolfe_conditions_hold_on_nasty_function() {
+        // φ(α) = −α/(α²+2): shallow descent then rise.
+        let phi = |a: f64| -a / (a * a + 2.0);
+        let dphi = |a: f64| -(2.0 - a * a) / (a * a + 2.0).powi(2);
+        let (phi0, dphi0) = (phi(0.0), dphi(0.0));
+        let ls = WolfeSearch::new(phi0, dphi0, 1.0, 1e6);
+        match run(ls, phi, dphi) {
+            SearchStatus::Done(alpha) => {
+                assert!(phi(alpha) <= phi0 + 1e-4 * alpha * dphi0, "armijo");
+                assert!(dphi(alpha).abs() <= 0.9 * dphi0.abs(), "curvature");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_step_accepts_alpha_max() {
+        // Strong descent direction but tiny feasible step: accept α_max.
+        let phi = |a: f64| -a;
+        let dphi = |_: f64| -1.0;
+        let ls = WolfeSearch::new(0.0, -1.0, 1.0, 0.25);
+        match run(ls, phi, dphi) {
+            SearchStatus::Done(alpha) => assert!((alpha - 0.25).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_finite_region_shrinks_and_recovers() {
+        // φ blows up past α = 0.5 but is a nice quadratic before.
+        let phi = |a: f64| if a > 0.5 { f64::NAN } else { (a - 0.3).powi(2) };
+        let dphi = |a: f64| if a > 0.5 { f64::NAN } else { 2.0 * (a - 0.3) };
+        let ls = WolfeSearch::new(0.09, -0.6, 1.0, 1e3);
+        match run(ls, phi, dphi) {
+            SearchStatus::Done(alpha) => assert!(alpha <= 0.5),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ascent_only_fails() {
+        // φ strictly increasing: no Armijo point exists for descent dphi0
+        // claim; search must fail rather than loop.
+        let phi = |a: f64| a;
+        let dphi = |_: f64| 1.0;
+        let ls = WolfeSearch::new(0.0, -1.0, 1.0, 1e3);
+        assert_eq!(run(ls, phi, dphi), SearchStatus::Failed);
+    }
+
+    #[test]
+    fn cubic_min_hits_quadratic_minimizer() {
+        // On a quadratic the cubic interpolant is exact.
+        let f = |x: f64| (x - 2.0).powi(2);
+        let d = |x: f64| 2.0 * (x - 2.0);
+        let t = cubic_min(0.0, f(0.0), d(0.0), 5.0, f(5.0), d(5.0)).unwrap();
+        assert!((t - 2.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,304 @@
+//! Limited-memory store and the compact representation of the L-BFGS
+//! Hessian approximation `B = θI − W M Wᵀ` (Byrd–Nocedal–Schnabel 1994).
+
+use crate::linalg::{dot, Matrix};
+use std::collections::VecDeque;
+
+/// Limited-memory curvature pairs `(s_i, y_i)` with the precomputed
+/// compact-form blocks needed by the Cauchy-point search and the
+/// subspace minimization.
+#[derive(Clone, Debug)]
+pub struct LMemory {
+    /// Memory size m.
+    pub m: usize,
+    /// Problem dimension n.
+    pub n: usize,
+    /// s_i = x_{k+1} − x_k, oldest first.
+    s: VecDeque<Vec<f64>>,
+    /// y_i = g_{k+1} − g_k, oldest first.
+    y: VecDeque<Vec<f64>>,
+    /// Scaling θ = yᵀy / sᵀy of the newest accepted pair.
+    pub theta: f64,
+    /// M = middle-matrix⁻¹, shape (2m̂, 2m̂); `None` when empty.
+    m_inv: Option<Matrix>,
+    /// Cached sᵢᵀyⱼ inner products (m̂ × m̂, row = s index, col = y index).
+    sy: Matrix,
+    /// Cached sᵢᵀsⱼ inner products.
+    ss: Matrix,
+}
+
+impl LMemory {
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(m >= 1);
+        LMemory {
+            m,
+            n,
+            s: VecDeque::with_capacity(m),
+            y: VecDeque::with_capacity(m),
+            theta: 1.0,
+            m_inv: None,
+            sy: Matrix::zeros(0, 0),
+            ss: Matrix::zeros(0, 0),
+        }
+    }
+
+    /// Number of stored pairs m̂ ≤ m.
+    pub fn len(&self) -> usize {
+        self.s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.s.is_empty()
+    }
+
+    /// Drop all pairs (used on line-search failure restarts).
+    pub fn reset(&mut self) {
+        self.s.clear();
+        self.y.clear();
+        self.theta = 1.0;
+        self.m_inv = None;
+        self.sy = Matrix::zeros(0, 0);
+        self.ss = Matrix::zeros(0, 0);
+    }
+
+    /// Try to accept a new curvature pair. Rejected (returning `false`)
+    /// when `sᵀy ≤ eps·‖y‖²`, the BLNZ positive-curvature guard.
+    pub fn update(&mut self, s: Vec<f64>, y: Vec<f64>) -> bool {
+        debug_assert_eq!(s.len(), self.n);
+        debug_assert_eq!(y.len(), self.n);
+        let sy = dot(&s, &y);
+        let yy = dot(&y, &y);
+        if !(sy.is_finite() && yy.is_finite()) || sy <= 2.2e-16 * yy {
+            return false;
+        }
+        if self.s.len() == self.m {
+            self.s.pop_front();
+            self.y.pop_front();
+        }
+        self.s.push_back(s);
+        self.y.push_back(y);
+        self.theta = yy / sy;
+        self.recompute_blocks();
+        true
+    }
+
+    fn recompute_blocks(&mut self) {
+        let k = self.len();
+        let mut sy = Matrix::zeros(k, k);
+        let mut ss = Matrix::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                sy[(i, j)] = dot(&self.s[i], &self.y[j]);
+            }
+            for j in 0..=i {
+                let v = dot(&self.s[i], &self.s[j]);
+                ss[(i, j)] = v;
+                ss[(j, i)] = v;
+            }
+        }
+        // Middle matrix of the compact form:
+        //   M_mid = [ −D   Lᵀ  ]
+        //           [  L   θSᵀS ]
+        // with D = diag(sᵢᵀyᵢ), L strictly-lower part of SᵀY.
+        let mut mid = Matrix::zeros(2 * k, 2 * k);
+        for i in 0..k {
+            mid[(i, i)] = -sy[(i, i)];
+        }
+        for i in 0..k {
+            for j in 0..k {
+                if i > j {
+                    // L[i][j] = sᵢᵀyⱼ, i > j
+                    mid[(k + i, j)] = sy[(i, j)];
+                    mid[(j, k + i)] = sy[(i, j)];
+                }
+            }
+        }
+        for i in 0..k {
+            for j in 0..k {
+                mid[(k + i, k + j)] = self.theta * ss[(i, j)];
+            }
+        }
+        self.sy = sy;
+        self.ss = ss;
+        self.m_inv = Some(mid.inverse().expect(
+            "compact middle matrix is invertible when all pairs satisfy the curvature condition",
+        ));
+    }
+
+    /// Wᵀ v, with W = [Y θS] (result has length 2m̂: Yᵀv then θSᵀv).
+    pub fn wt_vec(&self, v: &[f64]) -> Vec<f64> {
+        let k = self.len();
+        let mut out = vec![0.0; 2 * k];
+        for i in 0..k {
+            out[i] = dot(&self.y[i], v);
+            out[k + i] = self.theta * dot(&self.s[i], v);
+        }
+        out
+    }
+
+    /// W p (length n) for a coefficient vector p of length 2m̂.
+    pub fn w_vec(&self, p: &[f64]) -> Vec<f64> {
+        let k = self.len();
+        debug_assert_eq!(p.len(), 2 * k);
+        let mut out = vec![0.0; self.n];
+        for i in 0..k {
+            crate::linalg::axpy(p[i], &self.y[i], &mut out);
+            crate::linalg::axpy(self.theta * p[k + i], &self.s[i], &mut out);
+        }
+        out
+    }
+
+    /// Apply the inverted middle matrix: M_mid⁻¹ p.
+    pub fn m_inv_vec(&self, p: &[f64]) -> Vec<f64> {
+        match &self.m_inv {
+            Some(mi) => mi.matvec(p),
+            None => Vec::new(),
+        }
+    }
+
+    /// Hessian-approximation product `B v = θv − W M_mid⁻¹ Wᵀ v`.
+    pub fn b_vec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out: Vec<f64> = v.iter().map(|x| self.theta * x).collect();
+        if !self.is_empty() {
+            let p = self.m_inv_vec(&self.wt_vec(v));
+            let wp = self.w_vec(&p);
+            for (o, w) in out.iter_mut().zip(&wp) {
+                *o -= w;
+            }
+        }
+        out
+    }
+
+    /// Inverse-Hessian product `H v` via the standard two-loop recursion
+    /// with `H⁰ = (1/θ) I`.
+    pub fn h_vec(&self, v: &[f64]) -> Vec<f64> {
+        let k = self.len();
+        let mut q = v.to_vec();
+        let mut alpha = vec![0.0; k];
+        for i in (0..k).rev() {
+            let rho = 1.0 / self.sy[(i, i)];
+            alpha[i] = rho * dot(&self.s[i], &q);
+            crate::linalg::axpy(-alpha[i], &self.y[i], &mut q);
+        }
+        for qi in q.iter_mut() {
+            *qi /= self.theta;
+        }
+        for i in 0..k {
+            let rho = 1.0 / self.sy[(i, i)];
+            let beta = rho * dot(&self.y[i], &q);
+            crate::linalg::axpy(alpha[i] - beta, &self.s[i], &mut q);
+        }
+        q
+    }
+
+    /// Materialize the dense inverse-Hessian approximation `H` by
+    /// applying the two-loop recursion to each basis vector. O(n²m);
+    /// analysis-only (Figs 1/3/4).
+    pub fn dense_inverse_hessian(&self) -> Matrix {
+        let n = self.n;
+        let mut h = Matrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.h_vec(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                h[(i, j)] = col[i];
+            }
+        }
+        h.symmetrize();
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::assert_allclose;
+
+    fn random_memory(n: usize, m: usize, pairs: usize, seed: u64) -> LMemory {
+        let mut rng = Pcg64::seeded(seed);
+        let mut mem = LMemory::new(n, m);
+        let mut added = 0;
+        while added < pairs {
+            let s = rng.normal_vec(n);
+            // y with guaranteed positive curvature: y = A s for SPD-ish A.
+            let mut y: Vec<f64> = s.iter().map(|v| 2.0 * v).collect();
+            for yi in y.iter_mut() {
+                *yi += 0.1 * rng.normal();
+            }
+            if mem.update(s, y) {
+                added += 1;
+            }
+        }
+        mem
+    }
+
+    #[test]
+    fn rejects_negative_curvature() {
+        let mut mem = LMemory::new(3, 5);
+        let s = vec![1.0, 0.0, 0.0];
+        let y = vec![-1.0, 0.0, 0.0];
+        assert!(!mem.update(s, y));
+        assert!(mem.is_empty());
+    }
+
+    #[test]
+    fn memory_evicts_oldest() {
+        let mut mem = random_memory(4, 3, 5, 1);
+        assert_eq!(mem.len(), 3);
+        mem.reset();
+        assert!(mem.is_empty());
+    }
+
+    #[test]
+    fn b_and_h_are_inverses() {
+        // H (B v) == v must hold exactly in exact arithmetic for any v
+        // (both come from the same BFGS recursion).
+        let mem = random_memory(6, 10, 4, 2);
+        let mut rng = Pcg64::seeded(99);
+        for _ in 0..5 {
+            let v = rng.normal_vec(6);
+            let bv = mem.b_vec(&v);
+            let hbv = mem.h_vec(&bv);
+            assert_allclose(&hbv, &v, 1e-8);
+        }
+    }
+
+    #[test]
+    fn empty_memory_is_scaled_identity() {
+        let mem = LMemory::new(4, 5);
+        let v = vec![1.0, -2.0, 3.0, 0.5];
+        assert_allclose(&mem.b_vec(&v), &v, 1e-15);
+        assert_allclose(&mem.h_vec(&v), &v, 1e-15);
+    }
+
+    #[test]
+    fn secant_condition_holds() {
+        // After updating with (s, y), B s = y and H y = s.
+        let mem = random_memory(5, 10, 3, 3);
+        let s_last = mem.s.back().unwrap().clone();
+        let y_last = mem.y.back().unwrap().clone();
+        assert_allclose(&mem.b_vec(&s_last), &y_last, 1e-8);
+        assert_allclose(&mem.h_vec(&y_last), &s_last, 1e-8);
+    }
+
+    #[test]
+    fn dense_inverse_matches_h_vec() {
+        let mem = random_memory(5, 10, 4, 4);
+        let h = mem.dense_inverse_hessian();
+        let mut rng = Pcg64::seeded(7);
+        let v = rng.normal_vec(5);
+        assert_allclose(&h.matvec(&v), &mem.h_vec(&v), 1e-10);
+    }
+
+    #[test]
+    fn theta_is_rayleigh_quotient() {
+        let mut mem = LMemory::new(2, 4);
+        let s = vec![1.0, 0.0];
+        let y = vec![3.0, 0.0];
+        assert!(mem.update(s, y));
+        assert!((mem.theta - 3.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,91 @@
+//! Quasi-Newton optimization substrate.
+//!
+//! This module provides the solvers the paper's method is built on:
+//!
+//! * [`lbfgsb`] — a from-scratch L-BFGS-B (Byrd–Lu–Nocedal–Zhu 1995):
+//!   generalized Cauchy point, direct-primal subspace minimization,
+//!   strong-Wolfe line search, limited-memory compact representation —
+//!   exposed as an **ask/tell reverse-communication state machine**.
+//!   This is the Rust-native equivalent of the paper's coroutine trick:
+//!   because the caller drives the evaluation loop, batching evaluations
+//!   across independent optimizer instances (D-BE) needs no solver
+//!   changes.
+//! * [`bfgs`] — dense BFGS with gradient projection for box bounds
+//!   (Appendix B figures).
+//! * [`hessian`] — materializes the implicit inverse-Hessian
+//!   approximations for the off-diagonal-artifact analysis (Figs 1, 3, 4).
+//! * [`mso`] — the paper's contribution: multi-start optimization with
+//!   SEQ. OPT. / C-BE / D-BE strategies over a batched evaluator.
+
+pub mod bfgs;
+pub mod hessian;
+pub mod lbfgsb;
+pub mod mso;
+
+/// What an ask/tell optimizer wants next.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Ask {
+    /// Evaluate the objective and gradient at this point, then `tell`.
+    Evaluate(Vec<f64>),
+    /// The optimizer has terminated.
+    Done(StopReason),
+}
+
+/// Why an optimizer stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Projected-gradient ∞-norm below `pgtol` (the paper's criterion).
+    GradTol,
+    /// Relative objective decrease below `ftol`.
+    FTol,
+    /// Hit the iteration cap (the paper's 200-iteration cap).
+    MaxIters,
+    /// Hit the evaluation cap.
+    MaxEvals,
+    /// Line search could not make progress.
+    LineSearchFailed,
+    /// Objective or gradient became non-finite.
+    NumericalError,
+}
+
+impl StopReason {
+    /// Whether this is a "healthy" convergence (vs a cap/failure).
+    pub fn is_converged(self) -> bool {
+        matches!(self, StopReason::GradTol | StopReason::FTol)
+    }
+}
+
+/// Common ask/tell interface implemented by [`lbfgsb::Lbfgsb`] and
+/// [`bfgs::Bfgs`] so the MSO strategies and the Hessian analysis can be
+/// generic over the solver.
+pub trait AskTellOptimizer {
+    /// Current request: a point to evaluate, or `Done`.
+    fn ask(&self) -> Ask;
+    /// Supply `(f, grad)` for the most recent `Evaluate` point.
+    fn tell(&mut self, f: f64, g: &[f64]);
+    /// Best point found so far.
+    fn best_x(&self) -> &[f64];
+    /// Best objective value so far.
+    fn best_f(&self) -> f64;
+    /// Completed QN iterations (the paper's "Iters." column).
+    fn n_iters(&self) -> usize;
+    /// Objective/gradient evaluations consumed.
+    fn n_evals(&self) -> usize;
+    /// Whether the optimizer has terminated.
+    fn is_done(&self) -> bool {
+        matches!(self.ask(), Ask::Done(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_reason_classification() {
+        assert!(StopReason::GradTol.is_converged());
+        assert!(StopReason::FTol.is_converged());
+        assert!(!StopReason::MaxIters.is_converged());
+        assert!(!StopReason::LineSearchFailed.is_converged());
+    }
+}

@@ -1,0 +1,154 @@
+//! D-BE (paper Algorithm 1, [D-BE] branches): decoupled QN updates with
+//! batched evaluations — the proposed method.
+//!
+//! One ask/tell L-BFGS-B state per restart. Each outer step gathers the
+//! pending evaluation points of every *unconverged* restart, issues a
+//! single batched oracle call, and dispatches `(f_b, g_b)` back to each
+//! state — exactly the coroutine of §4, with the ask/tell state machine
+//! playing the role of the paused coroutine frame. Converged restarts
+//! drop out of the batch, shrinking it progressively (the paper's
+//! active-set pruning), so late iterations cost proportionally less.
+
+use super::{MsoConfig, MsoResult, RestartResult};
+use crate::batcheval::BatchAcqEvaluator;
+use crate::optim::lbfgsb::Lbfgsb;
+use crate::optim::{Ask, AskTellOptimizer};
+use crate::Result;
+
+/// Decoupled updates + batched evaluations.
+pub struct Dbe;
+
+impl Dbe {
+    pub fn run(
+        &self,
+        evaluator: &dyn BatchAcqEvaluator,
+        x0s: &[Vec<f64>],
+        cfg: &MsoConfig,
+    ) -> Result<MsoResult> {
+        let t0 = std::time::Instant::now();
+        let b = x0s.len();
+
+        // [D-BE] Initialize independent QN optimizers O_1 … O_B.
+        let mut opts: Vec<Lbfgsb> = x0s
+            .iter()
+            .map(|x0| Lbfgsb::new(x0.clone(), cfg.bounds.clone(), cfg.lbfgsb))
+            .collect::<Result<_>>()?;
+
+        // Active set A ⊆ {1..B} of unconverged restarts.
+        let mut active: Vec<usize> = (0..b).collect();
+        let mut reasons: Vec<Option<crate::optim::StopReason>> = vec![None; b];
+        let mut n_batches = 0usize;
+        let mut n_points = 0usize;
+
+        // Reused batch buffers: allocation here is per-outer-step, not
+        // per-point (hot-path discipline; see EXPERIMENTS.md §Perf).
+        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(b);
+        let mut idx: Vec<usize> = Vec::with_capacity(b);
+
+        while !active.is_empty() {
+            xs.clear();
+            idx.clear();
+            // Gather pending points; prune any restart that reports Done.
+            active.retain(|&i| match opts[i].ask() {
+                Ask::Evaluate(x) => {
+                    xs.push(x);
+                    idx.push(i);
+                    true
+                }
+                Ask::Done(r) => {
+                    reasons[i] = Some(r);
+                    false
+                }
+            });
+            if xs.is_empty() {
+                break;
+            }
+
+            // ▶ Batched Evaluation (one oracle call for all active restarts)
+            let (vals, grads) = evaluator.eval_batch(&xs)?;
+            n_batches += 1;
+            n_points += xs.len();
+
+            // ▶ Decoupled QN updates: each state sees only its own (f, g).
+            for (k, &i) in idx.iter().enumerate() {
+                opts[i].tell(vals[k], &grads[k]);
+            }
+        }
+
+        let restarts: Vec<RestartResult> = opts
+            .iter()
+            .enumerate()
+            .map(|(i, o)| RestartResult {
+                x: o.best_x().to_vec(),
+                f: o.best_f(),
+                iters: o.n_iters(),
+                reason: reasons[i].unwrap_or(crate::optim::StopReason::MaxEvals),
+            })
+            .collect();
+
+        Ok(MsoResult::from_restarts(restarts, n_batches, n_points, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::{CountingEvaluator, SyntheticEvaluator};
+    use crate::bbob::{Objective, Rosenbrock, Sphere};
+    use crate::optim::lbfgsb::LbfgsbOptions;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn batch_shrinks_as_restarts_converge() {
+        // Mix of easy (near-optimal start) and hard (far) restarts on a
+        // sphere: the easy ones converge first and must leave the batch.
+        struct RecordingEval {
+            inner: SyntheticEvaluator,
+            sizes: std::sync::Mutex<Vec<usize>>,
+        }
+        impl BatchAcqEvaluator for RecordingEval {
+            fn dim(&self) -> usize {
+                self.inner.dim()
+            }
+            fn eval_batch(&self, xs: &[Vec<f64>]) -> crate::Result<(Vec<f64>, Vec<Vec<f64>>)> {
+                self.sizes.lock().unwrap().push(xs.len());
+                self.inner.eval_batch(xs)
+            }
+        }
+
+        let d = 4;
+        let f = Rosenbrock::new(d);
+        let bounds = f.bounds();
+        let ev = RecordingEval {
+            inner: SyntheticEvaluator::new(Box::new(Rosenbrock::new(d))),
+            sizes: std::sync::Mutex::new(Vec::new()),
+        };
+        let x0s = vec![
+            vec![1.0 + 1e-8; d], // converges almost immediately
+            vec![2.9; d],        // long trek
+            vec![0.1; d],
+        ];
+        let cfg = MsoConfig { bounds, lbfgsb: LbfgsbOptions::default() };
+        let _ = Dbe.run(&ev, &x0s, &cfg).unwrap();
+        let sizes = ev.sizes.lock().unwrap();
+        assert_eq!(*sizes.first().unwrap(), 3, "starts with the full batch");
+        assert!(
+            *sizes.last().unwrap() < 3,
+            "batch must shrink as restarts converge: {sizes:?}"
+        );
+    }
+
+    #[test]
+    fn counts_are_consistent() {
+        let d = 3;
+        let ev = CountingEvaluator::new(SyntheticEvaluator::new(Box::new(Sphere::new(d, 1))));
+        let mut rng = Pcg64::seeded(2);
+        let x0s: Vec<Vec<f64>> = (0..5).map(|_| rng.uniform_vec(d, -5.0, 5.0)).collect();
+        let cfg = MsoConfig { bounds: vec![(-5.0, 5.0); d], lbfgsb: LbfgsbOptions::default() };
+        let res = Dbe.run(&ev, &x0s, &cfg).unwrap();
+        assert_eq!(res.n_points, ev.n_points());
+        assert_eq!(res.n_batches, ev.n_batches());
+        // Every batch holds at most B points.
+        assert!(res.n_points <= res.n_batches * 5);
+    }
+}

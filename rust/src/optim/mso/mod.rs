@@ -1,0 +1,305 @@
+//! Multi-start optimization (MSO) — the paper's contribution.
+//!
+//! Three interchangeable strategies over a [`BatchAcqEvaluator`]:
+//!
+//! * [`SeqOpt`] (Algorithm 2) — B independent L-BFGS-B runs, one point
+//!   evaluated per call. Gold-standard trajectories, no batching.
+//! * [`Cbe`] — BoTorch's *Coupled updates, Batched Evaluations*: one
+//!   L-BFGS-B over the concatenated `B·D`-dimensional summed objective
+//!   (eq. 1). Fast evaluations, but the shared QN state suffers
+//!   *off-diagonal artifacts* (§3) and converged restarts cannot be
+//!   detached.
+//! * [`Dbe`] (Algorithm 1, ours) — B independent ask/tell L-BFGS-B
+//!   states; per outer step the pending points of all *active* restarts
+//!   are evaluated in ONE batch and each state is told only its own
+//!   `(f, g)`. Trajectories are theoretically identical to SEQ. OPT.;
+//!   converged restarts are pruned from the batch (the paper's
+//!   active-set shrinking).
+
+mod cbe;
+mod cbe_blockdiag;
+mod dbe;
+mod seq;
+
+pub use cbe::Cbe;
+pub use cbe_blockdiag::CbeBlockDiag;
+pub use dbe::Dbe;
+pub use seq::SeqOpt;
+
+use crate::batcheval::BatchAcqEvaluator;
+use crate::optim::lbfgsb::LbfgsbOptions;
+use crate::optim::StopReason;
+use crate::Result;
+
+/// Which MSO strategy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsoStrategy {
+    SeqOpt,
+    Cbe,
+    Dbe,
+    /// Ablation: partitioned (block-diagonal) QN memory with C-BE's
+    /// shared line search — see [`CbeBlockDiag`].
+    CbeBlockDiag,
+}
+
+impl MsoStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            MsoStrategy::SeqOpt => "SEQ. OPT.",
+            MsoStrategy::Cbe => "C-BE",
+            MsoStrategy::Dbe => "D-BE",
+            MsoStrategy::CbeBlockDiag => "C-BE/BLK",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "seq" | "seq_opt" | "sequential" => MsoStrategy::SeqOpt,
+            "cbe" | "c_be" => MsoStrategy::Cbe,
+            "dbe" | "d_be" => MsoStrategy::Dbe,
+            "cbe_blk" | "c_be_blk" | "blockdiag" => MsoStrategy::CbeBlockDiag,
+            other => {
+                return Err(crate::Error::Config(format!("unknown strategy '{other}'")))
+            }
+        })
+    }
+
+    /// The paper's three strategies (Tables 1–2).
+    pub fn all() -> [MsoStrategy; 3] {
+        [MsoStrategy::SeqOpt, MsoStrategy::Cbe, MsoStrategy::Dbe]
+    }
+
+    /// All strategies including the ablation.
+    pub fn all_with_ablations() -> [MsoStrategy; 4] {
+        [
+            MsoStrategy::SeqOpt,
+            MsoStrategy::Cbe,
+            MsoStrategy::CbeBlockDiag,
+            MsoStrategy::Dbe,
+        ]
+    }
+}
+
+/// Per-restart outcome.
+#[derive(Clone, Debug)]
+pub struct RestartResult {
+    pub x: Vec<f64>,
+    pub f: f64,
+    /// QN iterations this restart consumed. For C-BE every restart
+    /// reports the shared coupled-optimizer iteration count (the paper's
+    /// Iters. accounting).
+    pub iters: usize,
+    pub reason: StopReason,
+}
+
+/// Outcome of one MSO run.
+#[derive(Clone, Debug)]
+pub struct MsoResult {
+    /// argmin over restarts.
+    pub best_x: Vec<f64>,
+    pub best_f: f64,
+    pub restarts: Vec<RestartResult>,
+    /// Batched evaluator invocations.
+    pub n_batches: usize,
+    /// Total points pushed through the evaluator.
+    pub n_points: usize,
+    /// Wall-clock of the whole MSO call.
+    pub wall: std::time::Duration,
+}
+
+impl MsoResult {
+    /// Median per-restart iteration count (the paper's Iters. column).
+    pub fn median_iters(&self) -> f64 {
+        let mut it: Vec<f64> = self.restarts.iter().map(|r| r.iters as f64).collect();
+        crate::benchx::median(&mut it)
+    }
+
+    fn from_restarts(
+        restarts: Vec<RestartResult>,
+        n_batches: usize,
+        n_points: usize,
+        wall: std::time::Duration,
+    ) -> Self {
+        let best = restarts
+            .iter()
+            .min_by(|a, b| a.f.partial_cmp(&b.f).unwrap_or(std::cmp::Ordering::Equal))
+            .expect("at least one restart");
+        MsoResult {
+            best_x: best.x.clone(),
+            best_f: best.f,
+            restarts: restarts.clone(),
+            n_batches,
+            n_points,
+            wall,
+        }
+    }
+}
+
+/// Common MSO configuration.
+#[derive(Clone, Debug)]
+pub struct MsoConfig {
+    /// Box bounds of the search space (dimension D implied).
+    pub bounds: Vec<(f64, f64)>,
+    /// L-BFGS-B options shared by every restart (paper: m=10,
+    /// pgtol=1e-2, max_iters=200).
+    pub lbfgsb: LbfgsbOptions,
+}
+
+/// Run the given strategy from the provided starting points.
+///
+/// This is the single entry point used by the BO loop, the benchmark
+/// harness, and the examples.
+pub fn run_mso(
+    strategy: MsoStrategy,
+    evaluator: &dyn BatchAcqEvaluator,
+    x0s: &[Vec<f64>],
+    cfg: &MsoConfig,
+) -> Result<MsoResult> {
+    if x0s.is_empty() {
+        return Err(crate::Error::Optim("MSO needs at least one starting point".into()));
+    }
+    if let Some(bad) = x0s.iter().find(|p| p.len() != cfg.bounds.len()) {
+        return Err(crate::Error::Optim(format!(
+            "starting point has dim {}, bounds have {}",
+            bad.len(),
+            cfg.bounds.len()
+        )));
+    }
+    match strategy {
+        MsoStrategy::SeqOpt => SeqOpt.run(evaluator, x0s, cfg),
+        MsoStrategy::Cbe => Cbe.run(evaluator, x0s, cfg),
+        MsoStrategy::Dbe => Dbe.run(evaluator, x0s, cfg),
+        MsoStrategy::CbeBlockDiag => CbeBlockDiag.run(evaluator, x0s, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::SyntheticEvaluator;
+    use crate::bbob::Rosenbrock;
+    use crate::rng::Pcg64;
+
+    fn rosen_eval(d: usize) -> SyntheticEvaluator {
+        SyntheticEvaluator::new(Box::new(Rosenbrock::new(d)))
+    }
+
+    fn starts(b: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..b).map(|_| rng.uniform_vec(d, 0.0, 3.0)).collect()
+    }
+
+    fn cfg(d: usize) -> MsoConfig {
+        MsoConfig { bounds: vec![(0.0, 3.0); d], lbfgsb: LbfgsbOptions::default() }
+    }
+
+    #[test]
+    fn all_strategies_solve_rosenbrock_mso() {
+        let d = 5;
+        let ev = rosen_eval(d);
+        let x0 = starts(4, d, 3);
+        for strat in MsoStrategy::all() {
+            let res = run_mso(strat, &ev, &x0, &cfg(d)).unwrap();
+            assert!(
+                res.best_f < 1e-6,
+                "{}: best_f = {}",
+                strat.name(),
+                res.best_f
+            );
+            assert_eq!(res.restarts.len(), 4);
+        }
+    }
+
+    #[test]
+    fn dbe_matches_seq_trajectories_exactly() {
+        // The paper's key claim: D-BE reproduces SEQ. OPT.'s per-restart
+        // results exactly when the evaluator is deterministic.
+        let d = 5;
+        let ev = rosen_eval(d);
+        let x0 = starts(6, d, 17);
+        let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0, &cfg(d)).unwrap();
+        let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0, &cfg(d)).unwrap();
+        for (a, b) in seq.restarts.iter().zip(&dbe.restarts) {
+            assert_eq!(a.x, b.x, "trajectory endpoints must be bitwise identical");
+            assert_eq!(a.f, b.f);
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.reason, b.reason);
+        }
+    }
+
+    #[test]
+    fn dbe_uses_fewer_batches_than_seq_uses_points() {
+        let d = 5;
+        let ev = crate::batcheval::CountingEvaluator::new(rosen_eval(d));
+        let x0 = starts(8, d, 5);
+        let res = run_mso(MsoStrategy::Dbe, &ev, &x0, &cfg(d)).unwrap();
+        // Batching: strictly fewer evaluator calls than points evaluated.
+        assert!(res.n_batches < res.n_points, "{} !< {}", res.n_batches, res.n_points);
+        assert_eq!(ev.n_batches(), res.n_batches);
+    }
+
+    #[test]
+    fn cbe_inflates_iterations_on_rosenbrock() {
+        // §3/Fig 2: C-BE needs substantially more QN iterations than
+        // SEQ. OPT. on Rosenbrock once B > 1. Run with tight tolerances
+        // so the iteration counts reflect convergence speed.
+        let d = 5;
+        let ev = rosen_eval(d);
+        let x0 = starts(10, d, 11);
+        let mut c = cfg(d);
+        c.lbfgsb.pgtol = 1e-8;
+        c.lbfgsb.max_iters = 1000;
+        let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0, &c).unwrap();
+        let cbe = run_mso(MsoStrategy::Cbe, &ev, &x0, &c).unwrap();
+        assert!(
+            cbe.median_iters() > 1.5 * seq.median_iters(),
+            "C-BE iters {} vs SEQ {}",
+            cbe.median_iters(),
+            seq.median_iters()
+        );
+    }
+
+    #[test]
+    fn empty_and_mismatched_starts_are_errors() {
+        let ev = rosen_eval(3);
+        assert!(run_mso(MsoStrategy::Dbe, &ev, &[], &cfg(3)).is_err());
+        let bad = vec![vec![0.5; 2]]; // dim 2 vs bounds dim 3
+        for strat in MsoStrategy::all_with_ablations() {
+            assert!(run_mso(strat, &ev, &bad, &cfg(3)).is_err(), "{}", strat.name());
+        }
+    }
+
+    #[test]
+    fn ablation_strategy_parses_and_runs() {
+        assert_eq!(
+            MsoStrategy::parse("blockdiag").unwrap(),
+            MsoStrategy::CbeBlockDiag
+        );
+        let ev = rosen_eval(3);
+        let x0 = starts(3, 3, 5);
+        let res = run_mso(MsoStrategy::CbeBlockDiag, &ev, &x0, &cfg(3)).unwrap();
+        assert!(res.best_f < 1e-5);
+    }
+
+    #[test]
+    fn strategy_parse_round_trip() {
+        assert_eq!(MsoStrategy::parse("seq").unwrap(), MsoStrategy::SeqOpt);
+        assert_eq!(MsoStrategy::parse("C-BE").unwrap(), MsoStrategy::Cbe);
+        assert_eq!(MsoStrategy::parse("d_be").unwrap(), MsoStrategy::Dbe);
+        assert!(MsoStrategy::parse("xx").is_err());
+    }
+
+    #[test]
+    fn single_restart_all_strategies_agree() {
+        // With B = 1 there is nothing to couple: all three strategies
+        // must produce identical results.
+        let d = 3;
+        let ev = rosen_eval(d);
+        let x0 = starts(1, d, 23);
+        let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0, &cfg(d)).unwrap();
+        let cbe = run_mso(MsoStrategy::Cbe, &ev, &x0, &cfg(d)).unwrap();
+        let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0, &cfg(d)).unwrap();
+        assert_eq!(seq.best_x, dbe.best_x);
+        assert_eq!(seq.best_x, cbe.best_x);
+    }
+}

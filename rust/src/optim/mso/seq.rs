@@ -1,0 +1,72 @@
+//! SEQ. OPT. (paper Algorithm 2): B independent sequential L-BFGS-B runs.
+
+use super::{MsoConfig, MsoResult, RestartResult};
+use crate::batcheval::BatchAcqEvaluator;
+use crate::optim::lbfgsb::Lbfgsb;
+use crate::optim::{Ask, AskTellOptimizer};
+use crate::Result;
+
+/// Sequential multi-start: the baseline every figure/table compares to.
+/// Each restart drives its own optimizer to termination, evaluating ONE
+/// point per oracle call — no batching anywhere.
+pub struct SeqOpt;
+
+impl SeqOpt {
+    pub fn run(
+        &self,
+        evaluator: &dyn BatchAcqEvaluator,
+        x0s: &[Vec<f64>],
+        cfg: &MsoConfig,
+    ) -> Result<MsoResult> {
+        let t0 = std::time::Instant::now();
+        let mut restarts = Vec::with_capacity(x0s.len());
+        let mut n_batches = 0usize;
+        let mut n_points = 0usize;
+
+        for x0 in x0s {
+            let mut opt = Lbfgsb::new(x0.clone(), cfg.bounds.clone(), cfg.lbfgsb)?;
+            let reason = loop {
+                match opt.ask() {
+                    Ask::Evaluate(x) => {
+                        let (vals, grads) = evaluator.eval_batch(std::slice::from_ref(&x))?;
+                        n_batches += 1;
+                        n_points += 1;
+                        opt.tell(vals[0], &grads[0]);
+                    }
+                    Ask::Done(r) => break r,
+                }
+            };
+            restarts.push(RestartResult {
+                x: opt.best_x().to_vec(),
+                f: opt.best_f(),
+                iters: opt.n_iters(),
+                reason,
+            });
+        }
+
+        Ok(MsoResult::from_restarts(restarts, n_batches, n_points, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::SyntheticEvaluator;
+    use crate::bbob::Rosenbrock;
+    use crate::optim::lbfgsb::LbfgsbOptions;
+
+    #[test]
+    fn every_point_is_its_own_batch() {
+        let ev = crate::batcheval::CountingEvaluator::new(SyntheticEvaluator::new(Box::new(
+            Rosenbrock::new(3),
+        )));
+        let cfg = MsoConfig {
+            bounds: vec![(0.0, 3.0); 3],
+            lbfgsb: LbfgsbOptions { max_iters: 20, ..Default::default() },
+        };
+        let x0s = vec![vec![0.5; 3], vec![2.0; 3]];
+        let res = SeqOpt.run(&ev, &x0s, &cfg).unwrap();
+        assert_eq!(res.n_batches, res.n_points, "SEQ never batches");
+        assert_eq!(ev.n_batches(), ev.n_points());
+    }
+}

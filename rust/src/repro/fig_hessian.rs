@@ -1,0 +1,265 @@
+//! Figures 1, 3, 4: off-diagonal artifacts in the inverse-Hessian
+//! approximation, SEQ. OPT. vs C-BE, on the Rosenbrock function.
+//!
+//! Reproduces the quantities behind each heatmap: the true (block-
+//! diagonal) inverse Hessian near the minimizer, the approximation each
+//! scheme's QN state holds at termination, the `e_rel` subtitle numbers,
+//! and the off-diagonal-block mass that the paper's colormaps visualize.
+//! Full matrices are dumped as CSV for external plotting.
+
+use super::Solver;
+use crate::bbob::{Objective, Rosenbrock};
+use crate::config::write_csv;
+use crate::linalg::Matrix;
+use crate::optim::bfgs::{Bfgs, BfgsOptions};
+use crate::optim::hessian::{block_diag, block_mass, relative_error, true_inverse_hessian_blockdiag};
+use crate::optim::lbfgsb::{Lbfgsb, LbfgsbOptions};
+use crate::optim::{Ask, AskTellOptimizer};
+use crate::rng::Pcg64;
+use crate::Result;
+
+/// Configuration for one artifact figure.
+#[derive(Clone, Debug)]
+pub struct FigConfig {
+    /// Restarts B (Fig 1/3: 3, Fig 4: 10).
+    pub b: usize,
+    /// Dimension D (paper: 5).
+    pub d: usize,
+    pub solver: Solver,
+    pub seed: u64,
+    /// Output directory for CSV matrices (None = don't write).
+    pub out_dir: Option<String>,
+    /// Figure label for filenames/prints.
+    pub label: String,
+}
+
+/// The numbers the paper reports per figure.
+#[derive(Clone, Debug)]
+pub struct FigResult {
+    pub e_rel_seq: f64,
+    pub e_rel_cbe: f64,
+    /// Fraction of squared mass in off-diagonal blocks.
+    pub off_frac_seq: f64,
+    pub off_frac_cbe: f64,
+    pub h_true: Matrix,
+    pub h_seq: Matrix,
+    pub h_cbe: Matrix,
+}
+
+/// Run one optimizer to termination on an analytic objective (ask/tell).
+fn drive<O: AskTellOptimizer>(
+    opt: &mut O,
+    f: &dyn Fn(&[f64]) -> (f64, Vec<f64>),
+    cap: usize,
+) {
+    for _ in 0..cap {
+        match opt.ask() {
+            Ask::Evaluate(x) => {
+                let (v, g) = f(&x);
+                opt.tell(v, &g);
+            }
+            Ask::Done(_) => return,
+        }
+    }
+}
+
+/// Final dense inverse-Hessian approximation of a per-restart run.
+fn run_single(solver: Solver, x0: &[f64], rosen: &Rosenbrock) -> (Matrix, Vec<f64>) {
+    let bounds = rosen.bounds();
+    let f = |x: &[f64]| rosen.value_grad(x);
+    match solver {
+        Solver::Lbfgsb { memory } => {
+            let opts = LbfgsbOptions {
+                memory,
+                pgtol: 1e-9,
+                ftol: 0.0,
+                max_iters: 500,
+                max_evals: 20_000,
+            };
+            let mut opt = Lbfgsb::new(x0.to_vec(), bounds, opts).unwrap();
+            drive(&mut opt, &f, 20_000);
+            (opt.memory().dense_inverse_hessian(), opt.current_x().to_vec())
+        }
+        Solver::Bfgs => {
+            let opts =
+                BfgsOptions { pgtol: 1e-9, ftol: 0.0, max_iters: 500, max_evals: 20_000 };
+            let mut opt = Bfgs::new(x0.to_vec(), bounds, opts).unwrap();
+            drive(&mut opt, &f, 20_000);
+            (opt.h_matrix().clone(), opt.best_x().to_vec())
+        }
+    }
+}
+
+/// Final dense inverse-Hessian approximation of the coupled (C-BE) run.
+fn run_coupled(solver: Solver, x0s: &[Vec<f64>], rosen: &Rosenbrock) -> (Matrix, Vec<Vec<f64>>) {
+    let b = x0s.len();
+    let d = rosen.dim();
+    let x0: Vec<f64> = x0s.iter().flatten().copied().collect();
+    let bounds: Vec<(f64, f64)> = rosen.bounds().into_iter().cycle().take(b * d).collect();
+    // α_sum over restart blocks (eq. 1).
+    let f = |x: &[f64]| {
+        let mut total = 0.0;
+        let mut g = vec![0.0; x.len()];
+        for (i, chunk) in x.chunks(d).enumerate() {
+            let (v, gc) = rosen.value_grad(chunk);
+            total += v;
+            g[i * d..(i + 1) * d].copy_from_slice(&gc);
+        }
+        (total, g)
+    };
+    match solver {
+        Solver::Lbfgsb { memory } => {
+            let opts = LbfgsbOptions {
+                memory,
+                pgtol: 1e-9,
+                ftol: 0.0,
+                max_iters: 500,
+                max_evals: 20_000,
+            };
+            let mut opt = Lbfgsb::new(x0, bounds, opts).unwrap();
+            drive(&mut opt, &f, 20_000);
+            let pts = opt.current_x().chunks(d).map(|c| c.to_vec()).collect();
+            (opt.memory().dense_inverse_hessian(), pts)
+        }
+        Solver::Bfgs => {
+            let opts =
+                BfgsOptions { pgtol: 1e-9, ftol: 0.0, max_iters: 500, max_evals: 20_000 };
+            let mut opt = Bfgs::new(x0, bounds, opts).unwrap();
+            drive(&mut opt, &f, 20_000);
+            let pts = opt.best_x().chunks(d).map(|c| c.to_vec()).collect();
+            (opt.h_matrix().clone(), pts)
+        }
+    }
+}
+
+fn dump_matrix(dir: &str, name: &str, m: &Matrix) -> Result<()> {
+    let rows: Vec<String> = (0..m.rows())
+        .map(|i| {
+            (0..m.cols()).map(|j| format!("{:.10e}", m[(i, j)])).collect::<Vec<_>>().join(",")
+        })
+        .collect();
+    write_csv(dir, name, &format!("# {}x{}", m.rows(), m.cols()), &rows)?;
+    Ok(())
+}
+
+/// Run one artifact figure.
+pub fn run(cfg: &FigConfig) -> Result<FigResult> {
+    let rosen = Rosenbrock::new(cfg.d);
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let x0s: Vec<Vec<f64>> = (0..cfg.b).map(|_| rng.uniform_vec(cfg.d, 0.0, 3.0)).collect();
+
+    // SEQ. OPT.: independent runs → block-diagonal H by construction.
+    let mut blocks = Vec::with_capacity(cfg.b);
+    let mut final_points = Vec::with_capacity(cfg.b);
+    for x0 in &x0s {
+        let (h, xf) = run_single(cfg.solver, x0, &rosen);
+        blocks.push(h);
+        final_points.push(xf);
+    }
+    let h_seq = block_diag(&blocks);
+
+    // C-BE: one coupled run → dense H with artifacts.
+    let (h_cbe, _) = run_coupled(cfg.solver, &x0s, &rosen);
+
+    // Ground truth at the (near-identical) converged points.
+    let fval = |x: &[f64]| rosen.value(x);
+    let h_true = true_inverse_hessian_blockdiag(&fval, &final_points, 1e-4)?;
+
+    let result = FigResult {
+        e_rel_seq: relative_error(&h_seq, &h_true),
+        e_rel_cbe: relative_error(&h_cbe, &h_true),
+        off_frac_seq: block_mass(&h_seq, cfg.b, cfg.d).off_fraction(),
+        off_frac_cbe: block_mass(&h_cbe, cfg.b, cfg.d).off_fraction(),
+        h_true,
+        h_seq,
+        h_cbe,
+    };
+
+    if let Some(dir) = &cfg.out_dir {
+        dump_matrix(dir, &format!("{}_h_true.csv", cfg.label), &result.h_true)?;
+        dump_matrix(dir, &format!("{}_h_seq.csv", cfg.label), &result.h_seq)?;
+        dump_matrix(dir, &format!("{}_h_cbe.csv", cfg.label), &result.h_cbe)?;
+    }
+    Ok(result)
+}
+
+/// Print one figure's report in the paper's format.
+pub fn report(cfg: &FigConfig, r: &FigResult) {
+    println!(
+        "\n=== {} — inverse-Hessian artifacts ({}, B={}, D={}, x ∈ [0,3]^D, Rosenbrock) ===",
+        cfg.label,
+        cfg.solver.name(),
+        cfg.b,
+        cfg.d
+    );
+    println!("  (each subtitle in the paper reports e_rel = ‖H − H_true‖_F / ‖H_true‖_F)");
+    println!("  Left   (true H⁻¹):        e_rel = 0.000   off-block mass =  0.0%");
+    println!(
+        "  Center (SEQ. OPT. approx): e_rel = {:.3}   off-block mass = {:4.1}%",
+        r.e_rel_seq,
+        100.0 * r.off_frac_seq
+    );
+    println!(
+        "  Right  (C-BE approx):      e_rel = {:.3}   off-block mass = {:4.1}%",
+        r.e_rel_cbe,
+        100.0 * r.off_frac_cbe
+    );
+    if let Some(dir) = &cfg.out_dir {
+        println!("  matrices written to {dir}/{}_h_{{true,seq,cbe}}.csv", cfg.label);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_lbfgsb() {
+        // The paper's core qualitative claim, Fig 1: C-BE fills
+        // off-diagonal blocks (dense artifacts), SEQ. OPT. keeps them
+        // exactly zero by construction.
+        let cfg = FigConfig {
+            b: 3,
+            d: 5,
+            solver: Solver::Lbfgsb { memory: 10 },
+            seed: 42,
+            out_dir: None,
+            label: "fig1_test".into(),
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.off_frac_seq, 0.0, "SEQ is block-diagonal by construction");
+        assert!(
+            r.off_frac_cbe > 0.01,
+            "C-BE must show off-diagonal artifacts, got {}",
+            r.off_frac_cbe
+        );
+        assert!(
+            r.e_rel_cbe > r.e_rel_seq,
+            "C-BE approximation must be worse: {} vs {}",
+            r.e_rel_cbe,
+            r.e_rel_seq
+        );
+        assert_eq!(r.h_cbe.rows(), 15);
+    }
+
+    #[test]
+    fn fig3_shape_bfgs() {
+        // Appendix B: full-memory BFGS shows the same artifacts — it is
+        // the coupling, not the limited memory.
+        let cfg = FigConfig {
+            b: 3,
+            d: 4,
+            solver: Solver::Bfgs,
+            seed: 7,
+            out_dir: None,
+            label: "fig3_test".into(),
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.off_frac_seq, 0.0);
+        // Dense BFGS refines H toward the true block-diagonal inverse as
+        // it converges, so the residual artifact mass is smaller than
+        // L-BFGS-B's — but it must be strictly present (SEQ's is exactly
+        // zero by construction).
+        assert!(r.off_frac_cbe > 1e-4, "off_frac_cbe = {}", r.off_frac_cbe);
+    }
+}

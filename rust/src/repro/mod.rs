@@ -1,0 +1,36 @@
+//! Paper-reproduction harness: one entry point per figure/table.
+//!
+//! | Paper artifact | Function | CLI |
+//! |---|---|---|
+//! | Fig 1 (L-BFGS-B inverse-Hessian artifacts, B=3) | [`fig_hessian::run`] | `dbe-bo repro fig1` |
+//! | Fig 2 (L-BFGS-B convergence vs B) | [`fig_convergence::run`] | `dbe-bo repro fig2` |
+//! | Fig 3 (BFGS artifacts, B=3) | [`fig_hessian::run`] | `dbe-bo repro fig3` |
+//! | Fig 4 (BFGS artifacts, B=10) | [`fig_hessian::run`] | `dbe-bo repro fig4` |
+//! | Fig 5 (BFGS convergence vs B) | [`fig_convergence::run`] | `dbe-bo repro fig5` |
+//! | Table 1 (BO on Rastrigin) | [`table_bench::run`] | `dbe-bo repro table1` |
+//! | Table 2 (BO on 4 BBOB objectives) | [`table_bench::run`] | `dbe-bo repro table2` |
+//!
+//! Every command prints the paper-shaped rows AND writes the raw series
+//! as CSV under `--out` (default `results/`).
+
+pub mod fig_convergence;
+pub mod fig_hessian;
+pub mod table_bench;
+
+/// Which QN solver a figure uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// L-BFGS-B with the given memory size.
+    Lbfgsb { memory: usize },
+    /// Dense BFGS (Appendix B).
+    Bfgs,
+}
+
+impl Solver {
+    pub fn name(self) -> &'static str {
+        match self {
+            Solver::Lbfgsb { .. } => "L-BFGS-B",
+            Solver::Bfgs => "BFGS",
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT client wrapper: compile-once, execute-many HLO-text artifacts.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT CPU client. Creating a client is expensive (it spins up
+/// the runtime thread pool), so one instance is shared across every
+/// loaded executable and the whole coordinator.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtRuntime {
+    /// Start a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu failed: {e}")))?;
+        Ok(PjrtRuntime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO *text* artifact and compile it for this client.
+    ///
+    /// Text is mandatory: jax ≥ 0.5 serialized protos carry 64-bit
+    /// instruction ids that xla_extension 0.5.1 rejects; the text parser
+    /// reassigns ids (see aot.py / /opt/xla-example/README.md).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedExec> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("parsing HLO text {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compiling {}: {e}", path.display())))?;
+        Ok(LoadedExec { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable plus its provenance.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl LoadedExec {
+    /// Execute with f64 input buffers; returns the flat f64 contents of
+    /// each tuple element of the (single, tupled) output.
+    pub fn execute_f64(&self, inputs: &[InputBuf]) -> Result<Vec<Vec<f64>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|b| {
+                let lit = xla::Literal::vec1(&b.data);
+                if b.dims.len() == 1 {
+                    Ok(lit)
+                } else {
+                    lit.reshape(&b.dims.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                        .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("executing {}: {e}", self.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetching result: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untupling result: {e}")))?;
+        parts
+            .iter()
+            .map(|lit| {
+                lit.to_vec::<f64>()
+                    .map_err(|e| Error::Runtime(format!("reading f64 output: {e}")))
+            })
+            .collect()
+    }
+}
+
+/// A shaped f64 input buffer.
+#[derive(Clone, Debug)]
+pub struct InputBuf {
+    pub data: Vec<f64>,
+    pub dims: Vec<usize>,
+}
+
+impl InputBuf {
+    pub fn scalar_vec(data: Vec<f64>) -> Self {
+        let n = data.len();
+        InputBuf { data, dims: vec![n] }
+    }
+
+    pub fn matrix(data: Vec<f64>, rows: usize, cols: usize) -> Self {
+        debug_assert_eq!(data.len(), rows * cols);
+        InputBuf { data, dims: vec![rows, cols] }
+    }
+}

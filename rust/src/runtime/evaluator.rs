@@ -1,0 +1,170 @@
+//! [`PjrtEvaluator`]: the AOT acquisition oracle on the Rust hot path.
+//!
+//! Construction pads the fitted GP state into the chosen shape bucket
+//! ONCE; each `eval_batch` only uploads the (B, D) query block and runs
+//! the compiled executable. Batches smaller than the compiled B are
+//! padded by repeating the first query (their outputs are discarded);
+//! batches larger than B are split into chunks — both cases keep the
+//! artifact's static shapes happy while D-BE's active-set pruning
+//! shrinks the live batch.
+
+use super::client::{InputBuf, LoadedExec, PjrtRuntime};
+use super::manifest::Manifest;
+use crate::batcheval::BatchAcqEvaluator;
+use crate::error::{Error, Result};
+use crate::gp::GpRegressor;
+
+/// PJRT-backed batched −LogEI evaluator.
+pub struct PjrtEvaluator {
+    exec: std::rc::Rc<LoadedExec>,
+    dim: usize,
+    n_pad: usize,
+    batch: usize,
+    /// Padded static inputs (built once per GP fit).
+    x_train: InputBuf,
+    mask: InputBuf,
+    k_inv: InputBuf,
+    alpha: InputBuf,
+    params: InputBuf,
+}
+
+impl PjrtEvaluator {
+    /// Build from a fitted GP, picking the smallest adequate bucket from
+    /// the manifest and compiling its artifact on `runtime`.
+    pub fn from_gp(
+        runtime: &PjrtRuntime,
+        manifest: &Manifest,
+        gp: &GpRegressor,
+    ) -> Result<Self> {
+        let n = gp.n_train();
+        let dim = gp.train_x()[0].len();
+        let entry = manifest.pick_acq(dim, n)?;
+        let exec = std::rc::Rc::new(runtime.load_hlo_text(&entry.path)?);
+        Self::assemble(exec, gp, dim, entry.n_pad, entry.batch)
+    }
+
+    /// Build with an already-compiled executable (the BO loop caches
+    /// compilations per bucket — recompiling per trial would dominate
+    /// the runtime; see EXPERIMENTS.md §Perf).
+    pub fn from_gp_with_exec(
+        exec: std::rc::Rc<LoadedExec>,
+        gp: &GpRegressor,
+        n_pad: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        let dim = gp.train_x()[0].len();
+        Self::assemble(exec, gp, dim, n_pad, batch)
+    }
+
+    fn assemble(
+        exec: std::rc::Rc<LoadedExec>,
+        gp: &GpRegressor,
+        dim: usize,
+        n_pad: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        let n = gp.n_train();
+        if n > n_pad {
+            return Err(Error::Runtime(format!(
+                "training set ({n}) exceeds bucket ({n_pad})"
+            )));
+        }
+        // X_train padded with zero rows.
+        let mut x_flat = vec![0.0; n_pad * dim];
+        for (i, row) in gp.train_x().iter().enumerate() {
+            x_flat[i * dim..(i + 1) * dim].copy_from_slice(row);
+        }
+        // Mask: 1 on real rows.
+        let mut mask = vec![0.0; n_pad];
+        mask[..n].fill(1.0);
+        // K⁻¹ padded with zeros (padded k* entries are masked to zero,
+        // so the padded block never contributes).
+        let mut kinv_flat = vec![0.0; n_pad * n_pad];
+        let kinv = gp.k_inv();
+        for i in 0..n {
+            for j in 0..n {
+                kinv_flat[i * n_pad + j] = kinv[(i, j)];
+            }
+        }
+        // α padded with zeros.
+        let mut alpha = vec![0.0; n_pad];
+        alpha[..n].copy_from_slice(gp.alpha());
+        // params = [log ℓ, log σ_f², log σ_n², f_best(standardized)].
+        let params = vec![
+            gp.params.log_len,
+            gp.params.log_sf2,
+            gp.params.log_noise,
+            gp.best_y_std(),
+        ];
+
+        Ok(PjrtEvaluator {
+            exec,
+            dim,
+            n_pad,
+            batch,
+            x_train: InputBuf::matrix(x_flat, n_pad, dim),
+            mask: InputBuf::scalar_vec(mask),
+            k_inv: InputBuf::matrix(kinv_flat, n_pad, n_pad),
+            alpha: InputBuf::scalar_vec(alpha),
+            params: InputBuf::scalar_vec(params),
+        })
+    }
+
+    pub fn bucket(&self) -> (usize, usize) {
+        (self.n_pad, self.batch)
+    }
+
+    /// Run one padded chunk of ≤ `self.batch` queries.
+    fn run_chunk(&self, chunk: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        let b = self.batch;
+        let mut q_flat = vec![0.0; b * self.dim];
+        for (i, q) in chunk.iter().enumerate() {
+            q_flat[i * self.dim..(i + 1) * self.dim].copy_from_slice(q);
+        }
+        // Pad with copies of the first query (discarded below).
+        for i in chunk.len()..b {
+            let src: Vec<f64> = q_flat[..self.dim].to_vec();
+            q_flat[i * self.dim..(i + 1) * self.dim].copy_from_slice(&src);
+        }
+        let outputs = self.exec.execute_f64(&[
+            InputBuf::matrix(q_flat, b, self.dim),
+            self.x_train.clone(),
+            self.mask.clone(),
+            self.k_inv.clone(),
+            self.alpha.clone(),
+            self.params.clone(),
+        ])?;
+        if outputs.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "artifact returned {} outputs, expected 2",
+                outputs.len()
+            )));
+        }
+        let vals = outputs[0][..chunk.len()].to_vec();
+        let grads: Vec<Vec<f64>> = (0..chunk.len())
+            .map(|i| outputs[1][i * self.dim..(i + 1) * self.dim].to_vec())
+            .collect();
+        Ok((vals, grads))
+    }
+}
+
+impl BatchAcqEvaluator for PjrtEvaluator {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        let mut vals = Vec::with_capacity(xs.len());
+        let mut grads = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(self.batch) {
+            let (v, g) = self.run_chunk(chunk)?;
+            vals.extend(v);
+            grads.extend(g);
+        }
+        Ok((vals, grads))
+    }
+
+    fn name(&self) -> &str {
+        "pjrt-acq-logei"
+    }
+}

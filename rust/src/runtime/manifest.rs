@@ -1,0 +1,175 @@
+//! Artifact manifest: which HLO files exist for which shape buckets.
+//!
+//! Format (written by `python/compile/aot.py`), one entry per line:
+//! `kind dim n_pad batch file`, `#` comments allowed.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batched −LogEI value+grad.
+    Acq,
+    /// GP MLL value+grad.
+    Mll,
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    pub dim: usize,
+    pub n_pad: usize,
+    /// Query batch size B (0 for MLL artifacts).
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest with bucket lookup.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {} malformed: '{line}'",
+                    lineno + 1
+                )));
+            }
+            let kind = match parts[0] {
+                "acq" => ArtifactKind::Acq,
+                "mll" => ArtifactKind::Mll,
+                other => {
+                    return Err(Error::Runtime(format!("unknown artifact kind '{other}'")))
+                }
+            };
+            let parse = |s: &str| -> Result<usize> {
+                s.parse().map_err(|_| Error::Runtime(format!("bad integer '{s}' in manifest")))
+            };
+            entries.push(ArtifactEntry {
+                kind,
+                dim: parse(parts[1])?,
+                n_pad: parse(parts[2])?,
+                batch: parse(parts[3])?,
+                path: dir.join(parts[4]),
+            });
+        }
+        if entries.is_empty() {
+            return Err(Error::Runtime("manifest is empty".into()));
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest acq bucket with `n_pad ≥ n_train` for this dimension.
+    pub fn pick_acq(&self, dim: usize, n_train: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Acq && e.dim == dim && e.n_pad >= n_train)
+            .min_by_key(|e| e.n_pad)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no acq artifact for dim={dim}, n_train={n_train} \
+                     (available: {:?})",
+                    self.buckets(dim)
+                ))
+            })
+    }
+
+    /// Smallest MLL bucket with `n_pad ≥ n_train`.
+    pub fn pick_mll(&self, dim: usize, n_train: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Mll && e.dim == dim && e.n_pad >= n_train)
+            .min_by_key(|e| e.n_pad)
+            .ok_or_else(|| Error::Runtime(format!("no mll artifact for dim={dim}, n={n_train}")))
+    }
+
+    /// Available acq bucket sizes for a dimension.
+    pub fn buckets(&self, dim: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Acq && e.dim == dim)
+            .map(|e| e.n_pad)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dbe_bo_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_and_picks_buckets() {
+        let d = tmpdir("pick");
+        write_manifest(
+            &d,
+            "# kind dim n_pad batch file\n\
+             acq 5 32 10 acq_d5_n32_b10.hlo.txt\n\
+             acq 5 64 10 acq_d5_n64_b10.hlo.txt\n\
+             mll 5 32 0 mll_d5_n32.hlo.txt\n",
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.pick_acq(5, 10).unwrap().n_pad, 32);
+        assert_eq!(m.pick_acq(5, 32).unwrap().n_pad, 32);
+        assert_eq!(m.pick_acq(5, 33).unwrap().n_pad, 64);
+        assert!(m.pick_acq(5, 65).is_err());
+        assert!(m.pick_acq(7, 1).is_err());
+        assert_eq!(m.buckets(5), vec![32, 64]);
+        assert_eq!(m.pick_mll(5, 20).unwrap().n_pad, 32);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let d = tmpdir("bad");
+        write_manifest(&d, "acq 5 32\n");
+        assert!(Manifest::load(&d).is_err());
+        write_manifest(&d, "wat 5 32 10 f.hlo.txt\n");
+        assert!(Manifest::load(&d).is_err());
+        write_manifest(&d, "# only comments\n");
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_clear_error() {
+        let d = tmpdir("missing");
+        let _ = std::fs::remove_file(d.join("manifest.txt"));
+        let err = Manifest::load(&d).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT HLO artifacts and expose them as batched
+//! evaluators on the Rust hot path. Python never runs here.
+//!
+//! * [`client`] — thin wrapper over `xla::PjRtClient` (CPU) with
+//!   HLO-text loading (`HloModuleProto::from_text_file`; serialized
+//!   protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+//! * [`manifest`] — parses `artifacts/manifest.txt` and picks the
+//!   smallest shape bucket that fits the current training-set size.
+//! * [`evaluator`] — [`PjrtEvaluator`]: pads the fitted GP state
+//!   `(X_train, mask, L, α, params)` into the bucket's static shapes
+//!   and implements [`crate::batcheval::BatchAcqEvaluator`] by
+//!   executing the compiled artifact.
+
+pub mod client;
+pub mod evaluator;
+pub mod manifest;
+
+pub use client::{LoadedExec, PjrtRuntime};
+pub use evaluator::PjrtEvaluator;
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

@@ -1,0 +1,93 @@
+//! `forall` property runner with scale-shrinking.
+
+use crate::rng::Pcg64;
+
+/// Case generator handed to properties: a seeded RNG plus a `scale` in
+/// (0, 1] that shrinking reduces; generators should produce "smaller"
+/// cases for smaller scales.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub scale: f64,
+}
+
+impl Gen {
+    /// Size in 1..=max, proportional to scale.
+    pub fn size(&mut self, max: usize) -> usize {
+        let m = ((max as f64) * self.scale).ceil().max(1.0) as usize;
+        1 + self.rng.below(m)
+    }
+
+    /// Bounded f64 in [-mag, mag] with mag shrunk by scale.
+    pub fn f64_in(&mut self, mag: f64) -> f64 {
+        self.rng.uniform_in(-mag * self.scale, mag * self.scale)
+    }
+
+    /// Vector of bounded f64s.
+    pub fn vec_f64(&mut self, len: usize, mag: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(mag)).collect()
+    }
+}
+
+/// Run `prop` over `cases` seeded random cases. On the first failure,
+/// retry with progressively smaller `scale` (same seed) to find a
+/// smaller counterexample, then panic with the seed + scale so the case
+/// can be replayed exactly.
+#[track_caller]
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut g = Gen { rng: Pcg64::seeded(seed), scale: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: halve the scale while the property still fails.
+            let mut best_scale = 1.0;
+            let mut best_msg = msg;
+            let mut scale = 0.5;
+            for _ in 0..8 {
+                let mut g2 = Gen { rng: Pcg64::seeded(seed), scale };
+                match prop(&mut g2) {
+                    Err(m) => {
+                        best_scale = scale;
+                        best_msg = m;
+                        scale *= 0.5;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, scale={best_scale}): {best_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("abs is nonneg", 50, |g| {
+            let x = g.f64_in(1e6);
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("abs({x}) < 0"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        forall("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_size_bounded() {
+        let mut g = Gen { rng: Pcg64::seeded(1), scale: 1.0 };
+        for _ in 0..100 {
+            let s = g.size(17);
+            assert!((1..=17).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal property-testing framework (no `proptest` offline).
+//!
+//! [`forall`] runs a property over `n` seeded random cases; on failure it
+//! performs a simple halving shrink over the generator seed-space scale
+//! and reports the smallest failing case it found. Used by the
+//! coordinator/optimizer invariant tests.
+
+mod forall;
+
+pub use forall::{forall, Gen};
+
+/// Assert two floats are close (absolute + relative tolerance).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol}, |diff| {})",
+        (a - b).abs()
+    );
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "assert_allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Central finite-difference gradient of `f` at `x` (test oracle).
+pub fn fd_gradient(f: &dyn Fn(&[f64]) -> f64, x: &[f64], h: f64) -> Vec<f64> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let x0 = xp[i];
+        xp[i] = x0 + h;
+        let fp = f(&xp);
+        xp[i] = x0 - h;
+        let fm = f(&xp);
+        xp[i] = x0;
+        g[i] = (fp - fm) / (2.0 * h);
+    }
+    g
+}
+
+/// Central finite-difference Hessian of `f` at `x` (test oracle for the
+/// off-diagonal-artifact figures).
+pub fn fd_hessian(f: &dyn Fn(&[f64]) -> f64, x: &[f64], h: f64) -> crate::linalg::Matrix {
+    let n = x.len();
+    let mut hess = crate::linalg::Matrix::zeros(n, n);
+    let mut xp = x.to_vec();
+    for i in 0..n {
+        for j in 0..=i {
+            let (xi, xj) = (xp[i], xp[j]);
+            let val = if i == j {
+                let f0 = f(&xp);
+                xp[i] = xi + h;
+                let fp = f(&xp);
+                xp[i] = xi - h;
+                let fm = f(&xp);
+                xp[i] = xi;
+                (fp - 2.0 * f0 + fm) / (h * h)
+            } else {
+                xp[i] = xi + h;
+                xp[j] = xj + h;
+                let fpp = f(&xp);
+                xp[j] = xj - h;
+                let fpm = f(&xp);
+                xp[i] = xi - h;
+                xp[j] = xj + h;
+                let fmp = f(&xp);
+                xp[j] = xj - h;
+                let fmm = f(&xp);
+                xp[i] = xi;
+                xp[j] = xj;
+                (fpp - fpm - fmp + fmm) / (4.0 * h * h)
+            };
+            hess[(i, j)] = val;
+            hess[(j, i)] = val;
+        }
+    }
+    hess
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fd_gradient_of_quadratic() {
+        let f = |x: &[f64]| x[0] * x[0] + 3.0 * x[1];
+        let g = fd_gradient(&f, &[2.0, 1.0], 1e-5);
+        assert_close(g[0], 4.0, 1e-6);
+        assert_close(g[1], 3.0, 1e-6);
+    }
+
+    #[test]
+    fn fd_hessian_of_quadratic() {
+        let f = |x: &[f64]| 2.0 * x[0] * x[0] + x[0] * x[1] + 0.5 * x[1] * x[1];
+        let h = fd_hessian(&f, &[0.3, -0.7], 1e-4);
+        assert_close(h[(0, 0)], 4.0, 1e-4);
+        assert_close(h[(0, 1)], 1.0, 1e-4);
+        assert_close(h[(1, 1)], 1.0, 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_when_far() {
+        assert_close(1.0, 2.0, 1e-6);
+    }
+}

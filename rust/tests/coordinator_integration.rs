@@ -1,0 +1,155 @@
+//! Coordinator integration: concurrent BO studies sharing routed,
+//! batch-coalescing evaluation workers — with property tests on the
+//! routing/batching/state invariants.
+
+use dbe_bo::batcheval::{BatchAcqEvaluator, SyntheticEvaluator};
+use dbe_bo::bbob::{self, Objective};
+use dbe_bo::coordinator::{BatchService, Router, ServiceConfig};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use dbe_bo::rng::Pcg64;
+use dbe_bo::testing::forall;
+use std::time::Duration;
+
+fn spawn_worker(dim: usize, cfg: ServiceConfig) -> (BatchService, std::thread::JoinHandle<()>) {
+    BatchService::spawn(
+        Box::new(SyntheticEvaluator::new(Box::new(bbob::Rosenbrock::new(dim)))),
+        cfg,
+    )
+}
+
+#[test]
+fn concurrent_mso_through_shared_service_matches_direct() {
+    // Many threads run D-BE through ONE coalescing service; results must
+    // equal a direct (no-service) run restart-for-restart.
+    let d = 4;
+    let (svc, handle) = spawn_worker(
+        d,
+        ServiceConfig { max_batch: 32, max_wait: Duration::from_micros(500) },
+    );
+    let cfg = MsoConfig {
+        bounds: vec![(0.0, 3.0); d],
+        lbfgsb: LbfgsbOptions { pgtol: 1e-8, ftol: 0.0, ..Default::default() },
+    };
+
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let svc = svc.clone();
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::seeded(500 + t);
+            let x0s: Vec<Vec<f64>> = (0..4).map(|_| rng.uniform_vec(d, 0.0, 3.0)).collect();
+            let via_service = run_mso(MsoStrategy::Dbe, &svc, &x0s, &cfg).unwrap();
+            // Direct run for comparison (deterministic oracle).
+            let direct_ev = SyntheticEvaluator::new(Box::new(bbob::Rosenbrock::new(d)));
+            let direct = run_mso(MsoStrategy::Dbe, &direct_ev, &x0s, &cfg).unwrap();
+            for (a, b) in via_service.restarts.iter().zip(&direct.restarts) {
+                assert_eq!(a.x, b.x, "service must not perturb trajectories");
+                assert_eq!(a.iters, b.iters);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = svc.metrics.snapshot();
+    assert!(snap.points > 0);
+    drop(svc);
+    handle.join().unwrap();
+}
+
+#[test]
+fn router_spreads_load_and_preserves_answers() {
+    let d = 3;
+    let mut workers = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let (svc, h) = spawn_worker(d, ServiceConfig::default());
+        workers.push(svc);
+        handles.push(h);
+    }
+    let router = Router::new(workers.clone()).unwrap();
+    let f = bbob::Rosenbrock::new(d);
+
+    let mut rng = Pcg64::seeded(42);
+    for _ in 0..60 {
+        let p = rng.uniform_vec(d, 0.0, 3.0);
+        let (vals, grads) = router.eval_batch(std::slice::from_ref(&p)).unwrap();
+        let (v, g) = f.value_grad(&p);
+        assert_eq!(vals[0], v);
+        assert_eq!(grads[0], g);
+    }
+    let loads = router.worker_points();
+    assert_eq!(loads.iter().sum::<u64>(), 60);
+    assert!(
+        loads.iter().all(|&l| l > 0),
+        "every worker should receive traffic: {loads:?}"
+    );
+    drop(router);
+    drop(workers);
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn property_coalescing_never_drops_or_duplicates() {
+    // For any mix of client batch sizes and service knobs, the total
+    // number of points the oracle sees equals the number submitted, and
+    // every reply is correct and correctly sized.
+    forall("no drop/dup under coalescing", 8, |g| {
+        let d = 2;
+        let max_batch = g.size(12);
+        let (svc, handle) = spawn_worker(
+            d,
+            ServiceConfig {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+            },
+        );
+        let n_threads = g.size(6);
+        let sizes: Vec<usize> = (0..n_threads).map(|_| g.size(4)).collect();
+        let total: usize = sizes.iter().sum::<usize>() * 10;
+
+        let mut joins = Vec::new();
+        for (t, &k) in sizes.iter().enumerate() {
+            let svc = svc.clone();
+            joins.push(std::thread::spawn(move || -> Result<(), String> {
+                let f = bbob::Rosenbrock::new(d);
+                let mut rng = Pcg64::seeded(900 + t as u64);
+                for _ in 0..10 {
+                    let pts: Vec<Vec<f64>> =
+                        (0..k).map(|_| rng.uniform_vec(d, 0.0, 3.0)).collect();
+                    let (vals, _) = svc.eval(pts.clone()).map_err(|e| e.to_string())?;
+                    if vals.len() != k {
+                        return Err(format!("got {} values for {k} points", vals.len()));
+                    }
+                    for (i, p) in pts.iter().enumerate() {
+                        if vals[i] != f.value(p) {
+                            return Err("wrong value".into());
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| "panic".to_string())??;
+        }
+        let snap = svc.metrics.snapshot();
+        if snap.points as usize != total {
+            return Err(format!("oracle saw {} points, submitted {total}", snap.points));
+        }
+        drop(svc);
+        handle.join().map_err(|_| "worker panic".to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn service_shutdown_is_clean() {
+    let (svc, handle) = spawn_worker(2, ServiceConfig::default());
+    let _ = svc.eval(vec![vec![1.0, 1.0]]).unwrap();
+    drop(svc); // all senders gone → worker exits
+    handle.join().unwrap();
+}

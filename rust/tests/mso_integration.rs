@@ -1,0 +1,137 @@
+//! Cross-module integration: MSO strategies over the *real* GP
+//! acquisition (not synthetic functions) — the paper's actual setting.
+
+use dbe_bo::batcheval::{CountingEvaluator, NativeGpEvaluator};
+use dbe_bo::bo::{Study, StudyConfig};
+use dbe_bo::gp::{GpParams, GpRegressor};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use dbe_bo::rng::Pcg64;
+
+fn fitted_gp(n: usize, d: usize, seed: u64) -> GpRegressor {
+    let mut rng = Pcg64::seeded(seed);
+    let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|p| {
+            p.iter().enumerate().map(|(i, v)| (v - 0.3 - 0.1 * i as f64).powi(2)).sum::<f64>()
+        })
+        .collect();
+    GpRegressor::fit(x, &y, GpParams::default()).unwrap()
+}
+
+#[test]
+fn dbe_replays_seq_on_gp_acquisition() {
+    // The headline equivalence on the real acquisition surface.
+    let gp = fitted_gp(40, 3, 1);
+    let ev = NativeGpEvaluator::new(&gp);
+    let mut rng = Pcg64::seeded(2);
+    let x0s: Vec<Vec<f64>> = (0..10).map(|_| rng.uniform_vec(3, 0.0, 1.0)).collect();
+    let cfg = MsoConfig {
+        bounds: vec![(0.0, 1.0); 3],
+        lbfgsb: LbfgsbOptions { pgtol: 1e-2, max_iters: 200, ftol: 0.0, ..Default::default() },
+    };
+    let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0s, &cfg).unwrap();
+    let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0s, &cfg).unwrap();
+    for (a, b) in seq.restarts.iter().zip(&dbe.restarts) {
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.f, b.f);
+        assert_eq!(a.iters, b.iters);
+    }
+    // And batching really reduced oracle calls.
+    assert!(dbe.n_batches < seq.n_batches);
+}
+
+#[test]
+fn evaluation_counts_ordering() {
+    // SEQ: n_batches == n_points. D-BE: fewer batches, same-ish points.
+    // C-BE: every batch carries all B points.
+    let gp = fitted_gp(30, 2, 3);
+    let ev = CountingEvaluator::new(NativeGpEvaluator::new(&gp));
+    let mut rng = Pcg64::seeded(5);
+    let b = 8;
+    let x0s: Vec<Vec<f64>> = (0..b).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+    let cfg = MsoConfig {
+        bounds: vec![(0.0, 1.0); 2],
+        lbfgsb: LbfgsbOptions { pgtol: 1e-2, max_iters: 200, ftol: 0.0, ..Default::default() },
+    };
+    let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0s, &cfg).unwrap();
+    assert_eq!(seq.n_batches, seq.n_points);
+
+    let cbe = run_mso(MsoStrategy::Cbe, &ev, &x0s, &cfg).unwrap();
+    assert_eq!(cbe.n_points, cbe.n_batches * b);
+
+    let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0s, &cfg).unwrap();
+    assert!(dbe.n_batches <= seq.n_points);
+    assert!(dbe.n_batches < dbe.n_points);
+}
+
+#[test]
+fn full_bo_studies_reach_comparable_quality() {
+    // The Table-1 "Best Value comparable across methods" claim, shrunk.
+    let objective = |x: &[f64]| {
+        x.iter().map(|v| v * v).sum::<f64>() + (3.0 * x[0]).sin() * 0.5
+    };
+    let mut bests = Vec::new();
+    for strategy in MsoStrategy::all() {
+        let cfg = StudyConfig {
+            dim: 2,
+            bounds: vec![(-3.0, 3.0); 2],
+            n_trials: 22,
+            n_startup: 8,
+            restarts: 6,
+            strategy,
+            ..StudyConfig::default()
+        };
+        let mut study = Study::new(cfg, 77);
+        let best = study.optimize(objective);
+        bests.push(best.value);
+    }
+    let spread = bests.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - bests.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        spread < 1.0,
+        "strategies should reach comparable quality, got {bests:?}"
+    );
+}
+
+#[test]
+fn cbe_iteration_inflation_on_gp_acquisition() {
+    // §5: C-BE's iteration count inflates on the real acquisition too.
+    // Use tight tolerances so iteration counts measure convergence.
+    let gp = fitted_gp(50, 5, 7);
+    let ev = NativeGpEvaluator::new(&gp);
+    let mut rng = Pcg64::seeded(8);
+    let x0s: Vec<Vec<f64>> = (0..10).map(|_| rng.uniform_vec(5, 0.0, 1.0)).collect();
+    let cfg = MsoConfig {
+        bounds: vec![(0.0, 1.0); 5],
+        lbfgsb: LbfgsbOptions { pgtol: 1e-5, ftol: 0.0, max_iters: 300, ..Default::default() },
+    };
+    let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0s, &cfg).unwrap();
+    let cbe = run_mso(MsoStrategy::Cbe, &ev, &x0s, &cfg).unwrap();
+    assert!(
+        cbe.median_iters() >= seq.median_iters(),
+        "C-BE {} vs SEQ {}",
+        cbe.median_iters(),
+        seq.median_iters()
+    );
+}
+
+#[test]
+fn study_stats_are_internally_consistent() {
+    let cfg = StudyConfig {
+        dim: 2,
+        bounds: vec![(-2.0, 2.0); 2],
+        n_trials: 16,
+        n_startup: 6,
+        restarts: 5,
+        strategy: MsoStrategy::Dbe,
+        ..StudyConfig::default()
+    };
+    let mut study = Study::new(cfg, 3);
+    study.optimize(|x| x[0] * x[0] + x[1] * x[1]);
+    let s = &study.stats;
+    assert_eq!(s.iters.len(), (16 - 6) * 5);
+    assert!(s.n_points >= s.n_batches);
+    assert!(s.acq_wall <= s.total_wall);
+}
