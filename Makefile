@@ -1,0 +1,28 @@
+# Entry points referenced throughout the docs and source comments.
+# The Rust side is self-contained; `artifacts` needs a JAX-capable
+# Python environment and is only required for the PJRT hot path.
+
+.PHONY: build test docs bench artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# CI's docs gate: rustdoc must be warning-clean and doctests must pass.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test --doc
+
+bench:
+	cargo bench --bench mso_strategies
+	cargo bench --bench batched_eval
+	cargo bench --bench lbfgsb_update
+	cargo bench --bench table_rastrigin
+	cargo bench --bench par_dbe
+
+# AOT-lower the JAX model to HLO text artifacts for the PJRT runtime
+# (see python/compile/aot.py and EXPERIMENTS.md §E2E).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts

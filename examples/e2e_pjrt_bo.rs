@@ -14,7 +14,7 @@
 //! make artifacts && cargo run --release --example e2e_pjrt_bo
 //! ```
 
-use dbe_bo::bbob;
+use dbe_bo::bbob::{self, Objective};
 use dbe_bo::bo::{Study, StudyConfig};
 use dbe_bo::optim::mso::MsoStrategy;
 use dbe_bo::runtime::{Manifest, PjrtEvaluator, PjrtRuntime};
@@ -36,7 +36,13 @@ fn main() {
             std::process::exit(1);
         }
     };
-    let runtime = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let runtime = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    };
     println!(
         "e2e: BO on {objective_name} (D={dim}), {n_trials} trials, acquisition on PJRT ({})",
         runtime.platform()

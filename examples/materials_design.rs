@@ -18,8 +18,8 @@ use std::time::Instant;
 
 /// Synthetic yield-strength model over (Zn%, Mg%, Cu%) for a given
 /// aging temperature. Deterministic stand-in for the DFT/experimental
-/// oracle the papers use (substitution documented in DESIGN.md §5);
-/// negated so BO minimizes.
+/// oracle the papers use (the repo keeps all objectives offline and
+/// deterministic — see README.md); negated so BO minimizes.
 fn neg_strength(x: &[f64], aging_temp: f64) -> f64 {
     let (zn, mg, cu) = (x[0], x[1], x[2]);
     // Precipitate-hardening peak near a temperature-dependent ratio.

@@ -3,8 +3,7 @@
 HLO text (not serialized HloModuleProto) is the interchange format:
 jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla`
 crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
-parser reassigns ids and round-trips cleanly. See
-/opt/xla-example/README.md.
+parser reassigns ids and round-trips cleanly.
 
 Artifacts (one per shape bucket, since PJRT executables are
 static-shape):

@@ -6,7 +6,7 @@ the n training points — O(B·n·D) per L-BFGS-B iteration, inside every
 batched acquisition evaluation. This module implements it as a tiled
 Pallas kernel plus a Gram-matrix variant for the GP-fit path.
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the (B, n) grid is tiled
+TPU mapping (see EXPERIMENTS.md §Perf): the (B, n) grid is tiled
 into VMEM blocks via BlockSpec; the squared distance is computed in its
 expanded form ‖q‖² − 2 q·xᵀ + ‖x‖² so the dominant term is a
 (B_tile, D) × (D, n_tile) matmul that maps onto the MXU, with the two

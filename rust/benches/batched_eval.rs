@@ -35,28 +35,31 @@ fn main() {
         }
     }
 
-    // PJRT path (optional).
-    if let Ok(manifest) = dbe_bo::runtime::Manifest::load(std::path::Path::new("artifacts")) {
-        let runtime = dbe_bo::runtime::PjrtRuntime::cpu().unwrap();
-        println!("\n# batched_eval — PJRT artifact oracle, D={d}");
-        for &n in &[32usize, 64, 128] {
-            let gp = fitted_gp(n, d);
-            match dbe_bo::runtime::PjrtEvaluator::from_gp(&runtime, &manifest, &gp) {
-                Ok(ev) => {
-                    let mut rng = Pcg64::seeded(9);
-                    for &batch in &[1usize, 10] {
-                        let qs: Vec<Vec<f64>> =
-                            (0..batch).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
-                        let stats = b.bench(&format!("pjrt   n={n:<4} B={batch:<3}"), || {
-                            ev.eval_batch(&qs).unwrap()
-                        });
-                        println!("    -> {:.0} points/s", batch as f64 / stats.median_secs());
+    // PJRT path (optional): needs the artifacts AND a PJRT-enabled
+    // build (the default build's client is an always-unavailable stub).
+    let pjrt = dbe_bo::runtime::Manifest::load(std::path::Path::new("artifacts"))
+        .and_then(|m| dbe_bo::runtime::PjrtRuntime::cpu().map(|rt| (m, rt)));
+    match pjrt {
+        Ok((manifest, runtime)) => {
+            println!("\n# batched_eval — PJRT artifact oracle, D={d}");
+            for &n in &[32usize, 64, 128] {
+                let gp = fitted_gp(n, d);
+                match dbe_bo::runtime::PjrtEvaluator::from_gp(&runtime, &manifest, &gp) {
+                    Ok(ev) => {
+                        let mut rng = Pcg64::seeded(9);
+                        for &batch in &[1usize, 10] {
+                            let qs: Vec<Vec<f64>> =
+                                (0..batch).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+                            let stats = b.bench(&format!("pjrt   n={n:<4} B={batch:<3}"), || {
+                                ev.eval_batch(&qs).unwrap()
+                            });
+                            println!("    -> {:.0} points/s", batch as f64 / stats.median_secs());
+                        }
                     }
+                    Err(e) => println!("  (skipped n={n}: {e})"),
                 }
-                Err(e) => println!("  (skipped n={n}: {e})"),
             }
         }
-    } else {
-        println!("\n(pjrt sweep skipped: run `make artifacts`)");
+        Err(e) => println!("\n(pjrt sweep skipped: {e})"),
     }
 }

@@ -1,0 +1,76 @@
+//! Bench: one full MSO call under SEQ / C-BE / D-BE / Par-D-BE on BBOB
+//! objectives, plus Par-D-BE submitting through the coalescing
+//! `BatchService` — the wall-clock comparison behind EXPERIMENTS.md
+//! §Par-D-BE. Run with `cargo bench --bench par_dbe`.
+
+use dbe_bo::batcheval::SyntheticEvaluator;
+use dbe_bo::bbob::{self, Objective};
+use dbe_bo::benchx::Bencher;
+use dbe_bo::coordinator::{BatchService, ServiceConfig};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::{run_mso_shared, MsoConfig, MsoStrategy, ParDbe};
+use dbe_bo::rng::Pcg64;
+use std::time::Duration;
+
+fn main() {
+    let b_restarts = 16;
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "# par_dbe — one MSO call, B={b_restarts}, pgtol=1e-6, {workers} cores available"
+    );
+
+    for (name, d) in [("rosenbrock", 10), ("rastrigin", 10)] {
+        let instance_seed = 1000 + d as u64;
+        let objective = bbob::by_name(name, d, instance_seed).unwrap();
+        let bounds = objective.bounds();
+        let ev = SyntheticEvaluator::new(bbob::by_name(name, d, instance_seed).unwrap());
+
+        let mut rng = Pcg64::seeded(9);
+        let x0s: Vec<Vec<f64>> =
+            (0..b_restarts).map(|_| rng.point_in_box(&bounds)).collect();
+        let cfg = MsoConfig {
+            bounds: bounds.clone(),
+            lbfgsb: LbfgsbOptions { pgtol: 1e-6, max_iters: 200, ..Default::default() },
+        };
+
+        println!("\n## {name} D={d}");
+        let mut bench = Bencher::new(1, 7);
+        let mut rows = Vec::new();
+        for strat in [
+            MsoStrategy::SeqOpt,
+            MsoStrategy::Cbe,
+            MsoStrategy::Dbe,
+            MsoStrategy::ParDbe,
+        ] {
+            let stats = bench.bench(&format!("{:<9} {name}", strat.name()), || {
+                run_mso_shared(strat, &ev, &x0s, &cfg).unwrap()
+            });
+            rows.push((strat, stats.median_secs()));
+        }
+        let seq = rows[0].1;
+        println!(
+            "    -> speedup vs SEQ: C-BE {:.2}x, D-BE {:.2}x, Par-D-BE {:.2}x",
+            seq / rows[1].1,
+            seq / rows[2].1,
+            seq / rows[3].1,
+        );
+
+        // Par-D-BE shards submitting through ONE coalescing service —
+        // the distributed deployment shape. The service's mean batch
+        // size shows cross-shard coalescing at work.
+        let (svc, handle) = BatchService::spawn(
+            Box::new(SyntheticEvaluator::new(bbob::by_name(name, d, instance_seed).unwrap())),
+            ServiceConfig { max_batch: 64, max_wait: Duration::from_micros(100) },
+        );
+        bench.bench(&format!("Par-D-BE via service {name}"), || {
+            ParDbe::auto().run(&svc, &x0s, &cfg).unwrap()
+        });
+        let snap = svc.metrics.snapshot();
+        println!(
+            "    service: {snap} | mean batch {:.1} points",
+            svc.metrics.mean_batch_size()
+        );
+        drop(svc);
+        handle.join().unwrap();
+    }
+}

@@ -24,9 +24,36 @@ use crate::Result;
 /// single PJRT execution).
 ///
 /// No `Send`/`Sync` supertrait: the PJRT executable handles are
-/// `Rc`-based and thread-bound, and the MSO engine is single-threaded
-/// by design. The coordinator requires `+ Send` explicitly where it
-/// moves an evaluator onto a worker thread.
+/// `Rc`-based and thread-bound, and the single-threaded MSO strategies
+/// don't need either. Thread-crossing consumers state their bounds
+/// explicitly: the coordinator requires `+ Send` where it moves an
+/// evaluator onto a worker thread, and
+/// [`ParDbe`](crate::optim::mso::ParDbe) requires `+ Sync` to share one
+/// evaluator across its shard workers.
+///
+/// # Example
+///
+/// ```
+/// use dbe_bo::batcheval::BatchAcqEvaluator;
+///
+/// /// A quadratic bowl with analytic gradients.
+/// struct Bowl;
+///
+/// impl BatchAcqEvaluator for Bowl {
+///     fn dim(&self) -> usize {
+///         2
+///     }
+///     fn eval_batch(&self, xs: &[Vec<f64>]) -> dbe_bo::Result<(Vec<f64>, Vec<Vec<f64>>)> {
+///         let vals = xs.iter().map(|x| x.iter().map(|v| v * v).sum()).collect();
+///         let grads = xs.iter().map(|x| x.iter().map(|v| 2.0 * v).collect()).collect();
+///         Ok((vals, grads))
+///     }
+/// }
+///
+/// let (vals, grads) = Bowl.eval_batch(&[vec![1.0, 2.0]]).unwrap();
+/// assert_eq!(vals, vec![5.0]);
+/// assert_eq!(grads, vec![vec![2.0, 4.0]]);
+/// ```
 pub trait BatchAcqEvaluator {
     /// Input dimension D.
     fn dim(&self) -> usize;
@@ -46,6 +73,12 @@ pub trait BatchAcqEvaluator {
 /// Counts batch calls and total points through an inner evaluator —
 /// used by tests and by the paper-table harness to report evaluation
 /// statistics.
+///
+/// Counters follow the coordinator's
+/// [`Metrics`](crate::coordinator::Metrics) discipline: only
+/// **successful** `eval_batch` calls are counted, and the atomic adds
+/// make totals exact under concurrent submission (the Par-D-BE path,
+/// where several shard workers share one wrapper).
 pub struct CountingEvaluator<E> {
     inner: E,
     batches: std::sync::atomic::AtomicUsize,
@@ -76,9 +109,15 @@ impl<E: BatchAcqEvaluator> BatchAcqEvaluator for CountingEvaluator<E> {
     }
 
     fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
-        self.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.points.fetch_add(xs.len(), std::sync::atomic::Ordering::Relaxed);
-        self.inner.eval_batch(xs)
+        // Evaluate first, count after: a failed call must not inflate
+        // the evaluation statistics (it would double-count retried
+        // batches and disagree with MsoResult/Metrics accounting).
+        let out = self.inner.eval_batch(xs);
+        if out.is_ok() {
+            self.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.points.fetch_add(xs.len(), std::sync::atomic::Ordering::Relaxed);
+        }
+        out
     }
 
     fn name(&self) -> &str {
@@ -101,5 +140,59 @@ mod tests {
         let _ = ev.eval_batch(&xs[..1].to_vec()).unwrap();
         assert_eq!(ev.n_batches(), 2);
         assert_eq!(ev.n_points(), 3);
+    }
+
+    #[test]
+    fn counting_wrapper_skips_failed_calls() {
+        // Regression: failed batches used to be counted as evaluated,
+        // so a retry after an oracle error double-counted its points.
+        struct Flaky {
+            fail_first: std::sync::atomic::AtomicBool,
+        }
+        impl BatchAcqEvaluator for Flaky {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+                if self.fail_first.swap(false, std::sync::atomic::Ordering::Relaxed) {
+                    return Err(crate::Error::Runtime("transient".into()));
+                }
+                Ok((vec![0.0; xs.len()], vec![vec![0.0; 2]; xs.len()]))
+            }
+        }
+        let ev = CountingEvaluator::new(Flaky {
+            fail_first: std::sync::atomic::AtomicBool::new(true),
+        });
+        let xs = vec![vec![0.5; 2], vec![1.5; 2]];
+        assert!(ev.eval_batch(&xs).is_err());
+        assert_eq!(ev.n_batches(), 0, "failed call must not count");
+        assert_eq!(ev.n_points(), 0);
+        ev.eval_batch(&xs).unwrap(); // the retry
+        assert_eq!(ev.n_batches(), 1);
+        assert_eq!(ev.n_points(), 2, "retried points counted exactly once");
+    }
+
+    #[test]
+    fn counting_wrapper_is_exact_under_concurrent_submission() {
+        // The Par-D-BE shape: several shard workers hammer one shared
+        // wrapper. fetch_add must lose no updates.
+        let ev = std::sync::Arc::new(CountingEvaluator::new(SyntheticEvaluator::new(
+            Box::new(Rosenbrock::new(2)),
+        )));
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let ev = std::sync::Arc::clone(&ev);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let xs = vec![vec![0.01 * t as f64, 0.02 * i as f64]; 3];
+                    ev.eval_batch(&xs).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(ev.n_batches(), 8 * 50);
+        assert_eq!(ev.n_points(), 8 * 50 * 3);
     }
 }

@@ -2,6 +2,12 @@
 //! no PJRT dependency. This is the oracle used by `cargo test`, the
 //! quickstart example, and as the correctness reference for the AOT
 //! artifact path.
+//!
+//! The evaluator is `Sync` (it only borrows immutable GP state), so it
+//! can back a [`ParDbe`](crate::optim::mso::ParDbe) worker pool
+//! directly, and [`NativeGpEvaluator::with_workers`] additionally
+//! parallelizes each `eval_batch` across scoped threads so the native
+//! oracle itself scales with cores.
 
 use super::BatchAcqEvaluator;
 use crate::gp::{GpRegressor, LogEi};
@@ -11,12 +17,32 @@ use crate::Result;
 pub struct NativeGpEvaluator<'a> {
     acq: LogEi<'a>,
     dim: usize,
+    /// Threads used per `eval_batch` (1 = serial).
+    workers: usize,
 }
+
+/// Below this many points per would-be chunk, thread spawn overhead
+/// outweighs the per-point GP posterior work — stay serial.
+const MIN_CHUNK: usize = 4;
 
 impl<'a> NativeGpEvaluator<'a> {
     pub fn new(gp: &'a GpRegressor) -> Self {
         let dim = gp.train_x()[0].len();
-        NativeGpEvaluator { acq: LogEi::new(gp), dim }
+        NativeGpEvaluator { acq: LogEi::new(gp), dim, workers: 1 }
+    }
+
+    /// Evaluate batches with up to `n` threads (`0` = one per available
+    /// core). Chunked results are bitwise identical to the serial path:
+    /// the batched posterior is computed independently per query point.
+    /// Small batches stay serial regardless, so tiny late-stage D-BE
+    /// batches don't pay spawn overhead.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = if n == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            n
+        };
+        self
     }
 
     pub fn acquisition(&self) -> &LogEi<'a> {
@@ -30,7 +56,28 @@ impl<'a> BatchAcqEvaluator for NativeGpEvaluator<'a> {
     }
 
     fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
-        Ok(self.acq.eval_batch(xs))
+        let n_chunks = self.workers.min(xs.len() / MIN_CHUNK).max(1);
+        if n_chunks <= 1 {
+            return Ok(self.acq.eval_batch(xs));
+        }
+        let chunk_len = (xs.len() + n_chunks - 1) / n_chunks;
+        let parts: Vec<(Vec<f64>, Vec<Vec<f64>>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = xs
+                .chunks(chunk_len)
+                .map(|chunk| scope.spawn(move || self.acq.eval_batch(chunk)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("native GP eval worker panicked"))
+                .collect()
+        });
+        let mut vals = Vec::with_capacity(xs.len());
+        let mut grads = Vec::with_capacity(xs.len());
+        for (v, g) in parts {
+            vals.extend(v);
+            grads.extend(g);
+        }
+        Ok((vals, grads))
     }
 
     fn name(&self) -> &str {
@@ -76,5 +123,25 @@ mod tests {
             res.best_f,
             best_random
         );
+    }
+
+    #[test]
+    fn chunked_parallel_eval_is_bitwise_identical_to_serial() {
+        let mut rng = Pcg64::seeded(11);
+        let x: Vec<Vec<f64>> = (0..30).map(|_| rng.uniform_vec(3, 0.0, 1.0)).collect();
+        let y: Vec<f64> = x.iter().map(|p| p.iter().map(|v| (v - 0.5).powi(2)).sum()).collect();
+        let gp = GpRegressor::fit(x, &y, GpParams::default()).unwrap();
+        let serial = NativeGpEvaluator::new(&gp);
+        let parallel = NativeGpEvaluator::new(&gp).with_workers(4);
+
+        let qs: Vec<Vec<f64>> = (0..37).map(|_| rng.uniform_vec(3, 0.0, 1.0)).collect();
+        let (v0, g0) = serial.eval_batch(&qs).unwrap();
+        let (v1, g1) = parallel.eval_batch(&qs).unwrap();
+        assert_eq!(v0, v1, "chunking must not change values");
+        assert_eq!(g0, g1, "chunking must not change gradients");
+
+        // Small batches stay serial but still answer correctly.
+        let (v2, _) = parallel.eval_batch(&qs[..2].to_vec()).unwrap();
+        assert_eq!(v2, v0[..2].to_vec());
     }
 }

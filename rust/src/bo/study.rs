@@ -4,7 +4,7 @@ use super::{denormalize, normalize, BestResult};
 use crate::batcheval::{BatchAcqEvaluator, NativeGpEvaluator};
 use crate::gp::{GpParams, GpRegressor};
 use crate::optim::lbfgsb::LbfgsbOptions;
-use crate::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use crate::optim::mso::{run_mso, MsoConfig, MsoStrategy, ParDbe};
 use crate::rng::Pcg64;
 use crate::Result;
 use std::time::{Duration, Instant};
@@ -35,6 +35,13 @@ pub struct StudyConfig {
     pub lbfgsb: LbfgsbOptions,
     /// Re-fit GP hyperparameters every k trials (1 = every trial).
     pub fit_every: usize,
+    /// Worker threads for [`MsoStrategy::ParDbe`] (0 = one per core).
+    /// Ignored by the single-threaded strategies.
+    pub par_workers: usize,
+    /// Threads the native GP oracle may use per batch evaluation
+    /// (1 = serial, 0 = one per core). Ignored when an evaluator
+    /// factory is set.
+    pub eval_workers: usize,
 }
 
 impl Default for StudyConfig {
@@ -54,6 +61,8 @@ impl Default for StudyConfig {
                 max_evals: 20_000,
             },
             fit_every: 1,
+            par_workers: 0,
+            eval_workers: 1,
         }
     }
 }
@@ -197,12 +206,19 @@ impl Study {
         let t_acq = Instant::now();
         let res = match &self.eval_factory {
             Some(factory) => {
+                // Factory evaluators (e.g. the PJRT artifact) are
+                // thread-bound, so Par-D-BE degrades to single-threaded
+                // D-BE here — identical trajectories, no worker pool.
                 let ev = factory(&gp)?;
                 run_mso(self.cfg.strategy, ev.as_ref(), &x0s, &mso_cfg)?
             }
             None => {
-                let ev = NativeGpEvaluator::new(&gp);
-                run_mso(self.cfg.strategy, &ev, &x0s, &mso_cfg)?
+                let ev = NativeGpEvaluator::new(&gp).with_workers(self.cfg.eval_workers);
+                if self.cfg.strategy == MsoStrategy::ParDbe {
+                    ParDbe::with_workers(self.cfg.par_workers).run(&ev, &x0s, &mso_cfg)?
+                } else {
+                    run_mso(self.cfg.strategy, &ev, &x0s, &mso_cfg)?
+                }
             }
         };
         self.stats.acq_wall += t_acq.elapsed();
@@ -302,6 +318,28 @@ mod tests {
         study.optimize(f);
         // 18 trials − 6 startup = 12 model-based, ×4 restarts each.
         assert_eq!(study.stats.iters.len(), 12 * 4);
+    }
+
+    #[test]
+    fn par_dbe_study_replays_dbe_study() {
+        // Identical RNG stream + identical per-restart trajectories ⇒
+        // the sharded strategy reproduces the D-BE study trial for
+        // trial, regardless of worker count.
+        let f = |x: &[f64]| (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2);
+        let mut dbe = Study::new(quick_cfg(2, MsoStrategy::Dbe), 11);
+        let best_dbe = dbe.optimize(f);
+        let mut par = Study::new(
+            StudyConfig { par_workers: 3, ..quick_cfg(2, MsoStrategy::ParDbe) },
+            11,
+        );
+        let best_par = par.optimize(f);
+        assert_eq!(dbe.trials().len(), par.trials().len());
+        for (a, b) in dbe.trials().iter().zip(par.trials()) {
+            assert_eq!(a.x, b.x, "suggestions must match trial for trial");
+            assert_eq!(a.value, b.value);
+        }
+        assert_eq!(best_dbe.x, best_par.x);
+        assert_eq!(best_dbe.value, best_par.value);
     }
 
     #[test]

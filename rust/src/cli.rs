@@ -2,6 +2,21 @@
 //!
 //! Supports `--key value`, `--key=value`, and bare `--flag` forms plus
 //! positional arguments; typed getters with defaults.
+//!
+//! ```
+//! use dbe_bo::cli::Args;
+//!
+//! let args = Args::parse(
+//!     ["bo", "--strategy", "par_dbe", "--dim=5", "--fast"]
+//!         .iter()
+//!         .map(|s| s.to_string()),
+//! )
+//! .unwrap();
+//! assert_eq!(args.positional, vec!["bo"]);
+//! assert_eq!(args.get_str("strategy", "dbe"), "par_dbe");
+//! assert_eq!(args.get_usize("dim", 0).unwrap(), 5);
+//! assert!(args.has("fast"));
+//! ```
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;

@@ -4,6 +4,7 @@
 
 use crate::cli::Args;
 use crate::optim::lbfgsb::LbfgsbOptions;
+use crate::optim::mso::MsoStrategy;
 use crate::Result;
 
 /// The paper's benchmark protocol (§5) with scaling knobs.
@@ -25,6 +26,11 @@ pub struct BenchProtocol {
     pub lbfgsb: LbfgsbOptions,
     /// Output directory for CSV dumps.
     pub out_dir: String,
+    /// Also bench the sharded Par-D-BE strategy (beyond the paper's
+    /// three; see [`MsoStrategy::ParDbe`]).
+    pub with_par: bool,
+    /// Worker threads for Par-D-BE (0 = one per core).
+    pub par_workers: usize,
 }
 
 impl Default for BenchProtocol {
@@ -37,7 +43,7 @@ impl Default for BenchProtocol {
                 "rastrigin".into(),
             ],
             dims: vec![5, 10, 20, 40],
-            // Scaled-down defaults (see DESIGN.md §4 scaling note);
+            // Scaled-down defaults (see EXPERIMENTS.md §Scaling);
             // `--paper` restores the full protocol.
             trials: 60,
             seeds: 5,
@@ -51,13 +57,16 @@ impl Default for BenchProtocol {
                 max_evals: 50_000,
             },
             out_dir: "results".into(),
+            with_par: false,
+            par_workers: 0,
         }
     }
 }
 
 impl BenchProtocol {
     /// Apply CLI overrides: `--trials`, `--seeds`, `--dims`,
-    /// `--objectives`, `--restarts`, `--out`, `--fast`, `--paper`.
+    /// `--objectives`, `--restarts`, `--out`, `--fast`, `--paper`,
+    /// `--with-par`, `--par-workers`.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut p = BenchProtocol::default();
         if args.has("paper") {
@@ -74,6 +83,8 @@ impl BenchProtocol {
         p.restarts = args.get_usize("restarts", p.restarts)?;
         p.dims = args.get_usize_list("dims", &p.dims)?;
         p.out_dir = args.get_str("out", &p.out_dir);
+        p.with_par = p.with_par || args.has("with-par");
+        p.par_workers = args.get_usize("par-workers", p.par_workers)?;
         if args.has("objectives") {
             p.objectives = args
                 .get_str("objectives", "")
@@ -83,6 +94,16 @@ impl BenchProtocol {
                 .collect();
         }
         Ok(p)
+    }
+
+    /// Strategies this protocol benches: the paper's three, plus
+    /// Par-D-BE when `--with-par` is set.
+    pub fn strategies(&self) -> Vec<MsoStrategy> {
+        let mut s = MsoStrategy::all().to_vec();
+        if self.with_par {
+            s.push(MsoStrategy::ParDbe);
+        }
+        s
     }
 }
 
@@ -129,6 +150,20 @@ mod tests {
         assert_eq!(p.dims, vec![5]);
         assert_eq!(p.objectives, vec!["rastrigin"]);
         assert_eq!(p.seeds, 2); // from --fast
+    }
+
+    #[test]
+    fn par_strategy_selection() {
+        let p = BenchProtocol::default();
+        assert_eq!(p.strategies().len(), 3, "paper protocol by default");
+        let args = crate::cli::Args::parse(
+            ["--with-par", "--par-workers", "4"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let p = BenchProtocol::from_args(&args).unwrap();
+        assert!(p.with_par);
+        assert_eq!(p.par_workers, 4);
+        assert_eq!(*p.strategies().last().unwrap(), MsoStrategy::ParDbe);
     }
 
     #[test]

@@ -4,13 +4,21 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Counters shared by services/routers. All methods are lock-free.
+///
+/// Counting discipline (shared with
+/// [`CountingEvaluator`](crate::batcheval::CountingEvaluator)):
+/// `batches`/`points`/`oracle_nanos` count **successful** oracle calls
+/// only; failed dispatches increment `failures` instead. A concurrent
+/// [`snapshot`](Metrics::snapshot) may observe a batch whose sibling
+/// counters have not landed yet (the three adds are not one atomic
+/// transaction); totals are exact once submitters have quiesced.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Evaluation requests accepted.
     pub requests: AtomicU64,
-    /// Oracle batches dispatched.
+    /// Oracle batches dispatched successfully.
     pub batches: AtomicU64,
-    /// Total points evaluated.
+    /// Total points evaluated successfully.
     pub points: AtomicU64,
     /// Cumulative oracle wall time in nanoseconds.
     pub oracle_nanos: AtomicU64,
@@ -60,6 +68,54 @@ pub struct MetricsSnapshot {
     pub failures: u64,
 }
 
+/// Fixed-size registry of per-shard [`Metrics`].
+///
+/// Used by [`ParDbe`](crate::optim::mso::ParDbe) to account each
+/// worker's evaluator submissions separately: `shard(i)` hands shard
+/// `i`'s counters to its worker thread (all methods are `&self` and
+/// lock-free, so the registry is shared by reference across a thread
+/// scope), and [`aggregate`](ShardedMetrics::aggregate) folds them into
+/// one whole-run snapshot.
+#[derive(Debug)]
+pub struct ShardedMetrics {
+    shards: Vec<Metrics>,
+}
+
+impl ShardedMetrics {
+    pub fn new(n_shards: usize) -> Self {
+        ShardedMetrics { shards: (0..n_shards).map(|_| Metrics::new()).collect() }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Counters of one shard (panics if `i` is out of range).
+    pub fn shard(&self, i: usize) -> &Metrics {
+        &self.shards[i]
+    }
+
+    /// Sum of all shard counters.
+    pub fn aggregate(&self) -> MetricsSnapshot {
+        let mut total = MetricsSnapshot {
+            requests: 0,
+            batches: 0,
+            points: 0,
+            oracle: Duration::ZERO,
+            failures: 0,
+        };
+        for m in &self.shards {
+            let s = m.snapshot();
+            total.requests += s.requests;
+            total.batches += s.batches;
+            total.points += s.points;
+            total.oracle += s.oracle;
+            total.failures += s.failures;
+        }
+        total
+    }
+}
+
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -96,5 +152,41 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 0);
         assert!(format!("{s}").contains("batches=0"));
+    }
+
+    #[test]
+    fn sharded_aggregate_sums_shards() {
+        let sm = ShardedMetrics::new(3);
+        sm.shard(0).record_batch(4, Duration::from_millis(1));
+        sm.shard(1).record_batch(2, Duration::from_millis(2));
+        sm.shard(1).record_batch(1, Duration::from_millis(1));
+        let agg = sm.aggregate();
+        assert_eq!(agg.batches, 3);
+        assert_eq!(agg.points, 7);
+        assert_eq!(agg.oracle, Duration::from_millis(4));
+        assert_eq!(sm.shard(2).snapshot().batches, 0);
+        assert_eq!(sm.n_shards(), 3);
+    }
+
+    #[test]
+    fn sharded_metrics_concurrent_recording_is_exact() {
+        // Each worker thread hammers its own shard; totals must be
+        // exact (no lost updates) once the threads have joined.
+        let sm = std::sync::Arc::new(ShardedMetrics::new(4));
+        let mut joins = Vec::new();
+        for s in 0..4 {
+            let sm = std::sync::Arc::clone(&sm);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..500 {
+                    sm.shard(s).record_batch(3, Duration::from_nanos(10));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let agg = sm.aggregate();
+        assert_eq!(agg.batches, 4 * 500);
+        assert_eq!(agg.points, 4 * 500 * 3);
     }
 }

@@ -8,10 +8,15 @@
 //!   [`crate::batcheval::BatchAcqEvaluator`]; clients submit evaluation
 //!   requests over an mpsc channel and the service **coalesces** queued
 //!   requests into one oracle batch (size- and deadline-triggered
-//!   microbatching).
+//!   microbatching). The handle is `Send + Sync`, so the shard workers
+//!   of a [`ParDbe`](crate::optim::mso::ParDbe) run can share one handle
+//!   by reference — their per-shard submissions merge into large oracle
+//!   batches even though shards advance asynchronously.
 //! * [`router::Router`] — routes requests across several services
 //!   (least-loaded pick) for multi-worker deployments.
-//! * [`metrics::Metrics`] — atomic counters surfaced by the CLI.
+//! * [`metrics::Metrics`] — atomic counters surfaced by the CLI; the
+//!   [`metrics::ShardedMetrics`] registry gives every Par-D-BE shard its
+//!   own counter set.
 //!
 //! All of it is std-only (`std::thread` + `std::sync::mpsc`): tokio is
 //! unavailable offline, and the workload — few long-lived workers, small
@@ -21,6 +26,6 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ShardedMetrics};
 pub use router::Router;
 pub use service::{BatchService, ServiceConfig};

@@ -1,18 +1,29 @@
 //! Batch-coalescing evaluation service.
 //!
 //! One worker thread owns the evaluator. Clients (e.g. concurrent BO
-//! studies, or the B workers of a distributed D-BE) send
-//! `(points, reply)` requests; the worker drains everything queued
-//! (up to `max_batch` points, waiting at most `max_wait` after the
-//! first request) and dispatches ONE oracle call for the coalesced
-//! batch — the same microbatching discipline a vLLM-style router uses,
-//! applied to acquisition evaluations.
+//! studies, or the shard workers of a
+//! [`ParDbe`](crate::optim::mso::ParDbe) run) send `(points, reply)`
+//! requests; the worker drains everything queued (up to `max_batch`
+//! points, waiting at most `max_wait` after the first request) and
+//! dispatches ONE oracle call for the coalesced batch — the same
+//! microbatching discipline a vLLM-style router uses, applied to
+//! acquisition evaluations.
+//!
+//! The [`BatchService`] handle is `Send + Sync` (the sender sits behind
+//! a short-lived mutex), so one handle can be shared by reference across
+//! a thread scope — the shape Par-D-BE needs. Cloning the handle per
+//! thread also works and avoids even that brief lock.
+//!
+//! Shutdown discipline: the worker exits when every handle is dropped
+//! AND the request queue is empty — `mpsc` receivers keep yielding
+//! queued messages after all senders disconnect, so in-flight requests
+//! are drained and answered, never dropped.
 
 use super::metrics::Metrics;
 use crate::batcheval::BatchAcqEvaluator;
 use crate::error::{Error, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -37,11 +48,31 @@ struct Request {
 }
 
 /// Handle to a running batch service. Cloning shares the same worker.
-#[derive(Clone)]
+///
+/// The handle is `Send + Sync`: `mpsc::Sender` alone does not guarantee
+/// `Sync` across toolchain versions, so the sender lives behind a mutex
+/// held only for the (non-blocking) enqueue.
 pub struct BatchService {
-    tx: Sender<Request>,
+    tx: Mutex<Sender<Request>>,
     pub metrics: Arc<Metrics>,
     dim: usize,
+}
+
+// Compile-time guarantee that a handle can be shared by reference
+// across Par-D-BE shard threads.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<BatchService>();
+};
+
+impl Clone for BatchService {
+    fn clone(&self) -> Self {
+        BatchService {
+            tx: Mutex::new(self.lock_tx().clone()),
+            metrics: Arc::clone(&self.metrics),
+            dim: self.dim,
+        }
+    }
 }
 
 impl BatchService {
@@ -55,18 +86,24 @@ impl BatchService {
         let m = Arc::clone(&metrics);
         let dim = evaluator.dim();
         let handle = std::thread::spawn(move || worker_loop(evaluator, cfg, rx, m));
-        (BatchService { tx, metrics, dim }, handle)
+        (BatchService { tx: Mutex::new(tx), metrics, dim }, handle)
     }
 
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    fn lock_tx(&self) -> std::sync::MutexGuard<'_, Sender<Request>> {
+        // A panic between lock and unlock cannot leave the sender in a
+        // bad state (send is atomic), so poisoning is ignored.
+        self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Evaluate a batch through the service (blocking).
     pub fn eval(&self, points: Vec<Vec<f64>>) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (reply_tx, reply_rx) = channel();
-        self.tx
+        self.lock_tx()
             .send(Request { points, reply: reply_tx })
             .map_err(|_| Error::Coordinator("service worker is gone".into()))?;
         reply_rx
@@ -123,15 +160,17 @@ fn worker_loop(
             }
         }
 
-        // One oracle call for the whole coalesced batch.
+        // One oracle call for the whole coalesced batch. Only successful
+        // calls land in batches/points (see the [`Metrics`] counting
+        // discipline); failures count separately.
         let all_points: Vec<Vec<f64>> =
             pending.iter().flat_map(|r| r.points.iter().cloned()).collect();
         let t0 = Instant::now();
         let outcome = evaluator.eval_batch(&all_points);
-        metrics.record_batch(all_points.len(), t0.elapsed());
 
         match outcome {
             Ok((vals, grads)) => {
+                metrics.record_batch(all_points.len(), t0.elapsed());
                 let mut off = 0;
                 for req in pending {
                     let k = req.points.len();
@@ -276,6 +315,54 @@ mod tests {
         let x0s = vec![vec![2.0; 3], vec![0.5; 3]];
         let res = run_mso(MsoStrategy::Dbe, &svc, &x0s, &cfg).unwrap();
         assert!(res.best_f < 1e-6);
+        drop(svc);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn one_handle_shared_by_reference_across_par_dbe_shards() {
+        // The Sync-handle path: Par-D-BE shard threads share ONE
+        // BatchService by reference (no per-thread clones), and the
+        // worker coalesces their submissions.
+        use crate::optim::lbfgsb::LbfgsbOptions;
+        use crate::optim::mso::{MsoConfig, ParDbe};
+        let (svc, handle) = spawn_rosen(
+            3,
+            ServiceConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+        );
+        let cfg = MsoConfig { bounds: vec![(0.0, 3.0); 3], lbfgsb: LbfgsbOptions::default() };
+        let x0s = vec![vec![2.0; 3], vec![0.5; 3], vec![1.5; 3], vec![2.8; 3]];
+        let res = ParDbe::with_workers(2).run(&svc, &x0s, &cfg).unwrap();
+        assert!(res.best_f < 1e-6);
+        assert_eq!(res.shards.len(), 2);
+        let snap = svc.metrics.snapshot();
+        // Client-side submissions ≥ worker-side oracle batches means
+        // coalescing merged at least some cross-shard submissions (and
+        // never lost one).
+        assert_eq!(snap.points as usize, res.n_points);
+        assert!(snap.batches as usize <= res.n_batches);
+        drop(svc);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn failed_oracle_counts_failures_not_batches() {
+        struct AlwaysFails;
+        impl BatchAcqEvaluator for AlwaysFails {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn eval_batch(&self, _: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+                Err(Error::Runtime("oracle down".into()))
+            }
+        }
+        let (svc, handle) = BatchService::spawn(Box::new(AlwaysFails), ServiceConfig::default());
+        assert!(svc.eval(vec![vec![0.0; 2]]).is_err());
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.failures, 1);
+        assert_eq!(snap.batches, 0, "failed dispatches must not count as batches");
+        assert_eq!(snap.points, 0, "failed dispatches must not count points");
+        assert_eq!(snap.requests, 1);
         drop(svc);
         handle.join().unwrap();
     }

@@ -6,11 +6,15 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: a multi-start
-//!   acquisition optimizer with three interchangeable strategies
-//!   ([`optim::mso::SeqOpt`], [`optim::mso::Cbe`], [`optim::mso::Dbe`])
-//!   built on a from-scratch ask/tell L-BFGS-B ([`optim::lbfgsb`]), a
-//!   native Gaussian-process stack ([`gp`]), a BO study loop ([`bo`]),
-//!   and a thread-channel batching coordinator ([`coordinator`]).
+//!   acquisition optimizer with interchangeable strategies
+//!   ([`optim::mso::SeqOpt`], [`optim::mso::Cbe`], [`optim::mso::Dbe`],
+//!   and the sharded multi-threaded [`optim::mso::ParDbe`]) built on a
+//!   from-scratch ask/tell L-BFGS-B ([`optim::lbfgsb`]), a native
+//!   Gaussian-process stack ([`gp`]), a BO study loop ([`bo`]), and a
+//!   thread-channel batching coordinator ([`coordinator`]) whose
+//!   [`coordinator::BatchService`] coalesces concurrent submissions —
+//!   including those of Par-D-BE's shard workers — into single oracle
+//!   calls.
 //! * **Layer 2 (JAX, build-time)** — GP posterior + LogEI value/grad
 //!   batched over restarts, AOT-lowered to HLO text per shape bucket
 //!   (`python/compile/model.py`).
@@ -20,6 +24,32 @@
 //! The [`runtime`] module loads the AOT artifacts via PJRT and exposes
 //! them as a [`batcheval::BatchAcqEvaluator`], so Python never runs on
 //! the request path.
+//!
+//! See `README.md` for the crate layout and strategy-to-algorithm map,
+//! and `EXPERIMENTS.md` for the bench methodology and the mapping from
+//! `repro` targets to the paper's figures and tables.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use dbe_bo::bo::{Study, StudyConfig};
+//! use dbe_bo::optim::mso::MsoStrategy;
+//!
+//! // Minimize a 2-D bowl with D-BE Bayesian optimization.
+//! let cfg = StudyConfig {
+//!     dim: 2,
+//!     bounds: vec![(-2.0, 2.0); 2],
+//!     n_trials: 15,
+//!     n_startup: 6,
+//!     restarts: 4,
+//!     strategy: MsoStrategy::Dbe,
+//!     ..StudyConfig::default()
+//! };
+//! let mut study = Study::new(cfg, 42);
+//! let best = study.optimize(|x| x[0].powi(2) + x[1].powi(2));
+//! assert!(best.value < 4.0, "BO must beat the box average easily");
+//! assert!(study.stats.n_batches <= study.stats.n_points);
+//! ```
 
 pub mod batcheval;
 pub mod bbob;

@@ -8,13 +8,13 @@
 //! dbe-bo info
 //! ```
 
-use dbe_bo::bbob;
+use dbe_bo::bbob::{self, Objective};
 use dbe_bo::bo::{Study, StudyConfig};
 use dbe_bo::cli::Args;
 use dbe_bo::config::BenchProtocol;
 use dbe_bo::coordinator::{BatchService, Router, ServiceConfig};
 use dbe_bo::optim::lbfgsb::LbfgsbOptions;
-use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+use dbe_bo::optim::mso::{run_mso_shared, MsoConfig, MsoStrategy, ParDbe};
 use dbe_bo::repro::{fig_convergence, fig_hessian, table_bench, Solver};
 use dbe_bo::rng::Pcg64;
 use dbe_bo::{Error, Result};
@@ -52,13 +52,13 @@ fn print_usage() {
         "dbe-bo — Decoupled QN updates + Batched acquisition Evaluations (D-BE)\n\
          \n\
          USAGE:\n\
-           dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [--fast|--paper] [--out DIR]\n\
-           dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe] [--trials N] [--seed S]\n\
-           dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe]\n\
+           dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [--fast|--paper] [--with-par] [--out DIR]\n\
+           dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe|par_dbe] [--trials N] [--seed S]\n\
+           dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe|par_dbe] [--par-workers K]\n\
            dbe-bo serve --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo info\n\
          \n\
-         Repro targets regenerate every figure/table of the paper; see DESIGN.md §4."
+         Repro targets regenerate every figure/table of the paper; see EXPERIMENTS.md."
     );
 }
 
@@ -162,6 +162,8 @@ fn cmd_bo(args: &Args) -> Result<()> {
             max_evals: 50_000,
         },
         fit_every: 1,
+        par_workers: args.get_usize("par-workers", 0)?,
+        eval_workers: args.get_usize("eval-workers", 1)?,
     };
     println!(
         "BO on {name} (D={dim}) with {} — {} trials, B={}",
@@ -218,9 +220,16 @@ fn cmd_mso(args: &Args) -> Result<()> {
         "all" => MsoStrategy::all_with_ablations().to_vec(),
         s => vec![MsoStrategy::parse(s)?],
     };
+    let par_workers = args.get_usize("par-workers", 0)?;
     println!("MSO on {name} (D={dim}, B={b})");
     for strat in strategies {
-        let res = run_mso(strat, &ev, &x0s, &cfg)?;
+        // The synthetic oracle is Sync, so Par-D-BE gets its real
+        // worker pool — honoring --par-workers (0 = one per core).
+        let res = if strat == MsoStrategy::ParDbe {
+            ParDbe::with_workers(par_workers).run(&ev, &x0s, &cfg)?
+        } else {
+            run_mso_shared(strat, &ev, &x0s, &cfg)?
+        };
         println!(
             "  {:<9} best {:>12.4e} | median iters {:>6.1} | batches {:>5} | points {:>6} | wall {:>8.2?}",
             strat.name(),
@@ -230,6 +239,12 @@ fn cmd_mso(args: &Args) -> Result<()> {
             res.n_points,
             res.wall,
         );
+        for s in &res.shards {
+            println!(
+                "      shard {:>2}: {} restarts, {} submissions, {} points, oracle {:.2?}",
+                s.shard, s.restarts, s.batches, s.points, s.oracle
+            );
+        }
     }
     Ok(())
 }
@@ -263,7 +278,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for s in 0..n_studies {
         let name = name.clone();
         // Each study thread gets its own Router handle over the SAME
-        // shared workers (mpsc senders clone; they are not Sync).
+        // shared workers (handles are Sync, but per-thread clones skip
+        // even the brief sender lock).
         let worker_handles = workers.clone();
         joins.push(std::thread::spawn(move || -> Result<f64> {
             use dbe_bo::batcheval::BatchAcqEvaluator;

@@ -12,11 +12,83 @@
 use super::{MsoConfig, MsoResult, RestartResult};
 use crate::batcheval::BatchAcqEvaluator;
 use crate::optim::lbfgsb::Lbfgsb;
-use crate::optim::{Ask, AskTellOptimizer};
+use crate::optim::{Ask, AskTellOptimizer, StopReason};
 use crate::Result;
+use std::time::{Duration, Instant};
 
 /// Decoupled updates + batched evaluations.
 pub struct Dbe;
+
+/// The D-BE inner loop: drive a set of ask/tell states to completion
+/// with one batched oracle call per outer step, pruning converged
+/// states from the batch (the paper's active-set shrinking).
+///
+/// This is THE loop whose trajectory semantics the equivalence tests
+/// pin down, so it has exactly one implementation: [`Dbe`] runs it over
+/// all B states, and each [`ParDbe`](super::ParDbe) shard runs it over
+/// its subset. `on_batch(points, oracle_wall)` fires after every
+/// successful oracle call (counters / per-shard metrics hook).
+///
+/// Returns each state's stop reason (`None` = never reported `Done`,
+/// i.e. the evaluation cap cut it off).
+pub(super) fn drive_decoupled(
+    opts: &mut [Lbfgsb],
+    evaluator: &dyn BatchAcqEvaluator,
+    mut on_batch: impl FnMut(usize, Duration),
+) -> Result<Vec<Option<StopReason>>> {
+    let b = opts.len();
+
+    // Active set A ⊆ {1..B} of unconverged restarts.
+    let mut active: Vec<usize> = (0..b).collect();
+    let mut reasons: Vec<Option<StopReason>> = vec![None; b];
+
+    // Reused batch buffers: allocation here is per-outer-step, not
+    // per-point (hot-path discipline; see EXPERIMENTS.md §Perf).
+    let mut xs: Vec<Vec<f64>> = Vec::with_capacity(b);
+    let mut idx: Vec<usize> = Vec::with_capacity(b);
+
+    while !active.is_empty() {
+        xs.clear();
+        idx.clear();
+        // Gather pending points; prune any restart that reports Done.
+        active.retain(|&i| match opts[i].ask() {
+            Ask::Evaluate(x) => {
+                xs.push(x);
+                idx.push(i);
+                true
+            }
+            Ask::Done(r) => {
+                reasons[i] = Some(r);
+                false
+            }
+        });
+        if xs.is_empty() {
+            break;
+        }
+
+        // ▶ Batched Evaluation (one oracle call for all active restarts)
+        let t = Instant::now();
+        let (vals, grads) = evaluator.eval_batch(&xs)?;
+        on_batch(xs.len(), t.elapsed());
+
+        // ▶ Decoupled QN updates: each state sees only its own (f, g).
+        for (k, &i) in idx.iter().enumerate() {
+            opts[i].tell(vals[k], &grads[k]);
+        }
+    }
+
+    Ok(reasons)
+}
+
+/// Package one driven state as a [`RestartResult`].
+pub(super) fn restart_result(opt: &Lbfgsb, reason: Option<StopReason>) -> RestartResult {
+    RestartResult {
+        x: opt.best_x().to_vec(),
+        f: opt.best_f(),
+        iters: opt.n_iters(),
+        reason: reason.unwrap_or(StopReason::MaxEvals),
+    }
+}
 
 impl Dbe {
     pub fn run(
@@ -25,8 +97,7 @@ impl Dbe {
         x0s: &[Vec<f64>],
         cfg: &MsoConfig,
     ) -> Result<MsoResult> {
-        let t0 = std::time::Instant::now();
-        let b = x0s.len();
+        let t0 = Instant::now();
 
         // [D-BE] Initialize independent QN optimizers O_1 … O_B.
         let mut opts: Vec<Lbfgsb> = x0s
@@ -34,56 +105,17 @@ impl Dbe {
             .map(|x0| Lbfgsb::new(x0.clone(), cfg.bounds.clone(), cfg.lbfgsb))
             .collect::<Result<_>>()?;
 
-        // Active set A ⊆ {1..B} of unconverged restarts.
-        let mut active: Vec<usize> = (0..b).collect();
-        let mut reasons: Vec<Option<crate::optim::StopReason>> = vec![None; b];
         let mut n_batches = 0usize;
         let mut n_points = 0usize;
-
-        // Reused batch buffers: allocation here is per-outer-step, not
-        // per-point (hot-path discipline; see EXPERIMENTS.md §Perf).
-        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(b);
-        let mut idx: Vec<usize> = Vec::with_capacity(b);
-
-        while !active.is_empty() {
-            xs.clear();
-            idx.clear();
-            // Gather pending points; prune any restart that reports Done.
-            active.retain(|&i| match opts[i].ask() {
-                Ask::Evaluate(x) => {
-                    xs.push(x);
-                    idx.push(i);
-                    true
-                }
-                Ask::Done(r) => {
-                    reasons[i] = Some(r);
-                    false
-                }
-            });
-            if xs.is_empty() {
-                break;
-            }
-
-            // ▶ Batched Evaluation (one oracle call for all active restarts)
-            let (vals, grads) = evaluator.eval_batch(&xs)?;
+        let reasons = drive_decoupled(&mut opts, evaluator, |points, _| {
             n_batches += 1;
-            n_points += xs.len();
-
-            // ▶ Decoupled QN updates: each state sees only its own (f, g).
-            for (k, &i) in idx.iter().enumerate() {
-                opts[i].tell(vals[k], &grads[k]);
-            }
-        }
+            n_points += points;
+        })?;
 
         let restarts: Vec<RestartResult> = opts
             .iter()
-            .enumerate()
-            .map(|(i, o)| RestartResult {
-                x: o.best_x().to_vec(),
-                f: o.best_f(),
-                iters: o.n_iters(),
-                reason: reasons[i].unwrap_or(crate::optim::StopReason::MaxEvals),
-            })
+            .zip(&reasons)
+            .map(|(o, &reason)| restart_result(o, reason))
             .collect();
 
         Ok(MsoResult::from_restarts(restarts, n_batches, n_points, t0.elapsed()))

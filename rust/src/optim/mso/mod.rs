@@ -1,6 +1,6 @@
 //! Multi-start optimization (MSO) — the paper's contribution.
 //!
-//! Three interchangeable strategies over a [`BatchAcqEvaluator`]:
+//! Interchangeable strategies over a [`BatchAcqEvaluator`]:
 //!
 //! * [`SeqOpt`] (Algorithm 2) — B independent L-BFGS-B runs, one point
 //!   evaluated per call. Gold-standard trajectories, no batching.
@@ -15,15 +15,43 @@
 //!   `(f, g)`. Trajectories are theoretically identical to SEQ. OPT.;
 //!   converged restarts are pruned from the batch (the paper's
 //!   active-set shrinking).
+//! * [`ParDbe`] — sharded, multi-threaded D-BE: the B restarts are
+//!   partitioned across a worker pool; each worker drives its shard's
+//!   ask/tell states and submits its pending points to the shared
+//!   evaluator, so a coalescing
+//!   [`BatchService`](crate::coordinator::BatchService) still sees
+//!   large oracle batches while shards advance asynchronously.
+//!   Per-restart trajectories remain identical to D-BE/SEQ. OPT.
+//!
+//! ## Example
+//!
+//! ```
+//! use dbe_bo::batcheval::SyntheticEvaluator;
+//! use dbe_bo::bbob::Rosenbrock;
+//! use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+//! use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
+//!
+//! let ev = SyntheticEvaluator::new(Box::new(Rosenbrock::new(2)));
+//! let cfg = MsoConfig {
+//!     bounds: vec![(0.0, 3.0); 2],
+//!     lbfgsb: LbfgsbOptions::default(),
+//! };
+//! let x0s = vec![vec![0.5, 2.5], vec![2.0, 0.2]];
+//! let res = run_mso(MsoStrategy::Dbe, &ev, &x0s, &cfg).unwrap();
+//! assert!(res.best_f < 1e-6); // Rosenbrock optimum (1, 1) is in-bounds
+//! assert!(res.n_batches <= res.n_points);
+//! ```
 
 mod cbe;
 mod cbe_blockdiag;
 mod dbe;
+mod par_dbe;
 mod seq;
 
 pub use cbe::Cbe;
 pub use cbe_blockdiag::CbeBlockDiag;
 pub use dbe::Dbe;
+pub use par_dbe::ParDbe;
 pub use seq::SeqOpt;
 
 use crate::batcheval::BatchAcqEvaluator;
@@ -32,6 +60,13 @@ use crate::optim::StopReason;
 use crate::Result;
 
 /// Which MSO strategy to run.
+///
+/// ```
+/// use dbe_bo::optim::mso::MsoStrategy;
+/// assert_eq!(MsoStrategy::parse("d-be").unwrap(), MsoStrategy::Dbe);
+/// assert_eq!(MsoStrategy::parse("par_dbe").unwrap(), MsoStrategy::ParDbe);
+/// assert!(MsoStrategy::parse("nope").is_err());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MsoStrategy {
     SeqOpt,
@@ -40,6 +75,10 @@ pub enum MsoStrategy {
     /// Ablation: partitioned (block-diagonal) QN memory with C-BE's
     /// shared line search — see [`CbeBlockDiag`].
     CbeBlockDiag,
+    /// Sharded multi-threaded D-BE — see [`ParDbe`]. Through [`run_mso`]
+    /// (thread-bound evaluators) it degrades to single-threaded D-BE;
+    /// [`run_mso_shared`] runs the real worker pool.
+    ParDbe,
 }
 
 impl MsoStrategy {
@@ -49,6 +88,7 @@ impl MsoStrategy {
             MsoStrategy::Cbe => "C-BE",
             MsoStrategy::Dbe => "D-BE",
             MsoStrategy::CbeBlockDiag => "C-BE/BLK",
+            MsoStrategy::ParDbe => "Par-D-BE",
         }
     }
 
@@ -58,6 +98,7 @@ impl MsoStrategy {
             "cbe" | "c_be" => MsoStrategy::Cbe,
             "dbe" | "d_be" => MsoStrategy::Dbe,
             "cbe_blk" | "c_be_blk" | "blockdiag" => MsoStrategy::CbeBlockDiag,
+            "par_dbe" | "pardbe" | "par_d_be" | "par" => MsoStrategy::ParDbe,
             other => {
                 return Err(crate::Error::Config(format!("unknown strategy '{other}'")))
             }
@@ -69,13 +110,14 @@ impl MsoStrategy {
         [MsoStrategy::SeqOpt, MsoStrategy::Cbe, MsoStrategy::Dbe]
     }
 
-    /// All strategies including the ablation.
-    pub fn all_with_ablations() -> [MsoStrategy; 4] {
+    /// All strategies including the ablation and the sharded variant.
+    pub fn all_with_ablations() -> [MsoStrategy; 5] {
         [
             MsoStrategy::SeqOpt,
             MsoStrategy::Cbe,
             MsoStrategy::CbeBlockDiag,
             MsoStrategy::Dbe,
+            MsoStrategy::ParDbe,
         ]
     }
 }
@@ -92,6 +134,22 @@ pub struct RestartResult {
     pub reason: StopReason,
 }
 
+/// Per-shard accounting for a [`ParDbe`] run (empty for the
+/// single-threaded strategies).
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// Worker/shard index.
+    pub shard: usize,
+    /// Restarts assigned to this shard.
+    pub restarts: usize,
+    /// Evaluator submissions issued by this shard.
+    pub batches: usize,
+    /// Points this shard pushed through the evaluator.
+    pub points: usize,
+    /// Wall-clock this shard spent inside the evaluator.
+    pub oracle: std::time::Duration,
+}
+
 /// Outcome of one MSO run.
 #[derive(Clone, Debug)]
 pub struct MsoResult {
@@ -105,6 +163,8 @@ pub struct MsoResult {
     pub n_points: usize,
     /// Wall-clock of the whole MSO call.
     pub wall: std::time::Duration,
+    /// Per-shard breakdown ([`ParDbe`] only; empty otherwise).
+    pub shards: Vec<ShardStats>,
 }
 
 impl MsoResult {
@@ -131,6 +191,7 @@ impl MsoResult {
             n_batches,
             n_points,
             wall,
+            shards: Vec::new(),
         }
     }
 }
@@ -145,16 +206,8 @@ pub struct MsoConfig {
     pub lbfgsb: LbfgsbOptions,
 }
 
-/// Run the given strategy from the provided starting points.
-///
-/// This is the single entry point used by the BO loop, the benchmark
-/// harness, and the examples.
-pub fn run_mso(
-    strategy: MsoStrategy,
-    evaluator: &dyn BatchAcqEvaluator,
-    x0s: &[Vec<f64>],
-    cfg: &MsoConfig,
-) -> Result<MsoResult> {
+/// Check starting points against the configured bounds.
+fn validate(x0s: &[Vec<f64>], cfg: &MsoConfig) -> Result<()> {
     if x0s.is_empty() {
         return Err(crate::Error::Optim("MSO needs at least one starting point".into()));
     }
@@ -165,11 +218,55 @@ pub fn run_mso(
             cfg.bounds.len()
         )));
     }
+    Ok(())
+}
+
+/// Run the given strategy from the provided starting points.
+///
+/// This is the single entry point used by the BO loop, the benchmark
+/// harness, and the examples.
+///
+/// [`MsoStrategy::ParDbe`] needs an evaluator that can be shared across
+/// worker threads; because a bare `&dyn BatchAcqEvaluator` carries no
+/// `Sync` guarantee (the PJRT evaluator is deliberately thread-bound),
+/// this entry point runs Par-D-BE as single-threaded D-BE — the
+/// per-restart trajectories are identical by construction. Call
+/// [`run_mso_shared`] (or [`ParDbe::run`] directly) to get the actual
+/// worker pool.
+pub fn run_mso(
+    strategy: MsoStrategy,
+    evaluator: &dyn BatchAcqEvaluator,
+    x0s: &[Vec<f64>],
+    cfg: &MsoConfig,
+) -> Result<MsoResult> {
+    validate(x0s, cfg)?;
     match strategy {
         MsoStrategy::SeqOpt => SeqOpt.run(evaluator, x0s, cfg),
         MsoStrategy::Cbe => Cbe.run(evaluator, x0s, cfg),
-        MsoStrategy::Dbe => Dbe.run(evaluator, x0s, cfg),
+        MsoStrategy::Dbe | MsoStrategy::ParDbe => Dbe.run(evaluator, x0s, cfg),
         MsoStrategy::CbeBlockDiag => CbeBlockDiag.run(evaluator, x0s, cfg),
+    }
+}
+
+/// Like [`run_mso`], for evaluators that may be shared across threads.
+///
+/// [`MsoStrategy::ParDbe`] gets its sharded worker pool (sized from
+/// [`std::thread::available_parallelism`]; call
+/// [`ParDbe::with_workers`] directly for an explicit count); every
+/// other strategy behaves exactly as under [`run_mso`]. This is the
+/// entry point the CLI and the benches use with the native/synthetic
+/// oracles and with the coalescing
+/// [`BatchService`](crate::coordinator::BatchService) handle, all of
+/// which are `Sync`.
+pub fn run_mso_shared(
+    strategy: MsoStrategy,
+    evaluator: &(dyn BatchAcqEvaluator + Sync),
+    x0s: &[Vec<f64>],
+    cfg: &MsoConfig,
+) -> Result<MsoResult> {
+    match strategy {
+        MsoStrategy::ParDbe => ParDbe::auto().run(evaluator, x0s, cfg),
+        _ => run_mso(strategy, evaluator, x0s, cfg),
     }
 }
 
@@ -286,7 +383,40 @@ mod tests {
         assert_eq!(MsoStrategy::parse("seq").unwrap(), MsoStrategy::SeqOpt);
         assert_eq!(MsoStrategy::parse("C-BE").unwrap(), MsoStrategy::Cbe);
         assert_eq!(MsoStrategy::parse("d_be").unwrap(), MsoStrategy::Dbe);
+        assert_eq!(MsoStrategy::parse("par-dbe").unwrap(), MsoStrategy::ParDbe);
+        assert_eq!(MsoStrategy::parse("Par_D_BE").unwrap(), MsoStrategy::ParDbe);
         assert!(MsoStrategy::parse("xx").is_err());
+    }
+
+    #[test]
+    fn run_mso_par_dbe_falls_back_to_dbe() {
+        // Through the thread-bound entry point, Par-D-BE must be
+        // indistinguishable from D-BE (same trajectories, same batch
+        // accounting, no shards).
+        let d = 4;
+        let ev = rosen_eval(d);
+        let x0 = starts(5, d, 29);
+        let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0, &cfg(d)).unwrap();
+        let par = run_mso(MsoStrategy::ParDbe, &ev, &x0, &cfg(d)).unwrap();
+        assert_eq!(dbe.n_batches, par.n_batches);
+        for (a, b) in dbe.restarts.iter().zip(&par.restarts) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.iters, b.iters);
+        }
+        assert!(par.shards.is_empty());
+    }
+
+    #[test]
+    fn run_mso_shared_par_dbe_reports_shards() {
+        let d = 4;
+        let ev = rosen_eval(d);
+        let x0 = starts(6, d, 31);
+        let res = run_mso_shared(MsoStrategy::ParDbe, &ev, &x0, &cfg(d)).unwrap();
+        assert_eq!(res.restarts.len(), 6);
+        assert!(!res.shards.is_empty());
+        assert_eq!(res.shards.iter().map(|s| s.restarts).sum::<usize>(), 6);
+        assert_eq!(res.shards.iter().map(|s| s.points).sum::<usize>(), res.n_points);
+        assert_eq!(res.shards.iter().map(|s| s.batches).sum::<usize>(), res.n_batches);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Par-D-BE: sharded, multi-threaded D-BE.
+//!
+//! The B independent ask/tell L-BFGS-B restarts are partitioned across a
+//! small pool of OS threads. Each worker runs the plain D-BE loop over
+//! its shard — gather the pending points of its *active* restarts, issue
+//! one evaluator call, dispatch `(f, g)` back — so converged restarts
+//! still drop out per shard (the paper's active-set pruning survives
+//! sharding). Because every restart's state machine only ever sees its
+//! own `(f, g)` stream and the oracle is a pure function of the point,
+//! per-restart trajectories are bitwise identical to [`Dbe`](super::Dbe)
+//! and SEQ. OPT., regardless of worker count or scheduling.
+//!
+//! The intended deployment pairs this with the coalescing
+//! [`BatchService`](crate::coordinator::BatchService): each shard submits
+//! its (smaller) pending batch to the shared service, which coalesces
+//! submissions from all shards into single oracle calls — the evaluator
+//! still sees large batches even though shards advance asynchronously.
+//! With a plain in-process evaluator (native GP, synthetic), sharding
+//! instead parallelizes the evaluation work itself.
+//!
+//! Per-shard submission counts land in [`MsoResult::shards`], backed by
+//! the coordinator's [`ShardedMetrics`] registry.
+
+use super::{MsoConfig, MsoResult, RestartResult, ShardStats};
+use crate::batcheval::BatchAcqEvaluator;
+use crate::coordinator::metrics::ShardedMetrics;
+use crate::optim::lbfgsb::Lbfgsb;
+use crate::Result;
+use std::time::Instant;
+
+/// Sharded multi-threaded D-BE (see the [module docs](self)).
+pub struct ParDbe {
+    /// Worker threads; 0 = one per available core (capped at B).
+    n_workers: usize,
+}
+
+impl ParDbe {
+    /// One worker per available core (capped at the number of restarts).
+    pub fn auto() -> Self {
+        ParDbe { n_workers: 0 }
+    }
+
+    /// Fixed worker count; `0` means auto. `with_workers(1)` is
+    /// single-threaded and exactly equivalent to [`Dbe`](super::Dbe).
+    pub fn with_workers(n_workers: usize) -> Self {
+        ParDbe { n_workers }
+    }
+
+    fn resolve_workers(&self, b: usize) -> usize {
+        let requested = if self.n_workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.n_workers
+        };
+        requested.min(b).max(1)
+    }
+
+    /// Run the sharded MSO. The evaluator must be shareable across the
+    /// worker threads (`Sync`); [`crate::coordinator::BatchService`],
+    /// [`crate::batcheval::NativeGpEvaluator`], and
+    /// [`crate::batcheval::SyntheticEvaluator`] all are.
+    pub fn run(
+        &self,
+        evaluator: &(dyn BatchAcqEvaluator + Sync),
+        x0s: &[Vec<f64>],
+        cfg: &MsoConfig,
+    ) -> Result<MsoResult> {
+        super::validate(x0s, cfg)?;
+        let t0 = Instant::now();
+        let b = x0s.len();
+        let n_workers = self.resolve_workers(b);
+
+        // Contiguous shards whose sizes differ by at most one.
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_workers];
+        for i in 0..b {
+            shards[i * n_workers / b].push(i);
+        }
+
+        let metrics = ShardedMetrics::new(n_workers);
+
+        // Scoped workers: each drives its shard to completion against
+        // the shared evaluator. Panics propagate; the first shard error
+        // is returned after every worker has joined.
+        let shard_outcomes: Vec<Result<Vec<(usize, RestartResult)>>> =
+            std::thread::scope(|scope| {
+                let mut joins = Vec::with_capacity(n_workers);
+                for (shard_id, shard) in shards.iter().enumerate() {
+                    let metrics = &metrics;
+                    joins.push(scope.spawn(move || {
+                        run_shard(shard_id, shard, evaluator, x0s, cfg, metrics)
+                    }));
+                }
+                joins
+                    .into_iter()
+                    .map(|j| j.join().expect("Par-D-BE shard panicked"))
+                    .collect()
+            });
+
+        let mut slots: Vec<Option<RestartResult>> = vec![None; b];
+        for outcome in shard_outcomes {
+            for (i, r) in outcome? {
+                slots[i] = Some(r);
+            }
+        }
+        let restarts: Vec<RestartResult> = slots
+            .into_iter()
+            .map(|r| r.expect("every restart belongs to exactly one shard"))
+            .collect();
+
+        let agg = metrics.aggregate();
+        let shard_stats: Vec<ShardStats> = (0..n_workers)
+            .map(|s| {
+                let snap = metrics.shard(s).snapshot();
+                ShardStats {
+                    shard: s,
+                    restarts: shards[s].len(),
+                    batches: snap.batches as usize,
+                    points: snap.points as usize,
+                    oracle: snap.oracle,
+                }
+            })
+            .collect();
+
+        let mut res = MsoResult::from_restarts(
+            restarts,
+            agg.batches as usize,
+            agg.points as usize,
+            t0.elapsed(),
+        );
+        res.shards = shard_stats;
+        Ok(res)
+    }
+}
+
+/// One worker: the shared D-BE inner loop ([`super::dbe::drive_decoupled`])
+/// restricted to `restart_ids`, with each successful submission recorded
+/// in this shard's metrics. Against a `BatchService` the submission is
+/// where cross-shard coalescing happens.
+fn run_shard(
+    shard_id: usize,
+    restart_ids: &[usize],
+    evaluator: &(dyn BatchAcqEvaluator + Sync),
+    x0s: &[Vec<f64>],
+    cfg: &MsoConfig,
+    metrics: &ShardedMetrics,
+) -> Result<Vec<(usize, RestartResult)>> {
+    let mut opts: Vec<Lbfgsb> = restart_ids
+        .iter()
+        .map(|&i| Lbfgsb::new(x0s[i].clone(), cfg.bounds.clone(), cfg.lbfgsb))
+        .collect::<Result<_>>()?;
+
+    // Full Metrics discipline per shard: every submission is a request,
+    // successes land in batches/points, an evaluator error lands in
+    // failures (and aborts the shard via the Err return).
+    let shard_metrics = metrics.shard(shard_id);
+    use std::sync::atomic::Ordering::Relaxed;
+    let reasons = super::dbe::drive_decoupled(&mut opts, evaluator, |points, wall| {
+        shard_metrics.requests.fetch_add(1, Relaxed);
+        shard_metrics.record_batch(points, wall);
+    })
+    .map_err(|e| {
+        shard_metrics.requests.fetch_add(1, Relaxed);
+        shard_metrics.failures.fetch_add(1, Relaxed);
+        e
+    })?;
+
+    Ok(restart_ids
+        .iter()
+        .zip(opts.iter().zip(&reasons))
+        .map(|(&orig, (o, &reason))| (orig, super::dbe::restart_result(o, reason)))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::SyntheticEvaluator;
+    use crate::bbob::Rosenbrock;
+    use crate::optim::lbfgsb::LbfgsbOptions;
+    use crate::optim::mso::{run_mso, MsoStrategy};
+    use crate::rng::Pcg64;
+
+    fn setup(b: usize, d: usize, seed: u64) -> (SyntheticEvaluator, Vec<Vec<f64>>, MsoConfig) {
+        let ev = SyntheticEvaluator::new(Box::new(Rosenbrock::new(d)));
+        let mut rng = Pcg64::seeded(seed);
+        let x0s = (0..b).map(|_| rng.uniform_vec(d, 0.0, 3.0)).collect();
+        let cfg = MsoConfig { bounds: vec![(0.0, 3.0); d], lbfgsb: LbfgsbOptions::default() };
+        (ev, x0s, cfg)
+    }
+
+    #[test]
+    fn trajectories_invariant_under_worker_count() {
+        // The tentpole claim: sharding never perturbs a restart's
+        // trajectory — any worker count reproduces D-BE bitwise.
+        let (ev, x0s, cfg) = setup(7, 4, 101);
+        let reference = run_mso(MsoStrategy::Dbe, &ev, &x0s, &cfg).unwrap();
+        for workers in [1, 2, 3, 7, 16] {
+            let par = ParDbe::with_workers(workers).run(&ev, &x0s, &cfg).unwrap();
+            assert_eq!(par.restarts.len(), reference.restarts.len());
+            for (a, b) in reference.restarts.iter().zip(&par.restarts) {
+                assert_eq!(a.x, b.x, "workers={workers}: endpoint must match D-BE");
+                assert_eq!(a.f, b.f);
+                assert_eq!(a.iters, b.iters);
+                assert_eq!(a.reason, b.reason);
+            }
+            assert_eq!(par.n_points, reference.n_points, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_dbe_batch_counts() {
+        // With one worker there is exactly one shard, so even the batch
+        // boundaries coincide with D-BE's.
+        let (ev, x0s, cfg) = setup(5, 3, 7);
+        let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0s, &cfg).unwrap();
+        let par = ParDbe::with_workers(1).run(&ev, &x0s, &cfg).unwrap();
+        assert_eq!(par.n_batches, dbe.n_batches);
+        assert_eq!(par.n_points, dbe.n_points);
+        assert_eq!(par.shards.len(), 1);
+        assert_eq!(par.shards[0].restarts, 5);
+    }
+
+    #[test]
+    fn shards_are_balanced_and_exhaustive() {
+        let (ev, x0s, cfg) = setup(10, 3, 13);
+        let par = ParDbe::with_workers(3).run(&ev, &x0s, &cfg).unwrap();
+        assert_eq!(par.shards.len(), 3);
+        let sizes: Vec<usize> = par.shards.iter().map(|s| s.restarts).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1, "shards must differ by at most one restart: {sizes:?}");
+        // Every shard did real work.
+        assert!(par.shards.iter().all(|s| s.batches > 0 && s.points > 0));
+    }
+
+    #[test]
+    fn more_workers_than_restarts_is_clamped() {
+        let (ev, x0s, cfg) = setup(2, 3, 19);
+        let par = ParDbe::with_workers(64).run(&ev, &x0s, &cfg).unwrap();
+        assert_eq!(par.shards.len(), 2, "workers clamp to B");
+        assert!(par.best_f < 1e-6);
+    }
+
+    #[test]
+    fn shard_evaluator_errors_propagate() {
+        struct FailAfter {
+            inner: SyntheticEvaluator,
+            left: std::sync::atomic::AtomicUsize,
+        }
+        impl BatchAcqEvaluator for FailAfter {
+            fn dim(&self) -> usize {
+                self.inner.dim()
+            }
+            fn eval_batch(
+                &self,
+                xs: &[Vec<f64>],
+            ) -> crate::Result<(Vec<f64>, Vec<Vec<f64>>)> {
+                use std::sync::atomic::Ordering;
+                if self.left.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                        v.checked_sub(1)
+                    })
+                    .is_err()
+                {
+                    return Err(crate::Error::Coordinator("oracle down".into()));
+                }
+                self.inner.eval_batch(xs)
+            }
+        }
+        let (inner, x0s, cfg) = setup(6, 3, 23);
+        let ev = FailAfter { inner, left: std::sync::atomic::AtomicUsize::new(4) };
+        let err = ParDbe::with_workers(3).run(&ev, &x0s, &cfg).unwrap_err();
+        assert!(err.to_string().contains("oracle down"));
+    }
+}

@@ -6,7 +6,7 @@
 //! normalization), the median total Runtime, and the median L-BFGS-B
 //! iteration count over trials × restarts.
 
-use crate::bbob;
+use crate::bbob::{self, Objective};
 use crate::benchx::{median, Table};
 use crate::bo::{Study, StudyConfig};
 use crate::config::{write_csv, BenchProtocol};
@@ -39,7 +39,7 @@ pub fn run(protocol: &BenchProtocol, objectives: &[String]) -> Result<Vec<CellRe
             let instance_seed = 1000 + dim as u64;
             let mut per_strategy: Vec<(MsoStrategy, Vec<f64>, Vec<f64>, Vec<f64>)> = Vec::new();
 
-            for strategy in MsoStrategy::all() {
+            for strategy in protocol.strategies() {
                 let mut bests = Vec::new();
                 let mut walls = Vec::new();
                 let mut iters_all = Vec::new();
@@ -54,6 +54,8 @@ pub fn run(protocol: &BenchProtocol, objectives: &[String]) -> Result<Vec<CellRe
                         strategy,
                         lbfgsb: protocol.lbfgsb,
                         fit_every: 1,
+                        par_workers: protocol.par_workers,
+                        eval_workers: 1,
                     };
                     let mut study = Study::new(cfg, 9000 + seed);
                     let t0 = std::time::Instant::now();
@@ -171,6 +173,7 @@ mod tests {
         };
         let results = run(&protocol, &["sphere".to_string()]).unwrap();
         assert_eq!(results.len(), 3); // 1 obj × 1 dim × 3 strategies
+        assert!(results.iter().all(|r| r.strategy != MsoStrategy::ParDbe));
         for r in &results {
             assert!(r.best_value >= 0.0, "normalized best must be ≥ 0");
             assert!(r.runtime_s > 0.0);

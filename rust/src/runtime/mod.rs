@@ -3,7 +3,10 @@
 //!
 //! * [`client`] — thin wrapper over `xla::PjRtClient` (CPU) with
 //!   HLO-text loading (`HloModuleProto::from_text_file`; serialized
-//!   protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+//!   protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1). In the
+//!   default zero-dependency build this is an API-identical stub that
+//!   reports PJRT as unavailable; enable the real client with
+//!   `RUSTFLAGS="--cfg pjrt_runtime"` and a vendored `xla` crate.
 //! * [`manifest`] — parses `artifacts/manifest.txt` and picks the
 //!   smallest shape bucket that fits the current training-set size.
 //! * [`evaluator`] — [`PjrtEvaluator`]: pads the fitted GP state

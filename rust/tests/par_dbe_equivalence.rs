@@ -1,0 +1,154 @@
+//! Par-D-BE cross-strategy equivalence and BatchService coalescing
+//! under multi-client load.
+//!
+//! The paper's guarantee — decoupled QN states make trajectories
+//! independent of how evaluations are batched — extends to sharding:
+//! Par-D-BE must reproduce D-BE (and hence SEQ. OPT.) per restart, for
+//! any worker count, whether the shards evaluate in-process or through
+//! the coalescing service.
+
+use dbe_bo::batcheval::{BatchAcqEvaluator, SyntheticEvaluator};
+use dbe_bo::bbob::{Objective, Rosenbrock};
+use dbe_bo::coordinator::{BatchService, ServiceConfig};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy, ParDbe};
+use dbe_bo::rng::Pcg64;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn rosen_eval(d: usize) -> SyntheticEvaluator {
+    SyntheticEvaluator::new(Box::new(Rosenbrock::new(d)))
+}
+
+fn starts(b: usize, d: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..b).map(|_| rng.uniform_vec(d, 0.0, 3.0)).collect()
+}
+
+fn cfg(d: usize) -> MsoConfig {
+    MsoConfig { bounds: vec![(0.0, 3.0); d], lbfgsb: LbfgsbOptions::default() }
+}
+
+#[test]
+fn par_dbe_matches_dbe_and_seq_per_restart() {
+    // The acceptance equivalence: same x0s, same oracle ⇒ bitwise
+    // identical per-restart results across SEQ / D-BE / Par-D-BE.
+    let d = 5;
+    let ev = rosen_eval(d);
+    let x0s = starts(8, d, 71);
+    let c = cfg(d);
+    let seq = run_mso(MsoStrategy::SeqOpt, &ev, &x0s, &c).unwrap();
+    let dbe = run_mso(MsoStrategy::Dbe, &ev, &x0s, &c).unwrap();
+    for workers in [1, 2, 4, 8] {
+        let par = ParDbe::with_workers(workers).run(&ev, &x0s, &c).unwrap();
+        assert_eq!(par.restarts.len(), 8);
+        for ((s, d_), p) in seq.restarts.iter().zip(&dbe.restarts).zip(&par.restarts) {
+            assert_eq!(s.x, p.x, "workers={workers}: Par-D-BE must replay SEQ");
+            assert_eq!(d_.x, p.x);
+            assert_eq!(s.f, p.f);
+            assert_eq!(s.iters, p.iters);
+            assert_eq!(s.reason, p.reason);
+        }
+    }
+}
+
+#[test]
+fn par_dbe_through_service_matches_direct_run() {
+    // Shards submitting through the coalescing worker must see exactly
+    // the same oracle answers as a direct in-process run — for every
+    // worker count (different shardings hit different coalescing
+    // boundaries).
+    let d = 4;
+    let ev = rosen_eval(d);
+    let x0s = starts(6, d, 73);
+    let c = cfg(d);
+    let direct = ParDbe::with_workers(1).run(&ev, &x0s, &c).unwrap();
+
+    let (svc, handle) = BatchService::spawn(
+        Box::new(rosen_eval(d)),
+        ServiceConfig { max_batch: 32, max_wait: Duration::from_micros(300) },
+    );
+    let mut points_through_service = 0usize;
+    for workers in [1, 2, 4, 8] {
+        let via_service = ParDbe::with_workers(workers).run(&svc, &x0s, &c).unwrap();
+        for (a, b) in direct.restarts.iter().zip(&via_service.restarts) {
+            assert_eq!(a.x, b.x, "workers={workers}: coalescing must not perturb trajectories");
+            assert_eq!(a.f, b.f);
+            assert_eq!(a.iters, b.iters);
+        }
+        assert_eq!(via_service.n_points, direct.n_points, "workers={workers}");
+        points_through_service += via_service.n_points;
+    }
+    // The worker never drops or duplicates a point across all runs.
+    assert_eq!(svc.metrics.snapshot().points as usize, points_through_service);
+    drop(svc);
+    handle.join().unwrap();
+}
+
+#[test]
+fn service_coalesces_under_multi_client_load() {
+    // A deliberately slow oracle + barrier-released clients: while the
+    // worker is inside one oracle call, the other clients' requests
+    // queue up and MUST be coalesced into the next call.
+    struct SlowEval {
+        inner: SyntheticEvaluator,
+    }
+    impl BatchAcqEvaluator for SlowEval {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn eval_batch(&self, xs: &[Vec<f64>]) -> dbe_bo::Result<(Vec<f64>, Vec<Vec<f64>>)> {
+            std::thread::sleep(Duration::from_millis(5));
+            self.inner.eval_batch(xs)
+        }
+    }
+
+    let n_clients = 8;
+    let rounds = 10;
+    let (svc, handle) = BatchService::spawn(
+        Box::new(SlowEval { inner: rosen_eval(2) }),
+        ServiceConfig { max_batch: 64, max_wait: Duration::from_millis(1) },
+    );
+    let barrier = Arc::new(Barrier::new(n_clients));
+    let mut joins = Vec::new();
+    for t in 0..n_clients {
+        let svc = svc.clone();
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            barrier.wait();
+            let f = Rosenbrock::new(2);
+            for i in 0..rounds {
+                let p = vec![0.2 + 0.01 * t as f64, 0.3 + 0.01 * i as f64];
+                let (vals, _) = svc.eval(vec![p.clone()]).unwrap();
+                assert_eq!(vals[0], f.value(&p), "client {t} round {i}: wrong value");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.points as usize, n_clients * rounds, "no point dropped or duplicated");
+    assert!(
+        (snap.batches as usize) < n_clients * rounds,
+        "coalescing must merge concurrent submissions: {snap}"
+    );
+    assert!(svc.metrics.mean_batch_size() > 1.0);
+    drop(svc);
+    handle.join().unwrap();
+}
+
+#[test]
+fn par_dbe_shard_stats_are_consistent_with_totals() {
+    let d = 3;
+    let ev = rosen_eval(d);
+    let x0s = starts(9, d, 77);
+    let res = ParDbe::with_workers(4).run(&ev, &x0s, &cfg(d)).unwrap();
+    assert_eq!(res.shards.len(), 4);
+    assert_eq!(res.shards.iter().map(|s| s.restarts).sum::<usize>(), 9);
+    assert_eq!(res.shards.iter().map(|s| s.batches).sum::<usize>(), res.n_batches);
+    assert_eq!(res.shards.iter().map(|s| s.points).sum::<usize>(), res.n_points);
+    // Active-set pruning survives sharding: with default tolerances
+    // every restart converges, so total points < batches × B.
+    assert!(res.n_points <= res.n_batches * 9);
+}
