@@ -2,7 +2,7 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test docs bench artifacts
+.PHONY: build test docs bench bench-smoke bench-gp-fit artifacts
 
 build:
 	cargo build --release
@@ -21,8 +21,29 @@ bench:
 	cargo bench --bench lbfgsb_update
 	cargo bench --bench table_rastrigin
 	cargo bench --bench par_dbe
+	cargo bench --bench gp_fit
+
+# Tiny-budget pass over every bench target so bench code can't rot
+# (mirrors CI's bench-smoke job).
+bench-smoke:
+	cargo bench --bench mso_strategies -- --smoke
+	cargo bench --bench batched_eval -- --smoke
+	cargo bench --bench lbfgsb_update -- --smoke
+	cargo bench --bench table_rastrigin -- --smoke
+	cargo bench --bench par_dbe -- --smoke
+	cargo bench --bench gp_fit -- --smoke
+
+# The fit-engine perf snapshot: emits results/BENCH_gp_fit.json
+# (EXPERIMENTS.md §Perf "GP fit"). Run this on a quiet host for real
+# trajectory numbers.
+bench-gp-fit:
+	cargo bench --bench gp_fit
 
 # AOT-lower the JAX model to HLO text artifacts for the PJRT runtime
-# (see python/compile/aot.py and EXPERIMENTS.md §E2E).
+# (see python/compile/aot.py and EXPERIMENTS.md §E2E; needs a
+# JAX-capable Python environment). Also records the native fit-engine
+# perf snapshot when a cargo toolchain is present (best-effort: the
+# leading `-` keeps Python-only environments working).
 artifacts:
+	-cargo bench --bench gp_fit
 	cd python && python -m compile.aot --out-dir ../artifacts

@@ -19,14 +19,17 @@ fn fitted_gp(n: usize, d: usize) -> GpRegressor {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let d = 5;
     println!("# batched_eval — native GP oracle, D={d}");
-    let mut b = Bencher::new(3, 15);
-    for &n in &[32usize, 64, 128, 256] {
+    let mut b = if smoke { Bencher::new(0, 1) } else { Bencher::new(3, 15) };
+    let sizes: &[usize] = if smoke { &[16] } else { &[32, 64, 128, 256] };
+    let batches: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 5, 10] };
+    for &n in sizes {
         let gp = fitted_gp(n, d);
         let ev = NativeGpEvaluator::new(&gp);
         let mut rng = Pcg64::seeded(9);
-        for &batch in &[1usize, 2, 5, 10] {
+        for &batch in batches {
             let qs: Vec<Vec<f64>> = (0..batch).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
             let stats =
                 b.bench(&format!("native n={n:<4} B={batch:<3}"), || ev.eval_batch(&qs).unwrap());

@@ -1,0 +1,150 @@
+//! Bench: the GP fit/refit engine — naive vs cached vs incremental
+//! (EXPERIMENTS.md §Perf "GP fit").
+//!
+//! Three levels, swept over training-set size n:
+//!
+//! * **mll eval** — one MLL value+gradient evaluation: the frozen
+//!   pre-engine reference (`gp::naive`, dense K⁻¹ + per-pair distance
+//!   recomputation) vs the cached engine (`FitCache` + W-contraction).
+//! * **full fit** — one two-start hyperparameter fit, naive vs cached.
+//! * **window** — the per-`fit_every`-window cost of the BO loop
+//!   (one full fit + `APPENDS` absorbed observations): the old path
+//!   refits/refactorizes from scratch each trial, the engine does one
+//!   cached fit plus O(n²) `refit_append`s. This is the headline
+//!   "cached+incremental vs naive" number recorded in
+//!   `BENCH_gp_fit.json`.
+//!
+//! Run: `cargo bench --bench gp_fit [-- --smoke] [-- --out DIR]`.
+//! Emits `DIR/BENCH_gp_fit.json` (default `results/`).
+
+use dbe_bo::benchx::Bencher;
+use dbe_bo::gp::naive;
+use dbe_bo::gp::{mll_value_grad_cached, FitCache, GpParams, GpRegressor, Standardizer};
+use dbe_bo::rng::Pcg64;
+
+/// Observations absorbed per window — models `fit_every = 4`.
+const APPENDS: usize = 3;
+
+fn data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|p| {
+            p.iter().map(|v| (v - 0.4).powi(2)).sum::<f64>() + 0.1 * (7.0 * p[0]).sin()
+        })
+        .collect();
+    (x, y)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_dir = args
+        .windows(2)
+        .find(|w| w[0] == "--out")
+        .map(|w| w[1].clone())
+        .unwrap_or_else(|| "results".to_string());
+    let sizes: &[usize] = if smoke { &[16, 24] } else { &[50, 100, 200, 400] };
+    let d = 8;
+
+    println!(
+        "# gp_fit — fit engine vs frozen naive reference, D={d}, window = 1 fit + {APPENDS} appends (fit_every=4){}",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+
+    let mut eval_bench = if smoke { Bencher::new(0, 2) } else { Bencher::new(2, 7) };
+    let mut fit_bench = if smoke { Bencher::new(0, 2) } else { Bencher::new(1, 3) };
+    let mut rows = Vec::new();
+
+    for &n in sizes {
+        println!("\n## n={n}");
+        let (x, y) = data(n + APPENDS, d, 7);
+        let xs = x[..n].to_vec();
+        let ys = &y[..n];
+
+        // Level 1: one MLL value+gradient evaluation.
+        let params = GpParams {
+            log_len: (0.35f64).ln(),
+            log_sf2: 0.0,
+            log_noise: (1e-4f64).ln(),
+        };
+        let y_std = Standardizer::fit(ys).forward_vec(ys);
+        let naive_eval = eval_bench
+            .bench(&format!("mll eval  naive    n={n}"), || {
+                naive::mll_value_grad_naive(&xs, &y_std, &params).unwrap()
+            })
+            .median_secs();
+        let mut cache = FitCache::new(&xs);
+        let cached_eval = eval_bench
+            .bench(&format!("mll eval  cached   n={n}"), || {
+                mll_value_grad_cached(&mut cache, &y_std, &params).unwrap()
+            })
+            .median_secs();
+
+        // Level 2: one full two-start hyperparameter fit.
+        let naive_fit = fit_bench
+            .bench(&format!("full fit  naive    n={n}"), || {
+                naive::fit_naive(&xs, ys, GpParams::default()).unwrap()
+            })
+            .median_secs();
+        let cached_fit = fit_bench
+            .bench(&format!("full fit  cached   n={n}"), || {
+                GpRegressor::fit(xs.clone(), ys, GpParams::default()).unwrap()
+            })
+            .median_secs();
+
+        // Level 3: the fit_every window the BO loop actually pays.
+        let naive_window = fit_bench
+            .bench(&format!("window    naive    n={n}"), || {
+                let p = naive::fit_naive(&xs, ys, GpParams::default()).unwrap();
+                for k in 1..=APPENDS {
+                    naive::assemble_naive(&x[..n + k], &y[..n + k], &p).unwrap();
+                }
+            })
+            .median_secs();
+        let engine_window = fit_bench
+            .bench(&format!("window    engine   n={n}"), || {
+                let mut gp = GpRegressor::fit(xs.clone(), ys, GpParams::default()).unwrap();
+                for k in 0..APPENDS {
+                    gp.refit_append(x[n + k].clone(), y[n + k]).unwrap();
+                }
+                gp
+            })
+            .median_secs();
+
+        let eval_speedup = naive_eval / cached_eval;
+        let fit_speedup = naive_fit / cached_fit;
+        let engine_speedup = naive_window / engine_window;
+        println!(
+            "    -> speedups n={n}: mll eval {eval_speedup:.2}x, full fit {fit_speedup:.2}x, cached+incremental window {engine_speedup:.2}x"
+        );
+        rows.push(format!(
+            concat!(
+                "    {{\"n\": {}, \"naive_eval_s\": {:.6e}, \"cached_eval_s\": {:.6e}, ",
+                "\"eval_speedup\": {:.3}, \"naive_fit_s\": {:.6e}, \"cached_fit_s\": {:.6e}, ",
+                "\"fit_speedup\": {:.3}, \"naive_window_s\": {:.6e}, \"engine_window_s\": {:.6e}, ",
+                "\"engine_speedup\": {:.3}}}"
+            ),
+            n,
+            naive_eval,
+            cached_eval,
+            eval_speedup,
+            naive_fit,
+            cached_fit,
+            fit_speedup,
+            naive_window,
+            engine_window,
+            engine_speedup,
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"gp_fit\",\n  \"smoke\": {smoke},\n  \"dim\": {d},\n  \"appends_per_window\": {APPENDS},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::create_dir_all(&out_dir).expect("create out dir");
+    let path = format!("{out_dir}/BENCH_gp_fit.json");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("\nJSON written to {path}");
+}

@@ -12,8 +12,9 @@ use dbe_bo::optim::{Ask, AskTellOptimizer};
 use dbe_bo::rng::Pcg64;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let d = 10;
-    let mut b = Bencher::new(3, 15);
+    let mut b = if smoke { Bencher::new(0, 1) } else { Bencher::new(3, 15) };
 
     println!("# one full L-BFGS-B iteration (Cauchy + subspace + Wolfe tell), m=10, D={d}");
     // Measure the optimizer machinery with a free (zero-cost) oracle.
@@ -49,7 +50,8 @@ fn main() {
     println!("    -> ~{:.1} µs per QN iteration (incl. line-search evals)", per_iter * 1e6);
 
     println!("\n# one GP acquisition evaluation (B=1), D={d}");
-    for &n in &[32usize, 128, 512] {
+    let sizes: &[usize] = if smoke { &[16] } else { &[32, 128, 512] };
+    for &n in sizes {
         let mut rng = Pcg64::seeded(1);
         let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
         let y: Vec<f64> =

@@ -11,12 +11,16 @@ use dbe_bo::optim::mso::{run_mso, MsoConfig, MsoStrategy};
 use dbe_bo::rng::Pcg64;
 
 fn main() {
+    // `--smoke`: tiny sizes / single rep so CI can prove the bench
+    // still builds and runs without paying for real measurements.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let d = 5;
-    let b_restarts = 10;
-    let mut bench = Bencher::new(2, 9);
+    let b_restarts = if smoke { 4 } else { 10 };
+    let mut bench = if smoke { Bencher::new(0, 1) } else { Bencher::new(2, 9) };
+    let sizes: &[usize] = if smoke { &[16] } else { &[32, 64, 128, 256] };
 
     println!("# mso_strategies — one LogEI maximization, D={d}, B={b_restarts}, m=10, pgtol=1e-2");
-    for &n in &[32usize, 64, 128, 256] {
+    for &n in sizes {
         let mut rng = Pcg64::seeded(4);
         let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
         let y: Vec<f64> = x

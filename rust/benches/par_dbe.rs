@@ -13,13 +13,19 @@ use dbe_bo::rng::Pcg64;
 use std::time::Duration;
 
 fn main() {
-    let b_restarts = 16;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b_restarts = if smoke { 4 } else { 16 };
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
         "# par_dbe — one MSO call, B={b_restarts}, pgtol=1e-6, {workers} cores available"
     );
 
-    for (name, d) in [("rosenbrock", 10), ("rastrigin", 10)] {
+    let cells: &[(&str, usize)] = if smoke {
+        &[("rosenbrock", 4)]
+    } else {
+        &[("rosenbrock", 10), ("rastrigin", 10)]
+    };
+    for &(name, d) in cells {
         let instance_seed = 1000 + d as u64;
         let objective = bbob::by_name(name, d, instance_seed).unwrap();
         let bounds = objective.bounds();
@@ -30,11 +36,15 @@ fn main() {
             (0..b_restarts).map(|_| rng.point_in_box(&bounds)).collect();
         let cfg = MsoConfig {
             bounds: bounds.clone(),
-            lbfgsb: LbfgsbOptions { pgtol: 1e-6, max_iters: 200, ..Default::default() },
+            lbfgsb: LbfgsbOptions {
+                pgtol: 1e-6,
+                max_iters: if smoke { 30 } else { 200 },
+                ..Default::default()
+            },
         };
 
         println!("\n## {name} D={d}");
-        let mut bench = Bencher::new(1, 7);
+        let mut bench = if smoke { Bencher::new(0, 1) } else { Bencher::new(1, 7) };
         let mut rows = Vec::new();
         for strat in [
             MsoStrategy::SeqOpt,

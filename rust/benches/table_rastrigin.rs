@@ -7,11 +7,13 @@ use dbe_bo::config::BenchProtocol;
 use dbe_bo::repro::table_bench;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let protocol = BenchProtocol {
         objectives: vec!["rastrigin".into()],
         dims: vec![5],
-        trials: 20,
-        seeds: 2,
+        trials: if smoke { 10 } else { 20 },
+        seeds: if smoke { 1 } else { 2 },
+        startup: if smoke { 6 } else { BenchProtocol::default().startup },
         out_dir: "results".into(),
         ..BenchProtocol::default()
     };

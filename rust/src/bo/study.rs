@@ -68,13 +68,22 @@ impl Default for StudyConfig {
 }
 
 /// Aggregated per-study timing/iteration statistics — the raw numbers
-/// behind the paper's Runtime and Iters. columns.
+/// behind the paper's Runtime and Iters. columns, plus the fit-engine
+/// split (full refits vs O(n²) incremental appends).
 #[derive(Clone, Debug, Default)]
 pub struct StudyStats {
     /// Wall time spent inside acquisition optimization (MSO).
     pub acq_wall: Duration,
-    /// Wall time spent fitting GP hyperparameters.
+    /// Wall time spent in GP fits/refits (full + incremental).
     pub fit_wall: Duration,
+    /// Wall time of full hyperparameter refits (`fit_every` boundaries).
+    pub fit_full_wall: Duration,
+    /// Wall time of incremental `refit_append` updates.
+    pub fit_incremental_wall: Duration,
+    /// Number of full hyperparameter refits.
+    pub fit_full: usize,
+    /// Number of incremental (hyperparameters-held) refits.
+    pub fit_incremental: usize,
     /// Total study wall time.
     pub total_wall: Duration,
     /// L-BFGS-B iteration counts, one entry per (trial, restart).
@@ -110,6 +119,10 @@ pub struct Study {
     trials: Vec<Trial>,
     /// Warm-started GP hyperparameters.
     gp_params: GpParams,
+    /// The fitted GP, persistent across trials so non-boundary trials
+    /// can absorb new observations via the O(n²) `refit_append` fast
+    /// path instead of refactorizing from scratch.
+    gp: Option<GpRegressor>,
     pub stats: StudyStats,
     /// Most recent suggestion's pending normalized point (for observe).
     pending: Option<Vec<f64>>,
@@ -126,6 +139,7 @@ impl Study {
             rng: Pcg64::seeded(seed),
             trials: Vec::new(),
             gp_params: GpParams::default(),
+            gp: None,
             stats: StudyStats::default(),
             pending: None,
             eval_factory: None,
@@ -169,24 +183,42 @@ impl Study {
     /// Model-based suggestion: GP fit + MSO over the acquisition. Uses
     /// the evaluator factory when set (PJRT path), the native GP oracle
     /// otherwise.
+    ///
+    /// The GP persists across trials: full hyperparameter refits happen
+    /// only on `fit_every` boundaries; in between, new observations are
+    /// absorbed through [`GpRegressor::refit_append`] (O(n²) per point,
+    /// hyperparameters held at the last fitted values).
     pub fn suggest_model_based(&mut self) -> Result<Vec<f64>> {
         let t_total = Instant::now();
-        // Normalized history.
-        let xs_norm: Vec<Vec<f64>> =
-            self.trials.iter().map(|t| normalize(&t.x, &self.cfg.bounds)).collect();
-        let ys: Vec<f64> = self.trials.iter().map(|t| t.value).collect();
 
-        // GP fit (warm-started; optionally only every k trials).
+        // GP fit (warm-started; full refit only every `fit_every` trials).
         let t_fit = Instant::now();
-        let refit = (self.trials.len() - self.cfg.n_startup) % self.cfg.fit_every.max(1) == 0;
-        let gp = if refit {
+        let boundary = (self.trials.len().saturating_sub(self.cfg.n_startup))
+            % self.cfg.fit_every.max(1)
+            == 0;
+        let stale = self.gp.as_ref().map_or(true, |gp| gp.n_train() > self.trials.len());
+        if boundary || stale {
+            let xs_norm: Vec<Vec<f64>> =
+                self.trials.iter().map(|t| normalize(&t.x, &self.cfg.bounds)).collect();
+            let ys: Vec<f64> = self.trials.iter().map(|t| t.value).collect();
             let gp = GpRegressor::fit(xs_norm, &ys, self.gp_params)?;
             self.gp_params = gp.params;
-            gp
+            self.gp = Some(gp);
+            let dt = t_fit.elapsed();
+            self.stats.fit_full += 1;
+            self.stats.fit_full_wall += dt;
+            self.stats.fit_wall += dt;
         } else {
-            GpRegressor::with_params(xs_norm, &ys, self.gp_params)?
-        };
-        self.stats.fit_wall += t_fit.elapsed();
+            let gp = self.gp.as_mut().expect("checked by `stale`");
+            for i in gp.n_train()..self.trials.len() {
+                let xn = normalize(&self.trials[i].x, &self.cfg.bounds);
+                gp.refit_append(xn, self.trials[i].value)?;
+            }
+            let dt = t_fit.elapsed();
+            self.stats.fit_incremental += 1;
+            self.stats.fit_incremental_wall += dt;
+            self.stats.fit_wall += dt;
+        }
 
         // Restart points: B−1 uniform + the incumbent (GPSampler-style).
         let mut x0s: Vec<Vec<f64>> = (0..self.cfg.restarts.saturating_sub(1))
@@ -203,17 +235,18 @@ impl Study {
             lbfgsb: self.cfg.lbfgsb,
         };
 
+        let gp = self.gp.as_ref().expect("GP fitted above");
         let t_acq = Instant::now();
         let res = match &self.eval_factory {
             Some(factory) => {
                 // Factory evaluators (e.g. the PJRT artifact) are
                 // thread-bound, so Par-D-BE degrades to single-threaded
                 // D-BE here — identical trajectories, no worker pool.
-                let ev = factory(&gp)?;
+                let ev = factory(gp)?;
                 run_mso(self.cfg.strategy, ev.as_ref(), &x0s, &mso_cfg)?
             }
             None => {
-                let ev = NativeGpEvaluator::new(&gp).with_workers(self.cfg.eval_workers);
+                let ev = NativeGpEvaluator::new(gp).with_workers(self.cfg.eval_workers);
                 if self.cfg.strategy == MsoStrategy::ParDbe {
                     ParDbe::with_workers(self.cfg.par_workers).run(&ev, &x0s, &mso_cfg)?
                 } else {
@@ -340,6 +373,35 @@ mod tests {
         }
         assert_eq!(best_dbe.x, best_par.x);
         assert_eq!(best_dbe.value, best_par.value);
+    }
+
+    #[test]
+    fn incremental_refits_engage_between_fit_boundaries() {
+        let f = |x: &[f64]| (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2);
+        let mut study = Study::new(
+            StudyConfig { fit_every: 3, ..quick_cfg(2, MsoStrategy::Dbe) },
+            13,
+        );
+        let best = study.optimize(f);
+        assert!(best.value.is_finite());
+        // 18 trials − 6 startup = 12 model-based: boundaries at 0,3,6,9.
+        assert_eq!(study.stats.fit_full, 4);
+        assert_eq!(study.stats.fit_incremental, 8);
+        assert_eq!(
+            study.stats.fit_wall,
+            study.stats.fit_full_wall + study.stats.fit_incremental_wall
+        );
+        // The incremental path must actually be cheap relative to fits.
+        assert!(study.stats.fit_incremental_wall < study.stats.fit_full_wall);
+    }
+
+    #[test]
+    fn fit_every_one_never_uses_incremental_path() {
+        let f = |x: &[f64]| x[0].powi(2) + x[1].powi(2);
+        let mut study = Study::new(quick_cfg(2, MsoStrategy::Dbe), 2);
+        study.optimize(f);
+        assert_eq!(study.stats.fit_full, 12);
+        assert_eq!(study.stats.fit_incremental, 0);
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub struct BenchProtocol {
     pub with_par: bool,
     /// Worker threads for Par-D-BE (0 = one per core).
     pub par_workers: usize,
+    /// Full GP hyperparameter refit every k trials; in between, new
+    /// observations take the O(n²) incremental `refit_append` path
+    /// (1 = refit every trial, the paper's protocol).
+    pub fit_every: usize,
 }
 
 impl Default for BenchProtocol {
@@ -59,6 +63,7 @@ impl Default for BenchProtocol {
             out_dir: "results".into(),
             with_par: false,
             par_workers: 0,
+            fit_every: 1,
         }
     }
 }
@@ -66,7 +71,7 @@ impl Default for BenchProtocol {
 impl BenchProtocol {
     /// Apply CLI overrides: `--trials`, `--seeds`, `--dims`,
     /// `--objectives`, `--restarts`, `--out`, `--fast`, `--paper`,
-    /// `--with-par`, `--par-workers`.
+    /// `--with-par`, `--par-workers`, `--fit-every`.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut p = BenchProtocol::default();
         if args.has("paper") {
@@ -85,6 +90,7 @@ impl BenchProtocol {
         p.out_dir = args.get_str("out", &p.out_dir);
         p.with_par = p.with_par || args.has("with-par");
         p.par_workers = args.get_usize("par-workers", p.par_workers)?;
+        p.fit_every = args.get_usize("fit-every", p.fit_every)?.max(1);
         if args.has("objectives") {
             p.objectives = args
                 .get_str("objectives", "")
@@ -164,6 +170,21 @@ mod tests {
         assert!(p.with_par);
         assert_eq!(p.par_workers, 4);
         assert_eq!(*p.strategies().last().unwrap(), MsoStrategy::ParDbe);
+    }
+
+    #[test]
+    fn fit_every_override_with_floor() {
+        let p = BenchProtocol::default();
+        assert_eq!(p.fit_every, 1, "paper protocol refits every trial");
+        let args = crate::cli::Args::parse(
+            ["--fit-every", "4"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(BenchProtocol::from_args(&args).unwrap().fit_every, 4);
+        let args =
+            crate::cli::Args::parse(["--fit-every", "0"].iter().map(|s| s.to_string()))
+                .unwrap();
+        assert_eq!(BenchProtocol::from_args(&args).unwrap().fit_every, 1);
     }
 
     #[test]

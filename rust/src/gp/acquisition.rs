@@ -56,7 +56,7 @@ impl<'a> LogEi<'a> {
     }
 
     /// Batched (−LogEI, ∇): one GP batch pass + cheap per-point math.
-    pub fn eval_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    pub fn eval_batch<Q: AsRef<[f64]>>(&self, qs: &[Q]) -> (Vec<f64>, Vec<Vec<f64>>) {
         let posts = self.gp.posterior_batch(qs);
         let mut vals = Vec::with_capacity(qs.len());
         let mut grads = Vec::with_capacity(qs.len());
@@ -68,9 +68,10 @@ impl<'a> LogEi<'a> {
         (vals, grads)
     }
 
-    /// Raw (unnegated) LogEI at one point (reporting convenience).
+    /// Raw (unnegated) LogEI at one point (reporting convenience;
+    /// borrows the query, no `Vec` round-trip).
     pub fn logei(&self, q: &[f64]) -> f64 {
-        -self.eval_batch(std::slice::from_ref(&q.to_vec())).0[0]
+        -self.eval_batch(std::slice::from_ref(&q)).0[0]
     }
 }
 
@@ -89,7 +90,7 @@ impl<'a> Lcb<'a> {
     }
 
     /// Batched (LCB, ∇LCB) — already minimization-oriented.
-    pub fn eval_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    pub fn eval_batch<Q: AsRef<[f64]>>(&self, qs: &[Q]) -> (Vec<f64>, Vec<Vec<f64>>) {
         let posts = self.gp.posterior_batch(qs);
         let mut vals = Vec::with_capacity(qs.len());
         let mut grads = Vec::with_capacity(qs.len());
@@ -119,7 +120,7 @@ impl<'a> LogPi<'a> {
     }
 
     /// Batched (−logPI, ∇).
-    pub fn eval_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    pub fn eval_batch<Q: AsRef<[f64]>>(&self, qs: &[Q]) -> (Vec<f64>, Vec<Vec<f64>>) {
         use super::stats::{cdf_over_pdf, log_normal_pdf, normal_cdf};
         let posts = self.gp.posterior_batch(qs);
         let mut vals = Vec::with_capacity(qs.len());

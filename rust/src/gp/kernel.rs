@@ -116,6 +116,24 @@ impl Matern52 {
         -(self.sf2 * self.a * self.a / 3.0) * (1.0 + ar) * (-ar).exp()
     }
 
+    /// `(k(r), ∂k/∂log ℓ (r))` sharing one `exp` — the fused form the
+    /// [`FitCache`](super::fit::FitCache) MLL path uses to build K and
+    /// ∂K/∂logℓ in a single pass over the cached distances. Expression
+    /// order mirrors [`Self::eval_r`] / [`Self::dk_dlog_len`] exactly so
+    /// the fused values are bitwise identical to the unfused ones.
+    #[inline]
+    pub fn eval_and_dlen_r(&self, r: f64) -> (f64, f64) {
+        let ar = self.a * r;
+        if ar > AR_CUTOFF {
+            return (0.0, 0.0);
+        }
+        let e = (-ar).exp();
+        (
+            self.sf2 * (1.0 + ar + ar * ar / 3.0) * e,
+            self.sf2 * (self.a * self.a / 3.0) * r * r * (1.0 + ar) * e,
+        )
+    }
+
     /// ∂k/∂(log ℓ) as a function of r:
     /// `σ² (a²/3) r² (1 + ar) e^{−ar}`.
     #[inline]
@@ -215,6 +233,17 @@ mod tests {
         let km = Matern52::new(&GpParams { log_len: p0.log_len - h, ..p0 });
         let fd = (kp.eval_r(r) - km.eval_r(r)) / (2.0 * h);
         assert_close(Matern52::new(&p0).dk_dlog_len(r), fd, 1e-6);
+    }
+
+    #[test]
+    fn fused_eval_and_dlen_is_bitwise_equal_to_unfused() {
+        let k = kern();
+        for i in 0..200 {
+            let r = i as f64 * 0.75; // crosses the AR_CUTOFF
+            let (v, dl) = k.eval_and_dlen_r(r);
+            assert!(v == k.eval_r(r), "value drifted at r={r}");
+            assert!(dl == k.dk_dlog_len(r), "∂k/∂logℓ drifted at r={r}");
+        }
     }
 
     #[test]

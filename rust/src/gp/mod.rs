@@ -9,12 +9,15 @@
 //! two paths is tested in `rust/tests/pjrt_parity.rs`.
 
 pub mod acquisition;
+pub mod fit;
 pub mod kernel;
+pub mod naive;
 pub mod regressor;
 pub mod standardize;
 pub mod stats;
 
 pub use acquisition::{Lcb, LogEi, LogPi};
+pub use fit::{mll_value_grad_cached, FitCache};
 pub use kernel::{GpParams, Matern52};
-pub use regressor::{mll_value_grad, GpRegressor, Posterior};
+pub use regressor::{mll_value_grad, GpRegressor, Posterior, PosteriorWorkspace};
 pub use standardize::Standardizer;

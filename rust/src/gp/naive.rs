@@ -1,0 +1,154 @@
+//! Frozen pre-FitCache reference implementations of the GP fit path.
+//!
+//! This module preserves, verbatim, what `mll_value_grad` and the
+//! `with_params` posterior assembly did before the fit engine landed:
+//! pairwise distances recomputed per MLL evaluation, three kernel
+//! evaluations per pair, and a dense `K⁻¹` materialized column by
+//! column through [`CholeskyFactor::inverse`]. It exists for two
+//! consumers only:
+//!
+//! * `rust/tests/fit_engine_equivalence.rs` — proves the cached engine
+//!   is numerically indistinguishable from this reference;
+//! * `rust/benches/gp_fit.rs` — the "naive" baseline of the fit-engine
+//!   speedup table (EXPERIMENTS.md §Perf "GP fit").
+//!
+//! Nothing on a hot path may call into this module.
+
+use super::kernel::{GpParams, Matern52};
+use super::standardize::Standardizer;
+use crate::error::{Error, Result};
+use crate::linalg::{cholesky_jittered, dot, CholeskyFactor, Matrix};
+use crate::optim::lbfgsb::{Lbfgsb, LbfgsbOptions};
+use crate::optim::{Ask, AskTellOptimizer};
+
+/// MLL value/gradient, pre-engine form: rebuilds distances and a dense
+/// `K⁻¹` on every call.
+pub fn mll_value_grad_naive(
+    x: &[Vec<f64>],
+    y_std: &[f64],
+    params: &GpParams,
+) -> Result<(f64, Vec<f64>)> {
+    let n = x.len();
+    let kern = Matern52::new(params);
+    let mut k = kern.matrix(x);
+    let noise = params.noise_var();
+    for i in 0..n {
+        k[(i, i)] += noise;
+    }
+    let chol = cholesky_jittered(&k)?;
+    let alpha = chol.solve(y_std);
+    let mll = -0.5 * dot(y_std, &alpha)
+        - 0.5 * chol.log_det()
+        - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+
+    // Gradient: ½ Σ_ij (α_i α_j − K⁻¹_ij) (∂K/∂θ)_ij for each θ.
+    let k_inv = chol.inverse();
+    let mut g_len = 0.0;
+    let mut g_sf2 = 0.0;
+    let mut g_noise = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let w = alpha[i] * alpha[j] - k_inv[(i, j)];
+            let r = crate::linalg::sqdist(&x[i], &x[j]).sqrt();
+            g_len += w * kern.dk_dlog_len(r);
+            g_sf2 += w * kern.eval_r(r);
+            if i == j {
+                g_noise += w * noise;
+            }
+        }
+    }
+    Ok((mll, vec![0.5 * g_len, 0.5 * g_sf2, 0.5 * g_noise]))
+}
+
+/// Pre-engine posterior assembly: kernel matrix from scratch, full
+/// factorization, dense inverse. Returns `(chol, α, K⁻¹)` so the bench
+/// can charge exactly the work the old `with_params` performed per
+/// trial (the old regressor stored all three).
+pub fn assemble_naive(
+    x: &[Vec<f64>],
+    y_raw: &[f64],
+    params: &GpParams,
+) -> Result<(CholeskyFactor, Vec<f64>, Matrix)> {
+    let standardizer = Standardizer::fit(y_raw);
+    let y_std = standardizer.forward_vec(y_raw);
+    let kern = Matern52::new(params);
+    let n = x.len();
+    let mut k = kern.matrix(x);
+    let noise = params.noise_var();
+    for i in 0..n {
+        k[(i, i)] += noise;
+    }
+    let chol = cholesky_jittered(&k)?;
+    let alpha = chol.solve(&y_std);
+    let k_inv = chol.inverse();
+    Ok((chol, alpha, k_inv))
+}
+
+/// Pre-engine hyperparameter fit: the same two-start L-BFGS-B protocol
+/// as [`GpRegressor::fit`](super::GpRegressor::fit) but driving
+/// [`mll_value_grad_naive`], ending with the naive posterior assembly —
+/// i.e. exactly what one fit cost before the engine.
+pub fn fit_naive(x: &[Vec<f64>], y_raw: &[f64], init: GpParams) -> Result<GpParams> {
+    if x.is_empty() || x.len() != y_raw.len() {
+        return Err(Error::Gp("bad training set".into()));
+    }
+    let standardizer = Standardizer::fit(y_raw);
+    let y_std = standardizer.forward_vec(y_raw);
+    let opts = LbfgsbOptions {
+        memory: 10,
+        pgtol: 1e-5,
+        ftol: 1e-12,
+        max_iters: 60,
+        max_evals: 200,
+    };
+    let mut best = init;
+    let mut best_mll = f64::NEG_INFINITY;
+    for start in [init, GpParams::default()] {
+        let mut opt = Lbfgsb::new(start.to_vec(), GpParams::fit_bounds(), opts)?;
+        loop {
+            match opt.ask() {
+                Ask::Evaluate(theta) => {
+                    let p = GpParams::from_slice(&theta);
+                    match mll_value_grad_naive(x, &y_std, &p) {
+                        Ok((mll, grad)) => {
+                            opt.tell(-mll, &grad.iter().map(|g| -g).collect::<Vec<_>>())
+                        }
+                        Err(_) => opt.tell(f64::INFINITY, &vec![0.0; 3]),
+                    }
+                }
+                Ask::Done(_) => break,
+            }
+        }
+        if -opt.best_f() > best_mll && opt.best_f().is_finite() {
+            best_mll = -opt.best_f();
+            best = GpParams::from_slice(opt.best_x());
+        }
+    }
+    assemble_naive(x, y_raw, &best)?;
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::{assert_allclose, fd_gradient};
+
+    #[test]
+    fn naive_gradient_matches_fd() {
+        let mut rng = Pcg64::seeded(4);
+        let x: Vec<Vec<f64>> = (0..11).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let y: Vec<f64> = x.iter().map(|p| p[0] * p[0] + p[1]).collect();
+        let y_std = Standardizer::fit(&y).forward_vec(&y);
+        let p0 = GpParams {
+            log_len: (0.4f64).ln(),
+            log_sf2: (0.8f64).ln(),
+            log_noise: (1e-3f64).ln(),
+        };
+        let (_, grad) = mll_value_grad_naive(&x, &y_std, &p0).unwrap();
+        let f =
+            |v: &[f64]| mll_value_grad_naive(&x, &y_std, &GpParams::from_slice(v)).unwrap().0;
+        let gfd = fd_gradient(&f, &p0.to_vec(), 1e-5);
+        assert_allclose(&grad, &gfd, 1e-4);
+    }
+}

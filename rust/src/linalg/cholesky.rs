@@ -1,8 +1,20 @@
 //! Cholesky factorization with jitter retry — the GP stack's workhorse.
+//!
+//! Beyond the plain factor this module carries the fit-engine
+//! primitives (see EXPERIMENTS.md §Perf "GP fit"):
+//! [`CholeskyFactor::append_row`] (O(n²) trailing update when one
+//! training point is appended), [`CholeskyFactor::solve_many`] /
+//! [`CholeskyFactor::solve_matrix`] (blocked multi-RHS triangular
+//! solves — general-purpose library primitives; the GP hot paths
+//! themselves route through the half-inverse below), and
+//! [`CholeskyFactor::inv_lower_transpose`] (the triangular
+//! half-inverse behind the K⁻¹-free MLL trace terms and the
+//! posterior's zero-skipping `W(Wᵀk*)` matvecs).
 
 use super::matrix::Matrix;
 use super::tri::{solve_lower, solve_lower_transpose};
 use crate::error::{Error, Result};
+use crate::linalg::{axpy, dot};
 
 /// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`.
 #[derive(Clone, Debug)]
@@ -43,7 +55,115 @@ impl CholeskyFactor {
         2.0 * s
     }
 
-    /// Dense inverse of A (used by MLL gradients: tr(A⁻¹ ∂K)).
+    /// Solve `A x_q = b_q` for many right-hand sides at once, in place.
+    ///
+    /// `rhs` holds `n_rhs` contiguous length-`n` rows, each an
+    /// independent RHS that is overwritten with its solution. The loops
+    /// are blocked L-row-outer / RHS-inner so each row of `L` is
+    /// streamed once per sweep while every RHS row stays contiguous —
+    /// the multi-RHS analog of [`solve_lower`] + [`solve_lower_transpose`],
+    /// and bitwise identical to solving each row separately.
+    pub fn solve_rows_in_place(&self, rhs: &mut [f64], n_rhs: usize) {
+        let n = self.n();
+        debug_assert_eq!(rhs.len(), n_rhs * n, "rhs must be n_rhs × n");
+        // Forward sweep: L y = b.
+        for i in 0..n {
+            let lrow = self.l.row(i);
+            let d = lrow[i];
+            for q in 0..n_rhs {
+                let row = &mut rhs[q * n..(q + 1) * n];
+                let s = dot(&lrow[..i], &row[..i]);
+                row[i] = (row[i] - s) / d;
+            }
+        }
+        // Backward sweep: Lᵀ x = y.
+        for i in (0..n).rev() {
+            let lrow = self.l.row(i);
+            let d = lrow[i];
+            for q in 0..n_rhs {
+                let row = &mut rhs[q * n..(q + 1) * n];
+                row[i] /= d;
+                let xi = row[i];
+                axpy(-xi, &lrow[..i], &mut row[..i]);
+            }
+        }
+    }
+
+    /// Solve `A xᵀ = rᵀ` for every row `r` of `rhs`: returns the matrix
+    /// whose row `q` is `A⁻¹ · rhs.row(q)`.
+    pub fn solve_many(&self, rhs: &Matrix) -> Matrix {
+        debug_assert_eq!(rhs.cols(), self.n());
+        let mut out = rhs.clone();
+        let n_rhs = out.rows();
+        let n = out.cols();
+        self.solve_rows_in_place(&mut out.data_mut()[..n_rhs * n], n_rhs);
+        out
+    }
+
+    /// Solve `A X = B` (columns of `B` are the right-hand sides).
+    pub fn solve_matrix(&self, b: &Matrix) -> Matrix {
+        self.solve_many(&b.transpose()).transpose()
+    }
+
+    /// Rank-1 trailing update: grow the factor of `A` (n × n) into the
+    /// factor of `[[A, c], [cᵀ, diag]]` in O(n²) instead of refactoring
+    /// from scratch in O(n³).
+    ///
+    /// `cross` is the new point's covariance against the existing n
+    /// points and `diag` its self-covariance *before* jitter — the
+    /// factor's own `jitter` is re-applied so the result is bitwise
+    /// identical to a from-scratch factorization of the bordered matrix
+    /// (the new row of `L` is exactly the forward substitution the full
+    /// factorization would perform). Fails without modifying `self`
+    /// when the bordered matrix is not positive definite; callers fall
+    /// back to a full (jittered) refactorization.
+    pub fn append_row(&mut self, cross: &[f64], diag: f64) -> Result<()> {
+        let n = self.n();
+        debug_assert_eq!(cross.len(), n);
+        let w = solve_lower(&self.l, cross);
+        let d = diag + self.jitter - dot(&w, &w);
+        if d <= 0.0 || !d.is_finite() {
+            return Err(Error::Linalg(format!(
+                "append_row: bordered matrix not positive definite (d={d:.3e})"
+            )));
+        }
+        let mut l = Matrix::zeros(n + 1, n + 1);
+        for i in 0..n {
+            l.row_mut(i)[..n].copy_from_slice(self.l.row(i));
+        }
+        let last = l.row_mut(n);
+        last[..n].copy_from_slice(&w);
+        last[n] = d.sqrt();
+        self.l = l;
+        Ok(())
+    }
+
+    /// `W = L⁻ᵀ` (upper triangular), row `j` holding the forward solve
+    /// of `e_j` contiguously. Since `A⁻¹ = L⁻ᵀL⁻¹ = W Wᵀ`, entries of
+    /// the inverse are plain row dots, `A⁻¹_ij = ⟨w_i[j..], w_j[j..]⟩`
+    /// for `i ≤ j` — which is how the MLL gradient contracts
+    /// `tr(A⁻¹ ∂K)` without ever materializing a dense inverse.
+    /// O(n³/6) exploiting the sparsity of both `e_j` and the result.
+    pub fn inv_lower_transpose(&self) -> Matrix {
+        let n = self.n();
+        let mut w = Matrix::zeros(n, n);
+        for j in 0..n {
+            w[(j, j)] = 1.0 / self.l[(j, j)];
+            for i in (j + 1)..n {
+                let lrow = self.l.row(i);
+                let s = dot(&lrow[j..i], &w.row(j)[j..i]);
+                w[(j, i)] = -s / lrow[i];
+            }
+        }
+        w
+    }
+
+    /// Dense inverse of A.
+    ///
+    /// Kept for the PJRT artifact assembly (which pads K⁻¹ into a
+    /// static input buffer per evaluator build); the MLL and posterior
+    /// hot paths use [`Self::inv_lower_transpose`] instead — enforced
+    /// by `rust/tests/fit_engine_equivalence.rs`.
     pub fn inverse(&self) -> Matrix {
         let n = self.n();
         let mut inv = Matrix::zeros(n, n);
@@ -181,6 +301,87 @@ mod tests {
         let inv = f.inverse();
         let prod = a.matmul(&inv);
         assert!(prod.sub(&Matrix::eye(3)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn solve_many_matches_per_column_solves() {
+        let a = spd3();
+        let f = cholesky(&a).unwrap();
+        let rhs = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[-0.5, 0.0, 4.0]]);
+        let out = f.solve_many(&rhs);
+        for q in 0..2 {
+            let x = f.solve(rhs.row(q));
+            assert_eq!(out.row(q), &x[..], "blocked solve must be bitwise equal");
+        }
+    }
+
+    #[test]
+    fn solve_matrix_solves_columns() {
+        let a = spd3();
+        let f = cholesky(&a).unwrap();
+        let b = Matrix::from_rows(&[&[1.0, 0.5], &[2.0, -1.0], &[3.0, 0.0]]);
+        let x = f.solve_matrix(&b);
+        let rec = a.matmul(&x);
+        assert!(rec.sub(&b).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn append_row_matches_full_factorization() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(17);
+        let n = 9;
+        // SPD via GᵀG + I.
+        let mut g = Matrix::zeros(n + 1, n + 1);
+        for i in 0..n + 1 {
+            for j in 0..n + 1 {
+                g[(i, j)] = rng.normal() * 0.4;
+            }
+        }
+        let mut a = g.transpose().matmul(&g);
+        for i in 0..n + 1 {
+            a[(i, i)] += 1.0;
+        }
+        // Leading block factored, then one appended row/col.
+        let mut lead = Matrix::zeros(n, n);
+        for i in 0..n {
+            lead.row_mut(i).copy_from_slice(&a.row(i)[..n]);
+        }
+        let mut f = cholesky(&lead).unwrap();
+        let cross: Vec<f64> = (0..n).map(|j| a[(n, j)]).collect();
+        f.append_row(&cross, a[(n, n)]).unwrap();
+        let full = cholesky(&a).unwrap();
+        assert_eq!(f.n(), n + 1);
+        assert!(
+            f.l().sub(full.l()).max_abs() == 0.0,
+            "appended factor must be bitwise identical to the full factorization"
+        );
+    }
+
+    #[test]
+    fn append_row_rejects_non_pd_border_without_mutating() {
+        let a = spd3();
+        let mut f = cholesky(&a).unwrap();
+        // A border that makes the matrix indefinite: huge cross terms.
+        assert!(f.append_row(&[100.0, 100.0, 100.0], 1.0).is_err());
+        assert_eq!(f.n(), 3, "failed append must leave the factor untouched");
+        assert!(f.l().sub(cholesky(&spd3()).unwrap().l()).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn inv_lower_transpose_reconstructs_inverse() {
+        let a = spd3();
+        let f = cholesky(&a).unwrap();
+        let w = f.inv_lower_transpose();
+        // A⁻¹ = W Wᵀ.
+        let inv = w.matmul(&w.transpose());
+        let prod = a.matmul(&inv);
+        assert!(prod.sub(&Matrix::eye(3)).max_abs() < 1e-12);
+        // Upper triangular: zeros below the diagonal.
+        for i in 0..3 {
+            for j in 0..i {
+                assert_eq!(w[(i, j)], 0.0);
+            }
+        }
     }
 
     #[test]

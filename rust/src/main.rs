@@ -52,8 +52,8 @@ fn print_usage() {
         "dbe-bo — Decoupled QN updates + Batched acquisition Evaluations (D-BE)\n\
          \n\
          USAGE:\n\
-           dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [--fast|--paper] [--with-par] [--out DIR]\n\
-           dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe|par_dbe] [--trials N] [--seed S]\n\
+           dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [--fast|--paper] [--with-par] [--fit-every K] [--out DIR]\n\
+           dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe|par_dbe] [--trials N] [--fit-every K] [--seed S]\n\
            dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe|par_dbe] [--par-workers K]\n\
            dbe-bo serve --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo info\n\
@@ -161,7 +161,7 @@ fn cmd_bo(args: &Args) -> Result<()> {
             max_iters: 200,
             max_evals: 50_000,
         },
-        fit_every: 1,
+        fit_every: args.get_usize("fit-every", 1)?.max(1),
         par_workers: args.get_usize("par-workers", 0)?,
         eval_workers: args.get_usize("eval-workers", 1)?,
     };
@@ -176,12 +176,16 @@ fn cmd_bo(args: &Args) -> Result<()> {
     let best = study.optimize(|x| objective.value(x));
     let wall = t0.elapsed();
     println!(
-        "best value {:.6} (trial {}) | wall {:.2}s | acq-opt {:.2}s | gp-fit {:.2}s | median iters {:.1} | batches {} | points {}",
+        "best value {:.6} (trial {}) | wall {:.2}s | acq-opt {:.2}s | gp-fit {:.2}s ({} full {:.2}s + {} incremental {:.3}s) | median iters {:.1} | batches {} | points {}",
         best.value,
         best.trial,
         wall.as_secs_f64(),
         study.stats.acq_wall.as_secs_f64(),
         study.stats.fit_wall.as_secs_f64(),
+        study.stats.fit_full,
+        study.stats.fit_full_wall.as_secs_f64(),
+        study.stats.fit_incremental,
+        study.stats.fit_incremental_wall.as_secs_f64(),
         study.stats.median_iters(),
         study.stats.n_batches,
         study.stats.n_points,

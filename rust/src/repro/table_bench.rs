@@ -23,10 +23,29 @@ pub struct CellResult {
     pub best_value: f64,
     /// Median wall-clock seconds of the whole study.
     pub runtime_s: f64,
+    /// Median seconds spent in full GP hyperparameter refits.
+    pub fit_full_s: f64,
+    /// Median seconds spent in incremental `refit_append` updates.
+    pub fit_inc_s: f64,
+    /// Full/incremental refit counts (identical across seeds).
+    pub fit_full: usize,
+    pub fit_incremental: usize,
     /// Median L-BFGS-B iterations per (trial, restart).
     pub iters: f64,
     /// Raw per-seed best values (pre-normalization).
     pub raw_best: Vec<f64>,
+}
+
+/// Per-seed raw outcomes for one strategy of a cell.
+struct StrategyRuns {
+    strategy: MsoStrategy,
+    bests: Vec<f64>,
+    walls: Vec<f64>,
+    iters: Vec<f64>,
+    fit_full_s: Vec<f64>,
+    fit_inc_s: Vec<f64>,
+    fit_full: usize,
+    fit_incremental: usize,
 }
 
 /// Run the benchmark over the given objectives.
@@ -37,12 +56,19 @@ pub fn run(protocol: &BenchProtocol, objectives: &[String]) -> Result<Vec<CellRe
             // Fixed function instance per (objective, D): seeds vary the
             // BO run, not the landscape (the paper's setup).
             let instance_seed = 1000 + dim as u64;
-            let mut per_strategy: Vec<(MsoStrategy, Vec<f64>, Vec<f64>, Vec<f64>)> = Vec::new();
+            let mut per_strategy: Vec<StrategyRuns> = Vec::new();
 
             for strategy in protocol.strategies() {
-                let mut bests = Vec::new();
-                let mut walls = Vec::new();
-                let mut iters_all = Vec::new();
+                let mut runs = StrategyRuns {
+                    strategy,
+                    bests: Vec::new(),
+                    walls: Vec::new(),
+                    iters: Vec::new(),
+                    fit_full_s: Vec::new(),
+                    fit_inc_s: Vec::new(),
+                    fit_full: 0,
+                    fit_incremental: 0,
+                };
                 for seed in 0..protocol.seeds as u64 {
                     let objective = bbob::by_name(obj_name, dim, instance_seed)?;
                     let cfg = StudyConfig {
@@ -53,38 +79,50 @@ pub fn run(protocol: &BenchProtocol, objectives: &[String]) -> Result<Vec<CellRe
                         restarts: protocol.restarts,
                         strategy,
                         lbfgsb: protocol.lbfgsb,
-                        fit_every: 1,
+                        fit_every: protocol.fit_every,
                         par_workers: protocol.par_workers,
                         eval_workers: 1,
                     };
                     let mut study = Study::new(cfg, 9000 + seed);
                     let t0 = std::time::Instant::now();
                     let best = study.optimize(|x| objective.value(x));
-                    walls.push(t0.elapsed().as_secs_f64());
-                    bests.push(best.value);
-                    iters_all.extend(study.stats.iters.iter().map(|&i| i as f64));
+                    runs.walls.push(t0.elapsed().as_secs_f64());
+                    runs.bests.push(best.value);
+                    runs.iters.extend(study.stats.iters.iter().map(|&i| i as f64));
+                    runs.fit_full_s.push(study.stats.fit_full_wall.as_secs_f64());
+                    runs.fit_inc_s.push(study.stats.fit_incremental_wall.as_secs_f64());
+                    runs.fit_full = study.stats.fit_full;
+                    runs.fit_incremental = study.stats.fit_incremental;
                 }
-                per_strategy.push((strategy, bests, walls, iters_all));
+                per_strategy.push(runs);
             }
 
             // Paper normalization: subtract the best value over ALL runs
             // of the cell (all strategies, all seeds).
             let global_best = per_strategy
                 .iter()
-                .flat_map(|(_, b, _, _)| b.iter())
+                .flat_map(|r| r.bests.iter())
                 .fold(f64::INFINITY, |m, &v| m.min(v));
 
-            for (strategy, bests, mut walls, mut iters_all) in per_strategy {
+            for mut runs in per_strategy {
                 let mut normalized: Vec<f64> =
-                    bests.iter().map(|v| v - global_best).collect();
+                    runs.bests.iter().map(|v| v - global_best).collect();
                 results.push(CellResult {
                     objective: obj_name.clone(),
                     dim,
-                    strategy,
+                    strategy: runs.strategy,
                     best_value: median(&mut normalized),
-                    runtime_s: median(&mut walls),
-                    iters: if iters_all.is_empty() { 0.0 } else { median(&mut iters_all) },
-                    raw_best: bests,
+                    runtime_s: median(&mut runs.walls),
+                    fit_full_s: median(&mut runs.fit_full_s),
+                    fit_inc_s: median(&mut runs.fit_inc_s),
+                    fit_full: runs.fit_full,
+                    fit_incremental: runs.fit_incremental,
+                    iters: if runs.iters.is_empty() {
+                        0.0
+                    } else {
+                        median(&mut runs.iters)
+                    },
+                    raw_best: runs.bests,
                 });
             }
         }
@@ -98,7 +136,15 @@ pub fn report(title: &str, protocol: &BenchProtocol, results: &[CellResult]) -> 
         "\n=== {title} — BO benchmark ({} trials, B={} restarts, m={}, {} seeds; paper: 300 trials / 20 seeds) ===",
         protocol.trials, protocol.restarts, protocol.lbfgsb.memory, protocol.seeds
     );
-    let mut table = Table::new(&["Objective", "D", "Method", "Best Value ↓", "Runtime (s) ↓", "Iters. ↓"]);
+    let mut table = Table::new(&[
+        "Objective",
+        "D",
+        "Method",
+        "Best Value ↓",
+        "Runtime (s) ↓",
+        "Fit full/inc (s) ↓",
+        "Iters. ↓",
+    ]);
     for r in results {
         table.row(&[
             r.objective.clone(),
@@ -106,6 +152,7 @@ pub fn report(title: &str, protocol: &BenchProtocol, results: &[CellResult]) -> 
             r.strategy.name().to_string(),
             format!("{:.4e}", r.best_value),
             format!("{:.2}", r.runtime_s),
+            format!("{:.2}/{:.3} ({}+{})", r.fit_full_s, r.fit_inc_s, r.fit_full, r.fit_incremental),
             format!("{:.1}", r.iters),
         ]);
     }
@@ -136,12 +183,16 @@ pub fn report(title: &str, protocol: &BenchProtocol, results: &[CellResult]) -> 
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{:.6e},{:.4},{:.2}",
+                "{},{},{},{:.6e},{:.4},{:.4},{:.4},{},{},{:.2}",
                 r.objective,
                 r.dim,
                 r.strategy.name().replace(' ', ""),
                 r.best_value,
                 r.runtime_s,
+                r.fit_full_s,
+                r.fit_inc_s,
+                r.fit_full,
+                r.fit_incremental,
                 r.iters
             )
         })
@@ -149,7 +200,7 @@ pub fn report(title: &str, protocol: &BenchProtocol, results: &[CellResult]) -> 
     let path = write_csv(
         &protocol.out_dir,
         &format!("{}.csv", title.to_lowercase().replace(' ', "_")),
-        "objective,dim,method,best_value,runtime_s,iters",
+        "objective,dim,method,best_value,runtime_s,fit_full_s,fit_inc_s,fit_full,fit_incremental,iters",
         &rows,
     )?;
     println!("\nCSV written to {path}");
@@ -178,6 +229,11 @@ mod tests {
             assert!(r.best_value >= 0.0, "normalized best must be ≥ 0");
             assert!(r.runtime_s > 0.0);
             assert_eq!(r.raw_best.len(), 2);
+            // fit_every = 1 (paper protocol): every model-based trial is
+            // a full refit, the incremental path stays idle.
+            assert_eq!(r.fit_full, 14 - 6);
+            assert_eq!(r.fit_incremental, 0);
+            assert!(r.fit_full_s > 0.0);
         }
         // At least one strategy achieves the global best (normalized 0 ≤ median).
         let min_best = results.iter().map(|r| r.best_value).fold(f64::INFINITY, f64::min);

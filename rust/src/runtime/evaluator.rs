@@ -78,9 +78,16 @@ impl PjrtEvaluator {
         let mut mask = vec![0.0; n_pad];
         mask[..n].fill(1.0);
         // K⁻¹ padded with zeros (padded k* entries are masked to zero,
-        // so the padded block never contributes).
+        // so the padded block never contributes). The regressor no
+        // longer stores a dense inverse, so the artifact's K⁻¹ input is
+        // materialized here, once per evaluator build — i.e. once per
+        // model-based trial when a Study eval-factory is set (same
+        // O(n³) the pre-engine regressor paid per trial), off the
+        // per-batch hot path. If the PJRT path ever adopts fit_every
+        // windows in earnest, grow this buffer incrementally alongside
+        // the regressor's W instead.
         let mut kinv_flat = vec![0.0; n_pad * n_pad];
-        let kinv = gp.k_inv();
+        let kinv = gp.chol().inverse();
         for i in 0..n {
             for j in 0..n {
                 kinv_flat[i * n_pad + j] = kinv[(i, j)];
