@@ -2,13 +2,19 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test docs bench bench-smoke bench-gp-fit artifacts
+.PHONY: build test lint docs bench bench-smoke bench-gp-fit artifacts
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# CI's lint gate: formatting and a warning-clean clippy pass (the
+# allow-list for style lints lives in Cargo.toml [lints.clippy]).
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
 
 # CI's docs gate: rustdoc must be warning-clean and doctests must pass.
 docs:
@@ -22,6 +28,7 @@ bench:
 	cargo bench --bench table_rastrigin
 	cargo bench --bench par_dbe
 	cargo bench --bench gp_fit
+	cargo bench --bench hub_throughput
 
 # Tiny-budget pass over every bench target so bench code can't rot
 # (mirrors CI's bench-smoke job).
@@ -32,6 +39,7 @@ bench-smoke:
 	cargo bench --bench table_rastrigin -- --smoke
 	cargo bench --bench par_dbe -- --smoke
 	cargo bench --bench gp_fit -- --smoke
+	cargo bench --bench hub_throughput -- --smoke
 
 # The fit-engine perf snapshot: emits results/BENCH_gp_fit.json
 # (EXPERIMENTS.md §Perf "GP fit"). Run this on a quiet host for real

@@ -1,0 +1,205 @@
+//! Bench: StudyHub serving throughput (EXPERIMENTS.md §E2E "Hub").
+//!
+//! Workload: M identical studies over a BBOB objective. Three
+//! deployment shapes:
+//!
+//! * **serial** — M blocking `Study::optimize` loops, one after the
+//!   other: the pre-hub baseline.
+//! * **hub q=1** — M concurrent ask/tell drivers through one hub with
+//!   a shared coalescing acquisition pool: cross-study concurrency.
+//! * **hub q=Q** — the same, asking Q constant-liar candidates per
+//!   round: fewer ask round-trips per study at fantasy-refit cost.
+//!
+//! Emits `results/BENCH_hub.json` — the first entry of the hub bench
+//! trajectory (CI uploads the smoke-mode file to prove the plumbing;
+//! real numbers come from a quiet host).
+//!
+//! Run: `cargo bench --bench hub_throughput [-- --smoke] [-- flags]`.
+//! Flags ride through [`BenchProtocol`]: `--trials`, `--q`,
+//! `--hub-workers`, `--dims`, `--objectives`, `--out`.
+
+use dbe_bo::bbob::{self, Objective};
+use dbe_bo::bo::{Study, StudyConfig};
+use dbe_bo::cli::Args;
+use dbe_bo::config::BenchProtocol;
+use dbe_bo::coordinator::ServiceConfig;
+use dbe_bo::hub::{HubConfig, StudyHub, StudySpec};
+use dbe_bo::optim::mso::MsoStrategy;
+use std::sync::Arc;
+use std::time::Instant;
+
+const STUDIES: usize = 4;
+
+fn study_cfg(dim: usize, bounds: Vec<(f64, f64)>, p: &BenchProtocol) -> StudyConfig {
+    StudyConfig {
+        dim,
+        bounds,
+        n_trials: p.trials,
+        n_startup: p.startup.min(p.trials),
+        restarts: p.restarts,
+        strategy: MsoStrategy::Dbe,
+        lbfgsb: p.lbfgsb,
+        fit_every: p.fit_every,
+        ..StudyConfig::default()
+    }
+}
+
+fn run_serial(p: &BenchProtocol, dim: usize, objective: &str) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut bests = Vec::new();
+    for s in 0..STUDIES {
+        let f = bbob::by_name(objective, dim, 1000 + dim as u64).unwrap();
+        let mut study = Study::new(study_cfg(dim, f.bounds(), p), 500 + s as u64);
+        bests.push(study.optimize(|x| f.value(x)).value);
+    }
+    (t0.elapsed().as_secs_f64(), bests)
+}
+
+/// Returns (wall seconds, best values, pool (requests, batches, points)).
+fn run_hub(
+    p: &BenchProtocol,
+    dim: usize,
+    objective: &str,
+    q: usize,
+) -> (f64, Vec<f64>, (u64, u64, u64)) {
+    let hub = Arc::new(
+        StudyHub::open(HubConfig {
+            journal: None,
+            pool_workers: p.hub_workers.max(1),
+            service: ServiceConfig::default(),
+        })
+        .unwrap(),
+    );
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for s in 0..STUDIES {
+        let hub = Arc::clone(&hub);
+        let objective = objective.to_string();
+        let p = p.clone();
+        joins.push(std::thread::spawn(move || {
+            let f = bbob::by_name(&objective, dim, 1000 + dim as u64).unwrap();
+            let spec = StudySpec::new(
+                format!("s{s}"),
+                study_cfg(dim, f.bounds(), &p),
+                500 + s as u64,
+            );
+            let n_trials = spec.config.n_trials;
+            let id = hub.create_study(spec).unwrap();
+            let mut done = 0;
+            while done < n_trials {
+                let batch = hub.ask(id, q.min(n_trials - done)).unwrap();
+                for sug in batch {
+                    hub.tell(id, sug.trial_id, f.value(&sug.x)).unwrap();
+                    done += 1;
+                }
+            }
+            hub.snapshot(id).unwrap().best.unwrap().value
+        }));
+    }
+    let bests: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let m = hub.pool_metrics().unwrap();
+    (wall, bests, (m.requests, m.batches, m.points))
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let smoke = args.has("smoke");
+    let mut p = BenchProtocol::from_args(&args).expect("bench flags");
+    if smoke {
+        p.trials = 10;
+        p.startup = 4;
+        p.restarts = 3;
+        p.dims = vec![2];
+    } else if !args.has("trials") {
+        p.trials = 25;
+    }
+    if !args.has("q") {
+        p.q = 2;
+    }
+    if p.hub_workers == 0 {
+        p.hub_workers = 2;
+    }
+    let dim = p.dims.first().copied().unwrap_or(2);
+    let objective = p
+        .objectives
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "rastrigin".to_string());
+
+    println!(
+        "# hub_throughput — {STUDIES} studies on {objective} D={dim}, {} trials, q={}, pool workers {}{}",
+        p.trials,
+        p.q,
+        p.hub_workers,
+        if smoke { " [SMOKE]" } else { "" }
+    );
+
+    let (serial_s, serial_bests) = run_serial(&p, dim, &objective);
+    println!("serial    : {serial_s:>8.3}s  bests {serial_bests:?}");
+
+    let (hub1_s, hub1_bests, _) = run_hub(&p, dim, &objective, 1);
+    println!("hub q=1   : {hub1_s:>8.3}s  bests {hub1_bests:?}");
+
+    let (hubq_s, hubq_bests, (reqs, batches, points)) = run_hub(&p, dim, &objective, p.q);
+    println!(
+        "hub q={}  : {hubq_s:>8.3}s  bests {hubq_bests:?}  pool requests {reqs} batches {batches} points {points}",
+        p.q
+    );
+
+    // q=1 hub trajectories are bitwise those of the serial studies —
+    // the throughput comparison is apples to apples.
+    assert_eq!(serial_bests, hub1_bests, "hub q=1 must replay the serial studies");
+
+    let speedup1 = serial_s / hub1_s;
+    let speedup_q = serial_s / hubq_s;
+    let mean_batch = if batches > 0 { points as f64 / batches as f64 } else { 0.0 };
+    println!(
+        "-> concurrency speedup {speedup1:.2}x (q=1), {speedup_q:.2}x (q={}), pool mean batch {mean_batch:.2}",
+        p.q
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"hub_throughput\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"studies\": {studies},\n",
+            "  \"objective\": \"{objective}\",\n",
+            "  \"dim\": {dim},\n",
+            "  \"trials\": {trials},\n",
+            "  \"q\": {q},\n",
+            "  \"pool_workers\": {workers},\n",
+            "  \"serial_s\": {serial:.6},\n",
+            "  \"hub_q1_s\": {hub1:.6},\n",
+            "  \"hub_qq_s\": {hubq:.6},\n",
+            "  \"speedup_q1\": {sp1:.4},\n",
+            "  \"speedup_qq\": {spq:.4},\n",
+            "  \"pool_requests\": {reqs},\n",
+            "  \"pool_batches\": {batches},\n",
+            "  \"pool_points\": {points},\n",
+            "  \"pool_mean_batch\": {mean_batch:.4}\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        studies = STUDIES,
+        objective = objective,
+        dim = dim,
+        trials = p.trials,
+        q = p.q,
+        workers = p.hub_workers,
+        serial = serial_s,
+        hub1 = hub1_s,
+        hubq = hubq_s,
+        sp1 = speedup1,
+        spq = speedup_q,
+        reqs = reqs,
+        batches = batches,
+        points = points,
+        mean_batch = mean_batch,
+    );
+    std::fs::create_dir_all(&p.out_dir).expect("create out dir");
+    let path = format!("{}/BENCH_hub.json", p.out_dir);
+    std::fs::write(&path, json).expect("write bench json");
+    println!("JSON written to {path}");
+}

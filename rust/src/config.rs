@@ -35,6 +35,12 @@ pub struct BenchProtocol {
     /// observations take the O(n²) incremental `refit_append` path
     /// (1 = refit every trial, the paper's protocol).
     pub fit_every: usize,
+    /// Candidates per hub ask (constant-liar q-batch size; 1 = plain
+    /// sequential ask/tell). Used by `dbe-bo hub` and the hub bench.
+    pub q: usize,
+    /// Worker threads of the hub's shared acquisition pool (0 = pool
+    /// disabled, each study evaluates natively).
+    pub hub_workers: usize,
 }
 
 impl Default for BenchProtocol {
@@ -64,6 +70,8 @@ impl Default for BenchProtocol {
             with_par: false,
             par_workers: 0,
             fit_every: 1,
+            q: 1,
+            hub_workers: 0,
         }
     }
 }
@@ -71,7 +79,8 @@ impl Default for BenchProtocol {
 impl BenchProtocol {
     /// Apply CLI overrides: `--trials`, `--seeds`, `--dims`,
     /// `--objectives`, `--restarts`, `--out`, `--fast`, `--paper`,
-    /// `--with-par`, `--par-workers`, `--fit-every`.
+    /// `--with-par`, `--par-workers`, `--fit-every`, `--q`,
+    /// `--hub-workers`.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut p = BenchProtocol::default();
         if args.has("paper") {
@@ -91,6 +100,8 @@ impl BenchProtocol {
         p.with_par = p.with_par || args.has("with-par");
         p.par_workers = args.get_usize("par-workers", p.par_workers)?;
         p.fit_every = args.get_usize("fit-every", p.fit_every)?.max(1);
+        p.q = args.get_usize("q", p.q)?.max(1);
+        p.hub_workers = args.get_usize("hub-workers", p.hub_workers)?;
         if args.has("objectives") {
             p.objectives = args
                 .get_str("objectives", "")
@@ -185,6 +196,23 @@ mod tests {
             crate::cli::Args::parse(["--fit-every", "0"].iter().map(|s| s.to_string()))
                 .unwrap();
         assert_eq!(BenchProtocol::from_args(&args).unwrap().fit_every, 1);
+    }
+
+    #[test]
+    fn hub_overrides_with_floors() {
+        let p = BenchProtocol::default();
+        assert_eq!(p.q, 1);
+        assert_eq!(p.hub_workers, 0);
+        let args = crate::cli::Args::parse(
+            ["--q", "3", "--hub-workers", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let p = BenchProtocol::from_args(&args).unwrap();
+        assert_eq!(p.q, 3);
+        assert_eq!(p.hub_workers, 2);
+        let args =
+            crate::cli::Args::parse(["--q", "0"].iter().map(|s| s.to_string())).unwrap();
+        assert_eq!(BenchProtocol::from_args(&args).unwrap().q, 1, "q floors at 1");
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //!   [`metrics::ShardedMetrics`] registry gives every Par-D-BE shard its
 //!   own counter set.
 //!
+//! The study hub's shared acquisition pool
+//! ([`crate::hub::pool::AcqPool`]) is the multi-tenant generalization
+//! of [`service::BatchService`]: same drain/coalesce discipline and the
+//! same [`metrics::Metrics`] counting rules, with per-submission
+//! evaluator keys so many studies' differing GPs can share one worker
+//! pool.
+//!
 //! All of it is std-only (`std::thread` + `std::sync::mpsc`): tokio is
 //! unavailable offline, and the workload — few long-lived workers, small
 //! message rate — is exactly what blocking channels are good at.
@@ -26,6 +33,6 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{Metrics, ShardedMetrics};
+pub use metrics::{Metrics, MetricsSnapshot, ShardedMetrics};
 pub use router::Router;
 pub use service::{BatchService, ServiceConfig};

@@ -17,6 +17,9 @@ pub enum Error {
     Config(String),
     /// Coordinator/channel failure.
     Coordinator(String),
+    /// Study-hub failure (unknown study/trial, journal corruption,
+    /// replay mismatch).
+    Hub(String),
     /// I/O error.
     Io(std::io::Error),
 }
@@ -30,6 +33,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Hub(m) => write!(f, "hub error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -58,6 +62,7 @@ mod tests {
         assert!(Error::Runtime("x".into()).to_string().contains("runtime"));
         assert!(Error::Config("x".into()).to_string().contains("config"));
         assert!(Error::Coordinator("x".into()).to_string().contains("coordinator"));
+        assert!(Error::Hub("x".into()).to_string().contains("hub"));
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Append-only JSONL journal for the study hub.
+//!
+//! Every state-changing hub operation (`create` / `ask` / `tell`)
+//! appends one self-contained JSON line. Replaying the lines in order
+//! through [`crate::hub::StudyHub`] reconstructs every study's
+//! history, pending trials, fit schedule, and (per-trial-derived) RNG
+//! stream exactly — see `rust/tests/hub_equivalence.rs`.
+//!
+//! Crash discipline: events are appended *after* the state change they
+//! record and flushed before the client sees a reply, so the journal
+//! never claims an operation that didn't happen; an operation whose
+//! event was lost mid-write was never acknowledged. Because every
+//! append writes `line\n` as one buffer, an acknowledged event always
+//! ends with its newline — so an *unterminated* final line is the one
+//! legitimate crash artifact (detected on open, reported, truncated
+//! away), while ANY newline-terminated line that fails to parse —
+//! interior or final — is corruption of acknowledged state and fails
+//! the open with a typed [`Error::Hub`].
+
+use super::json::Json;
+use super::{Liar, StudySpec};
+use crate::bo::StudyConfig;
+use crate::error::{Error, Result};
+use crate::optim::lbfgsb::LbfgsbOptions;
+use crate::optim::mso::MsoStrategy;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// One journaled hub operation.
+#[derive(Clone, Debug)]
+pub enum JournalEvent {
+    /// A study was created with the given hub-assigned index.
+    Create { study: usize, spec: StudySpec },
+    /// One ask: the batch of `(trial_id, x_raw)` suggestions issued.
+    Ask { study: usize, trials: Vec<(u64, Vec<f64>)> },
+    /// One tell: the observed value for a pending trial.
+    Tell { study: usize, trial_id: u64, value: f64 },
+}
+
+impl JournalEvent {
+    /// Encode as one JSON object (the journal line, sans newline).
+    pub fn encode(&self) -> Json {
+        match self {
+            JournalEvent::Create { study, spec } => {
+                let c = &spec.config;
+                let bounds = Json::Arr(
+                    c.bounds
+                        .iter()
+                        .map(|&(lo, hi)| Json::Arr(vec![Json::f64(lo), Json::f64(hi)]))
+                        .collect(),
+                );
+                let lb = Json::Obj(vec![
+                    ("memory".into(), Json::usize(c.lbfgsb.memory)),
+                    ("pgtol".into(), Json::f64(c.lbfgsb.pgtol)),
+                    ("ftol".into(), Json::f64(c.lbfgsb.ftol)),
+                    ("max_iters".into(), Json::usize(c.lbfgsb.max_iters)),
+                    ("max_evals".into(), Json::usize(c.lbfgsb.max_evals)),
+                ]);
+                Json::Obj(vec![
+                    ("ev".into(), Json::Str("create".into())),
+                    ("study".into(), Json::usize(*study)),
+                    ("name".into(), Json::Str(spec.name.clone())),
+                    ("seed".into(), Json::u64(spec.seed)),
+                    ("liar".into(), Json::Str(spec.liar.token().into())),
+                    ("tag".into(), Json::Str(spec.tag.clone())),
+                    ("dim".into(), Json::usize(c.dim)),
+                    ("bounds".into(), bounds),
+                    ("n_trials".into(), Json::usize(c.n_trials)),
+                    ("n_startup".into(), Json::usize(c.n_startup)),
+                    ("restarts".into(), Json::usize(c.restarts)),
+                    ("strategy".into(), Json::Str(c.strategy.token().into())),
+                    ("fit_every".into(), Json::usize(c.fit_every)),
+                    ("par_workers".into(), Json::usize(c.par_workers)),
+                    ("eval_workers".into(), Json::usize(c.eval_workers)),
+                    ("lbfgsb".into(), lb),
+                ])
+            }
+            JournalEvent::Ask { study, trials } => {
+                let trials = Json::Arr(
+                    trials
+                        .iter()
+                        .map(|(id, x)| {
+                            Json::Obj(vec![
+                                ("id".into(), Json::u64(*id)),
+                                (
+                                    "x".into(),
+                                    Json::Arr(x.iter().map(|&v| Json::f64(v)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                );
+                Json::Obj(vec![
+                    ("ev".into(), Json::Str("ask".into())),
+                    ("study".into(), Json::usize(*study)),
+                    ("trials".into(), trials),
+                ])
+            }
+            JournalEvent::Tell { study, trial_id, value } => Json::Obj(vec![
+                ("ev".into(), Json::Str("tell".into())),
+                ("study".into(), Json::usize(*study)),
+                ("trial".into(), Json::u64(*trial_id)),
+                ("value".into(), Json::f64(*value)),
+            ]),
+        }
+    }
+
+    /// Decode one journal line.
+    pub fn decode(j: &Json) -> Result<JournalEvent> {
+        match j.field("ev")?.as_str()? {
+            "create" => {
+                let lb = j.field("lbfgsb")?;
+                let bounds = j
+                    .field("bounds")?
+                    .as_arr()?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair.as_arr()?;
+                        if p.len() != 2 {
+                            return Err(Error::Hub("bound is not a (lo, hi) pair".into()));
+                        }
+                        Ok((p[0].as_f64()?, p[1].as_f64()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let config = StudyConfig {
+                    dim: j.field("dim")?.as_usize()?,
+                    bounds,
+                    n_trials: j.field("n_trials")?.as_usize()?,
+                    n_startup: j.field("n_startup")?.as_usize()?,
+                    restarts: j.field("restarts")?.as_usize()?,
+                    strategy: MsoStrategy::parse(j.field("strategy")?.as_str()?)?,
+                    lbfgsb: LbfgsbOptions {
+                        memory: lb.field("memory")?.as_usize()?,
+                        pgtol: lb.field("pgtol")?.as_f64()?,
+                        ftol: lb.field("ftol")?.as_f64()?,
+                        max_iters: lb.field("max_iters")?.as_usize()?,
+                        max_evals: lb.field("max_evals")?.as_usize()?,
+                    },
+                    fit_every: j.field("fit_every")?.as_usize()?,
+                    par_workers: j.field("par_workers")?.as_usize()?,
+                    eval_workers: j.field("eval_workers")?.as_usize()?,
+                };
+                Ok(JournalEvent::Create {
+                    study: j.field("study")?.as_usize()?,
+                    spec: StudySpec {
+                        name: j.field("name")?.as_str()?.to_string(),
+                        seed: j.field("seed")?.as_u64()?,
+                        liar: Liar::parse(j.field("liar")?.as_str()?)?,
+                        tag: j.field("tag")?.as_str()?.to_string(),
+                        config,
+                    },
+                })
+            }
+            "ask" => {
+                let trials = j
+                    .field("trials")?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| {
+                        let x = t
+                            .field("x")?
+                            .as_arr()?
+                            .iter()
+                            .map(Json::as_f64)
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok((t.field("id")?.as_u64()?, x))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(JournalEvent::Ask { study: j.field("study")?.as_usize()?, trials })
+            }
+            "tell" => Ok(JournalEvent::Tell {
+                study: j.field("study")?.as_usize()?,
+                trial_id: j.field("trial")?.as_u64()?,
+                value: j.field("value")?.as_f64()?,
+            }),
+            other => Err(Error::Hub(format!("unknown journal event '{other}'"))),
+        }
+    }
+}
+
+/// The append-only journal file.
+pub struct Journal {
+    file: std::fs::File,
+    n_events: usize,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, returning the handle
+    /// positioned for appending plus every event already recorded.
+    ///
+    /// A torn final line is truncated away (with a note on stderr); a
+    /// malformed interior line fails the open.
+    pub fn open(path: &Path) -> Result<(Journal, Vec<JournalEvent>)> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut events = Vec::new();
+        let mut valid_len: u64 = 0;
+        if path.exists() {
+            let raw = std::fs::read_to_string(path)?;
+            for (i, chunk) in raw.split_inclusive('\n').enumerate() {
+                if !chunk.ends_with('\n') {
+                    // Only the final chunk can lack its newline; an
+                    // acknowledged append always wrote `line\n`, so an
+                    // unterminated line is a torn write — drop it even
+                    // if it happens to parse, or the next append would
+                    // glue onto it.
+                    eprintln!(
+                        "hub journal {}: dropping unterminated final line",
+                        path.display()
+                    );
+                    break;
+                }
+                let text = chunk.trim_end_matches(['\n', '\r']);
+                let parsed = Json::parse(text).and_then(|j| JournalEvent::decode(&j));
+                match parsed {
+                    Ok(ev) => {
+                        events.push(ev);
+                        valid_len += chunk.len() as u64;
+                    }
+                    Err(e) => {
+                        // A newline-terminated line was fully written
+                        // and acknowledged — failing to parse it means
+                        // corrupted acknowledged state, even at the
+                        // tail. Never silently drop it.
+                        return Err(Error::Hub(format!(
+                            "journal {} corrupt at line {}: {e}",
+                            path.display(),
+                            i + 1
+                        )));
+                    }
+                }
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(path)?;
+        file.set_len(valid_len)?;
+        let mut file = file;
+        file.seek(SeekFrom::End(0))?;
+        let n_events = events.len();
+        Ok((Journal { file, n_events }, events))
+    }
+
+    /// Append one event and flush it to the OS before returning.
+    pub fn append(&mut self, ev: &JournalEvent) -> Result<()> {
+        let line = format!("{}\n", ev.encode());
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        self.n_events += 1;
+        Ok(())
+    }
+
+    /// Events recorded over this journal's lifetime (replayed + appended).
+    pub fn n_events(&self) -> usize {
+        self.n_events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::mso::MsoStrategy;
+
+    fn spec(dim: usize) -> StudySpec {
+        StudySpec {
+            name: "s0".into(),
+            seed: u64::MAX - 7,
+            liar: Liar::Best,
+            tag: "rastrigin".into(),
+            config: StudyConfig {
+                dim,
+                bounds: vec![(-5.0, 5.0); dim],
+                n_trials: 20,
+                n_startup: 6,
+                restarts: 4,
+                strategy: MsoStrategy::Dbe,
+                fit_every: 2,
+                ..StudyConfig::default()
+            },
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dbe_bo_journal_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn events_round_trip_bitwise() {
+        let evs = vec![
+            JournalEvent::Create { study: 0, spec: spec(2) },
+            JournalEvent::Ask {
+                study: 0,
+                trials: vec![(0, vec![0.5, -1.25]), (1, vec![-0.1, 4.75])],
+            },
+            JournalEvent::Tell { study: 0, trial_id: 0, value: -3.5e-7 },
+        ];
+        for ev in &evs {
+            let line = ev.encode().to_string();
+            let back = JournalEvent::decode(&Json::parse(&line).unwrap()).unwrap();
+            match (ev, &back) {
+                (
+                    JournalEvent::Create { study: a, spec: sa },
+                    JournalEvent::Create { study: b, spec: sb },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(sa.name, sb.name);
+                    assert_eq!(sa.seed, sb.seed);
+                    assert_eq!(sa.liar, sb.liar);
+                    assert_eq!(sa.tag, sb.tag);
+                    assert_eq!(sa.config.dim, sb.config.dim);
+                    assert_eq!(sa.config.bounds, sb.config.bounds);
+                    assert_eq!(sa.config.strategy, sb.config.strategy);
+                    assert_eq!(sa.config.fit_every, sb.config.fit_every);
+                    assert_eq!(sa.config.lbfgsb.pgtol, sb.config.lbfgsb.pgtol);
+                }
+                (
+                    JournalEvent::Ask { study: a, trials: ta },
+                    JournalEvent::Ask { study: b, trials: tb },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(ta, tb);
+                }
+                (
+                    JournalEvent::Tell { study: a, trial_id: ia, value: va },
+                    JournalEvent::Tell { study: b, trial_id: ib, value: vb },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(ia, ib);
+                    assert_eq!(va.to_bits(), vb.to_bits());
+                }
+                _ => panic!("event kind changed in round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn journal_file_round_trip_and_reopen() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let (mut j, replayed) = Journal::open(&path).unwrap();
+            assert!(replayed.is_empty());
+            j.append(&JournalEvent::Create { study: 0, spec: spec(2) }).unwrap();
+            j.append(&JournalEvent::Ask { study: 0, trials: vec![(0, vec![1.0, 2.0])] })
+                .unwrap();
+            assert_eq!(j.n_events(), 2);
+        } // drop = crash point
+        let (mut j, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 2);
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 7.0 }).unwrap();
+        let (_, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_is_truncated_interior_corruption_fails() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let (mut j, _) = Journal::open(&path).unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 }).unwrap();
+        }
+        // Simulate a crash mid-append: garbage partial line at the end.
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        raw.push_str("{\"ev\":\"tell\",\"stu");
+        std::fs::write(&path, &raw).unwrap();
+        let (mut j, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 1, "torn tail must be dropped");
+        // The torn bytes must be physically gone so appends stay valid.
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 2, value: 3.0 }).unwrap();
+        drop(j);
+        let (_, replayed) = Journal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 2);
+
+        // Interior corruption is a hard error...
+        let good = std::fs::read_to_string(&path).unwrap();
+        let corrupted = format!("not json at all\n{good}");
+        std::fs::write(&path, corrupted).unwrap();
+        assert!(matches!(Journal::open(&path), Err(Error::Hub(_))));
+
+        // ...and so is a newline-TERMINATED malformed final line: it
+        // was acknowledged (appends write `line\n` atomically w.r.t.
+        // acknowledgment), so it must never be silently dropped.
+        std::fs::write(&path, format!("{good}not json either\n")).unwrap();
+        assert!(matches!(Journal::open(&path), Err(Error::Hub(_))));
+        let _ = std::fs::remove_file(&path);
+    }
+}

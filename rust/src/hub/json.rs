@@ -1,0 +1,394 @@
+//! Minimal JSON for the hub journal (no `serde` offline).
+//!
+//! Numbers are kept as their **raw source token** ([`Json::Num`] holds
+//! the string), so `u64` seeds and trial ids round-trip exactly even
+//! above 2⁵³, and `f64` payloads written with Rust's shortest
+//! round-trip `Display` re-parse bitwise. The parser accepts exactly
+//! the JSON subset the journal emits (objects, arrays, strings with
+//! escapes, numbers, booleans, null) and rejects trailing garbage —
+//! a malformed journal line must fail loudly, not half-parse.
+
+use crate::error::{Error, Result};
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Raw number token, exactly as written (e.g. `"-0.25"`, `"18446744073709551615"`).
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Key/value pairs in source order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Build a number node from an `f64` using Rust's shortest
+    /// round-trip formatting. Non-finite values are rejected upstream
+    /// (the journal never records them).
+    pub fn f64(v: f64) -> Json {
+        Json::Num(format!("{v}"))
+    }
+
+    pub fn u64(v: u64) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    pub fn usize(v: usize) -> Json {
+        Json::Num(v.to_string())
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field, typed error when missing.
+    pub fn field(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| Error::Hub(format!("journal record missing field '{key}'")))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(Error::Hub(format!("expected string, got {other}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(tok) => tok
+                .parse()
+                .map_err(|_| Error::Hub(format!("bad number token '{tok}'"))),
+            other => Err(Error::Hub(format!("expected number, got {other}"))),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::Num(tok) => tok
+                .parse()
+                .map_err(|_| Error::Hub(format!("bad integer token '{tok}'"))),
+            other => Err(Error::Hub(format!("expected integer, got {other}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => Err(Error::Hub(format!("expected array, got {other}"))),
+        }
+    }
+
+    /// Parse one complete JSON document; trailing non-whitespace is an
+    /// error (a truncated or glued journal line must not half-parse).
+    pub fn parse(src: &str) -> Result<Json> {
+        let bytes = src.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(Error::Hub(format!(
+                "trailing garbage at byte {pos} of journal record"
+            )));
+        }
+        Ok(value)
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(tok) => f.write_str(tok),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(fields) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, byte: u8) -> Result<()> {
+    if *pos < bytes.len() && bytes[*pos] == byte {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(Error::Hub(format!(
+            "expected '{}' at byte {} of journal record",
+            byte as char, *pos
+        )))
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err(Error::Hub("unexpected end of journal record".into())),
+        Some(b'{') => parse_obj(bytes, pos),
+        Some(b'[') => parse_arr(bytes, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        Some(_) => parse_num(bytes, pos),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(Error::Hub(format!("bad literal at byte {} of journal record", *pos)))
+    }
+}
+
+fn parse_num(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let tok = std::str::from_utf8(&bytes[start..*pos])
+        .expect("numeric bytes are ASCII")
+        .to_string();
+    // Validate the token parses as a number at all.
+    if tok.parse::<f64>().is_err() {
+        return Err(Error::Hub(format!("bad number token '{tok}'")));
+    }
+    Ok(Json::Num(tok))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err(Error::Hub("unterminated string in journal record".into())),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| Error::Hub("truncated \\u escape".into()))?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex)
+                                .map_err(|_| Error::Hub("bad \\u escape".into()))?,
+                            16,
+                        )
+                        .map_err(|_| Error::Hub("bad \\u escape".into()))?;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| Error::Hub("bad \\u code point".into()))?,
+                        );
+                        *pos += 4;
+                    }
+                    _ => return Err(Error::Hub("bad escape in journal record".into())),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (multi-byte sequences pass through).
+                let rest = std::str::from_utf8(&bytes[*pos..])
+                    .map_err(|_| Error::Hub("invalid UTF-8 in journal record".into()))?;
+                let c = rest.chars().next().expect("non-empty");
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(Error::Hub(format!("bad array at byte {} of record", *pos))),
+        }
+    }
+}
+
+fn parse_obj(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    expect(bytes, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect(bytes, pos, b':')?;
+        let value = parse_value(bytes, pos)?;
+        fields.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => return Err(Error::Hub(format!("bad object at byte {} of record", *pos))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_f64_bitwise() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            -2.25,
+            0.1,
+            1e-300,
+            -3.141592653589793,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+        ] {
+            let j = Json::f64(v);
+            let back = Json::parse(&j.to_string()).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} must round-trip bitwise");
+        }
+    }
+
+    #[test]
+    fn round_trips_u64_exactly() {
+        for v in [0u64, 1, u64::MAX, (1 << 53) + 1] {
+            let j = Json::u64(v);
+            assert_eq!(Json::parse(&j.to_string()).unwrap().as_u64().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let src = r#"{"ev":"ask","study":3,"trials":[{"id":7,"x":[0.5,-1.25]}],"ok":true,"none":null}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(j.field("ev").unwrap().as_str().unwrap(), "ask");
+        assert_eq!(j.field("study").unwrap().as_usize().unwrap(), 3);
+        let trials = j.field("trials").unwrap().as_arr().unwrap();
+        assert_eq!(trials[0].field("id").unwrap().as_u64().unwrap(), 7);
+        let x = trials[0].field("x").unwrap().as_arr().unwrap();
+        assert_eq!(x[1].as_f64().unwrap(), -1.25);
+        assert_eq!(j.field("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(j.field("none").unwrap(), &Json::Null);
+        // Display → parse → Display is a fixed point.
+        assert_eq!(j.to_string(), Json::parse(&j.to_string()).unwrap().to_string());
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let j = Json::Str("a\"b\\c\nd\u{1}".into());
+        let s = j.to_string();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn rejects_malformed_records() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\":}",
+            "[1,2",
+            "\"unterminated",
+            "{\"a\":1} trailing",
+            "{'single':1}",
+            "nul",
+            "{\"a\":--3}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn missing_field_is_typed_error() {
+        let j = Json::parse("{\"a\":1}").unwrap();
+        assert!(matches!(j.field("b"), Err(Error::Hub(_))));
+        assert!(j.get("b").is_none());
+    }
+}

@@ -1,0 +1,694 @@
+//! StudyHub — a multi-tenant ask/tell study-serving subsystem.
+//!
+//! [`crate::bo::Study`] runs one blocking suggest/observe loop; a
+//! serving deployment (Optuna's GPSampler shape) instead hosts **many
+//! concurrent studies** behind an ask/tell API:
+//!
+//! * [`StudyHub::create_study`] registers a study from a [`StudySpec`];
+//! * [`StudyHub::ask`] returns `q` candidates — candidate 1 runs the
+//!   normal MSO suggestion, candidates `2..q` (and any candidates that
+//!   are pending from earlier asks) are *fantasized* by constant-liar
+//!   (Wilson et al. 2018; the BoTorch q-batch recipe): clone the fitted
+//!   GP, absorb each pending point with a liar value through the O(n²)
+//!   [`crate::gp::GpRegressor::refit_append`] fast path, and re-run MSO
+//!   against the fantasized posterior — q-batch suggestion reuses the
+//!   incremental fit engine instead of inventing a new acquisition;
+//! * [`StudyHub::tell`] reports results **out of order** by trial id.
+//!
+//! ## Architecture: one actor per study
+//!
+//! Each study lives on its own thread (an *actor*) that owns the
+//! `Study` outright — `Study` may hold a thread-bound evaluator
+//! factory (the PJRT path is `Rc`-based), so it is built on the actor
+//! thread and never crosses one. The hub routes messages; callers
+//! block only on their own study's reply, so asks on different studies
+//! proceed concurrently. All actors share one coalescing
+//! [`AcqPool`](pool::AcqPool): acquisition batches from concurrent
+//! asks merge into larger oracle dispatches (see [`pool`]).
+//!
+//! ## Durability: the journal
+//!
+//! With [`HubConfig::journal`] set, every create/ask/tell appends one
+//! JSONL event ([`journal`]). [`StudyHub::open`] replays the journal:
+//! history, pending trials, the GP fit/warm-start schedule, and the
+//! per-trial RNG streams are reconstructed exactly, so the next
+//! suggestion after a restart is bitwise identical to the suggestion
+//! the un-crashed hub would have produced
+//! (`rust/tests/hub_equivalence.rs`).
+
+pub mod json;
+pub mod journal;
+pub mod pool;
+pub mod script;
+
+pub use journal::{Journal, JournalEvent};
+pub use pool::{AcqPool, OwnedGpEvaluator, PooledEvaluator};
+pub use script::{parse_script, ScriptStudy};
+
+use crate::bo::{BestResult, Study, StudyConfig, StudyStats, Trial};
+use crate::coordinator::{MetricsSnapshot, ServiceConfig};
+use crate::error::{Error, Result};
+use crate::gp::GpParams;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Constant-liar value policy for fantasized pending trials.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Liar {
+    /// Lie with the best (minimum) observed value — explores harder.
+    Best,
+    /// Lie with the worst (maximum) observed value — exploits harder.
+    Worst,
+    /// Lie with the mean observed value — the middle ground.
+    Mean,
+}
+
+impl Liar {
+    pub fn token(self) -> &'static str {
+        match self {
+            Liar::Best => "best",
+            Liar::Worst => "worst",
+            Liar::Mean => "mean",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "best" | "min" => Liar::Best,
+            "worst" | "max" => Liar::Worst,
+            "mean" | "avg" => Liar::Mean,
+            other => return Err(Error::Config(format!("unknown liar policy '{other}'"))),
+        })
+    }
+
+    /// The liar value over the observed history (caller guarantees
+    /// non-empty; tell validation guarantees finite values).
+    pub fn value(self, trials: &[Trial]) -> f64 {
+        debug_assert!(!trials.is_empty());
+        match self {
+            Liar::Best => trials.iter().map(|t| t.value).fold(f64::INFINITY, f64::min),
+            Liar::Worst => {
+                trials.iter().map(|t| t.value).fold(f64::NEG_INFINITY, f64::max)
+            }
+            Liar::Mean => {
+                trials.iter().map(|t| t.value).sum::<f64>() / trials.len() as f64
+            }
+        }
+    }
+}
+
+/// Everything needed to (re)build one hub study.
+#[derive(Clone, Debug)]
+pub struct StudySpec {
+    /// Unique human-readable name (the resume key).
+    pub name: String,
+    /// Root seed for the study's per-trial RNG streams.
+    pub seed: u64,
+    /// Constant-liar policy for q-batch / pending fantasization.
+    pub liar: Liar,
+    /// Free-form workload tag, journaled with the study. The hub treats
+    /// it as opaque; drivers use it to detect workload mismatches on
+    /// resume — `dbe-bo hub` records the objective name here and
+    /// refuses to continue a journaled study against a different
+    /// objective.
+    pub tag: String,
+    pub config: StudyConfig,
+}
+
+impl StudySpec {
+    pub fn new(name: impl Into<String>, config: StudyConfig, seed: u64) -> Self {
+        StudySpec { name: name.into(), seed, liar: Liar::Best, tag: String::new(), config }
+    }
+
+    /// Attach a workload tag (see [`StudySpec::tag`]).
+    pub fn with_tag(mut self, tag: impl Into<String>) -> Self {
+        self.tag = tag.into();
+        self
+    }
+}
+
+/// Handle to a hub study.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StudyId(usize);
+
+impl StudyId {
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+impl std::fmt::Display for StudyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "study#{}", self.0)
+    }
+}
+
+/// One ask candidate: evaluate `x`, then `tell(study, trial_id, value)`.
+#[derive(Clone, Debug)]
+pub struct Suggestion {
+    pub trial_id: u64,
+    pub x: Vec<f64>,
+}
+
+/// Point-in-time copy of one study's full serving state.
+#[derive(Clone, Debug)]
+pub struct StudySnapshot {
+    pub name: String,
+    pub seed: u64,
+    pub liar: Liar,
+    /// The spec's workload tag (resume-mismatch detection).
+    pub tag: String,
+    pub config: StudyConfig,
+    /// Completed trials in completion (tell) order.
+    pub trials: Vec<Trial>,
+    /// Asked-but-untold trials, ascending trial id.
+    pub pending: Vec<(u64, Vec<f64>)>,
+    /// Next trial id an ask would assign.
+    pub next_trial_id: u64,
+    pub stats: StudyStats,
+    /// Warm-started GP hyperparameters (fit-engine state).
+    pub gp_params: GpParams,
+    pub best: Option<BestResult>,
+}
+
+/// Hub-wide configuration.
+#[derive(Clone, Debug, Default)]
+pub struct HubConfig {
+    /// JSONL journal path; `None` = in-memory hub (no durability).
+    pub journal: Option<PathBuf>,
+    /// Worker threads of the shared acquisition pool; `0` disables the
+    /// pool (each actor evaluates with its own native oracle).
+    pub pool_workers: usize,
+    /// Microbatching knobs for the pool (coalescing window / batch cap).
+    pub service: ServiceConfig,
+}
+
+enum Msg {
+    Ask { q: usize, reply: Sender<Result<Vec<Suggestion>>> },
+    Tell { trial_id: u64, value: f64, reply: Sender<Result<()>> },
+    ReplayAsk { trials: Vec<(u64, Vec<f64>)>, reply: Sender<Result<()>> },
+    ReplayTell { trial_id: u64, value: f64, reply: Sender<Result<()>> },
+    Snapshot { reply: Sender<StudySnapshot> },
+}
+
+struct Actor {
+    name: String,
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The hub. `&self` methods are safe to call from many threads.
+pub struct StudyHub {
+    actors: Mutex<Vec<Actor>>,
+    journal: Option<Arc<Mutex<Journal>>>,
+    pool: Option<Arc<AcqPool>>,
+}
+
+impl StudyHub {
+    /// Open a hub: spawn the shared pool (if configured) and replay the
+    /// journal (if configured and present).
+    pub fn open(cfg: HubConfig) -> Result<StudyHub> {
+        let pool = if cfg.pool_workers > 0 {
+            Some(AcqPool::spawn(cfg.pool_workers, cfg.service))
+        } else {
+            None
+        };
+        let (journal, events) = match &cfg.journal {
+            Some(path) => {
+                let (j, evs) = Journal::open(path)?;
+                (Some(Arc::new(Mutex::new(j))), evs)
+            }
+            None => (None, Vec::new()),
+        };
+        let hub = StudyHub { actors: Mutex::new(Vec::new()), journal, pool };
+        for ev in events {
+            match ev {
+                JournalEvent::Create { study, spec } => {
+                    let id = hub.install_study(spec, false)?;
+                    if id.index() != study {
+                        return Err(Error::Hub(format!(
+                            "journal creates are out of order: expected {study}, got {id}"
+                        )));
+                    }
+                }
+                JournalEvent::Ask { study, trials } => {
+                    hub.study_request(StudyId(study), |reply| Msg::ReplayAsk {
+                        trials,
+                        reply,
+                    })??;
+                }
+                JournalEvent::Tell { study, trial_id, value } => {
+                    hub.study_request(StudyId(study), |reply| Msg::ReplayTell {
+                        trial_id,
+                        value,
+                        reply,
+                    })??;
+                }
+            }
+        }
+        Ok(hub)
+    }
+
+    /// An ephemeral hub: no journal, no shared pool.
+    pub fn in_memory() -> StudyHub {
+        Self::open(HubConfig::default()).expect("in-memory hub cannot fail to open")
+    }
+
+    /// Register a new study. Validates the config
+    /// ([`StudyConfig::validate`]), rejects duplicate names (names are
+    /// the resume key), journals the creation, and spawns the actor.
+    pub fn create_study(&self, spec: StudySpec) -> Result<StudyId> {
+        self.install_study(spec, true)
+    }
+
+    fn install_study(&self, spec: StudySpec, journal_it: bool) -> Result<StudyId> {
+        spec.config.validate()?;
+        let mut actors = self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if actors.iter().any(|a| a.name == spec.name) {
+            return Err(Error::Hub(format!("study '{}' already exists", spec.name)));
+        }
+        let idx = actors.len();
+        if journal_it {
+            if let Some(j) = &self.journal {
+                j.lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .append(&JournalEvent::Create { study: idx, spec: spec.clone() })?;
+            }
+        }
+        let (tx, rx) = channel::<Msg>();
+        let pool = self.pool.clone();
+        let journal = self.journal.clone();
+        let name = spec.name.clone();
+        let handle = std::thread::spawn(move || actor_loop(idx, spec, pool, journal, rx));
+        actors.push(Actor { name, tx, handle: Some(handle) });
+        Ok(StudyId(idx))
+    }
+
+    /// Look a study up by its (unique) name — the resume path.
+    pub fn find_study(&self, name: &str) -> Option<StudyId> {
+        let actors = self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        actors.iter().position(|a| a.name == name).map(StudyId)
+    }
+
+    pub fn n_studies(&self) -> usize {
+        self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner).len()
+    }
+
+    pub fn study_names(&self) -> Vec<String> {
+        let actors = self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        actors.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Ask for `q` candidates. Candidate 1 is the classic model-based
+    /// suggestion; later candidates fantasize every pending trial
+    /// (including the earlier candidates of this very ask) at the
+    /// study's constant-liar value.
+    pub fn ask(&self, id: StudyId, q: usize) -> Result<Vec<Suggestion>> {
+        if q == 0 {
+            return Err(Error::Hub("ask needs q >= 1".into()));
+        }
+        self.study_request(id, |reply| Msg::Ask { q, reply })?
+    }
+
+    /// Report the objective value for one pending trial (any order).
+    pub fn tell(&self, id: StudyId, trial_id: u64, value: f64) -> Result<()> {
+        if !value.is_finite() {
+            return Err(Error::Hub(format!(
+                "tell({id}, trial {trial_id}): value {value} is not finite"
+            )));
+        }
+        self.study_request(id, |reply| Msg::Tell { trial_id, value, reply })?
+    }
+
+    /// Full state copy of one study.
+    pub fn snapshot(&self, id: StudyId) -> Result<StudySnapshot> {
+        self.study_request(id, |reply| Msg::Snapshot { reply })
+    }
+
+    /// Shared-pool counters (None when the pool is disabled).
+    pub fn pool_metrics(&self) -> Option<MetricsSnapshot> {
+        self.pool.as_ref().map(|p| p.metrics.snapshot())
+    }
+
+    /// Shared-pool drain cycles (see [`AcqPool::n_trips`]).
+    pub fn pool_trips(&self) -> Option<u64> {
+        self.pool.as_ref().map(|p| p.n_trips())
+    }
+
+    /// Journal events recorded (replayed + appended); 0 without a journal.
+    pub fn journal_events(&self) -> usize {
+        self.journal
+            .as_ref()
+            .map(|j| {
+                j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).n_events()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Send one request to a study actor and await the typed reply.
+    fn study_request<T>(
+        &self,
+        id: StudyId,
+        build: impl FnOnce(Sender<T>) -> Msg,
+    ) -> Result<T> {
+        let tx = {
+            let actors =
+                self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let actor = actors
+                .get(id.0)
+                .ok_or_else(|| Error::Hub(format!("unknown study {id}")))?;
+            actor.tx.clone()
+        };
+        let (reply_tx, reply_rx) = channel();
+        tx.send(build(reply_tx))
+            .map_err(|_| Error::Hub(format!("{id} actor is gone")))?;
+        reply_rx.recv().map_err(|_| Error::Hub(format!("{id} actor died mid-request")))
+    }
+}
+
+impl Drop for StudyHub {
+    fn drop(&mut self) {
+        // Disconnect every actor's mailbox, then join. Actors drain
+        // queued requests first (mpsc yields buffered messages after
+        // disconnect), so no accepted work is dropped on shutdown.
+        let mut actors =
+            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let handles: Vec<_> =
+            actors.iter_mut().filter_map(|a| a.handle.take()).collect();
+        actors.clear(); // drops the senders
+        drop(actors);
+        for h in handles {
+            let _ = h.join();
+        }
+        // `self.pool` drops after the actors released their Arcs, so
+        // AcqPool::drop joins the pool workers cleanly.
+    }
+}
+
+/// The per-study actor: owns the `Study` (built here, on this thread,
+/// so thread-bound evaluator factories are fine), the pending set, and
+/// the trial-id counter.
+fn actor_loop(
+    idx: usize,
+    spec: StudySpec,
+    pool: Option<Arc<AcqPool>>,
+    journal: Option<Arc<Mutex<Journal>>>,
+    rx: Receiver<Msg>,
+) {
+    let StudySpec { name, seed, liar, tag, config } = spec;
+    let mut study = match Study::try_new(config, seed) {
+        Ok(s) => s,
+        Err(_) => return, // pre-validated in install_study; unreachable
+    };
+    if let Some(pool) = pool {
+        study.set_eval_factory(Box::new(move |gp| {
+            Ok(Box::new(PooledEvaluator::new(Arc::clone(&pool), Arc::new(gp.clone()))))
+        }));
+    }
+    let mut pending: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+    let mut next_id: u64 = 0;
+
+    let journal_append = |journal: &Option<Arc<Mutex<Journal>>>,
+                          ev: JournalEvent|
+     -> Result<()> {
+        if let Some(j) = journal {
+            j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).append(&ev)?;
+        }
+        Ok(())
+    };
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Ask { q, reply } => {
+                let result = (|| -> Result<Vec<Suggestion>> {
+                    // Compute all q candidates first; commit pending +
+                    // journal only when the whole batch succeeded, so a
+                    // failed ask leaves no half-issued trials behind.
+                    //
+                    // Each candidate re-clones the GP and re-appends
+                    // all fantasies (O(q²·n²) per ask) instead of
+                    // growing one fantasy clone incrementally
+                    // (O(q·n²)): q and the pending set are small, MSO
+                    // dominates each candidate anyway, and routing
+                    // every candidate through the one equivalence-
+                    // tested suggest core keeps live asks and journal
+                    // replay trivially in lockstep.
+                    let mut out: Vec<Suggestion> = Vec::with_capacity(q);
+                    for j in 0..q as u64 {
+                        let trial_id = next_id + j;
+                        let fantasies: Vec<(Vec<f64>, f64)> =
+                            if study.trials().is_empty() {
+                                Vec::new()
+                            } else {
+                                let lie = liar.value(study.trials());
+                                pending
+                                    .values()
+                                    .cloned()
+                                    .chain(out.iter().map(|s| s.x.clone()))
+                                    .map(|x| (x, lie))
+                                    .collect()
+                            };
+                        let x = study.suggest_for_trial(trial_id, &fantasies)?;
+                        out.push(Suggestion { trial_id, x });
+                    }
+                    journal_append(
+                        &journal,
+                        JournalEvent::Ask {
+                            study: idx,
+                            trials: out
+                                .iter()
+                                .map(|s| (s.trial_id, s.x.clone()))
+                                .collect(),
+                        },
+                    )?;
+                    for s in &out {
+                        pending.insert(s.trial_id, s.x.clone());
+                    }
+                    next_id += q as u64;
+                    Ok(out)
+                })();
+                let _ = reply.send(result);
+            }
+            Msg::Tell { trial_id, value, reply } => {
+                let result = (|| -> Result<()> {
+                    if !pending.contains_key(&trial_id) {
+                        return Err(Error::Hub(format!(
+                            "trial {trial_id} is not pending (unknown or already told)"
+                        )));
+                    }
+                    journal_append(
+                        &journal,
+                        JournalEvent::Tell { study: idx, trial_id, value },
+                    )?;
+                    let x = pending.remove(&trial_id).expect("checked above");
+                    study.observe(x, value);
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            Msg::ReplayAsk { trials, reply } => {
+                let result = (|| -> Result<()> {
+                    for (trial_id, x) in trials {
+                        // Reproduce the fit/warm-start schedule the live
+                        // ask drove, without re-running MSO; the recorded
+                        // suggestion is restored verbatim.
+                        study.sync_model_for_trial(trial_id)?;
+                        if x.len() != study.config().dim {
+                            return Err(Error::Hub(format!(
+                                "journal ask for trial {trial_id} has dim {} != {}",
+                                x.len(),
+                                study.config().dim
+                            )));
+                        }
+                        pending.insert(trial_id, x);
+                        next_id = next_id.max(trial_id + 1);
+                    }
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            Msg::ReplayTell { trial_id, value, reply } => {
+                let result = (|| -> Result<()> {
+                    let x = pending.remove(&trial_id).ok_or_else(|| {
+                        Error::Hub(format!(
+                            "journal tells trial {trial_id} that was never asked"
+                        ))
+                    })?;
+                    study.observe(x, value);
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            Msg::Snapshot { reply } => {
+                let _ = reply.send(StudySnapshot {
+                    name: name.clone(),
+                    seed,
+                    liar,
+                    tag: tag.clone(),
+                    config: study.config().clone(),
+                    trials: study.trials().to_vec(),
+                    pending: pending.iter().map(|(&k, v)| (k, v.clone())).collect(),
+                    next_trial_id: next_id,
+                    stats: study.stats.clone(),
+                    gp_params: study.gp_params(),
+                    best: study.best(),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::mso::MsoStrategy;
+
+    fn quick_cfg(dim: usize) -> StudyConfig {
+        StudyConfig {
+            dim,
+            bounds: vec![(-5.0, 5.0); dim],
+            n_trials: 20,
+            n_startup: 4,
+            restarts: 3,
+            strategy: MsoStrategy::Dbe,
+            ..StudyConfig::default()
+        }
+    }
+
+    fn sphere(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+
+    #[test]
+    fn create_validates_and_rejects_duplicates() {
+        let hub = StudyHub::in_memory();
+        let bad = StudySpec::new("b", StudyConfig { dim: 0, ..quick_cfg(2) }, 1);
+        assert!(matches!(hub.create_study(bad), Err(Error::Config(_))));
+
+        let id = hub.create_study(StudySpec::new("a", quick_cfg(2), 1)).unwrap();
+        assert_eq!(id.index(), 0);
+        let dup = hub.create_study(StudySpec::new("a", quick_cfg(2), 2));
+        assert!(matches!(dup, Err(Error::Hub(_))));
+        assert_eq!(hub.find_study("a"), Some(id));
+        assert_eq!(hub.find_study("zz"), None);
+        assert_eq!(hub.n_studies(), 1);
+        assert_eq!(hub.study_names(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn ask_tell_loop_completes_a_study() {
+        let hub = StudyHub::in_memory();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 3)).unwrap();
+        for _ in 0..10 {
+            let batch = hub.ask(id, 1).unwrap();
+            assert_eq!(batch.len(), 1);
+            for s in batch {
+                assert!(s.x.iter().all(|v| (-5.0..=5.0).contains(v)));
+                hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+            }
+        }
+        let snap = hub.snapshot(id).unwrap();
+        assert_eq!(snap.trials.len(), 10);
+        assert!(snap.pending.is_empty());
+        assert_eq!(snap.next_trial_id, 10);
+        assert!(snap.best.unwrap().value.is_finite());
+    }
+
+    #[test]
+    fn q_batch_ask_returns_distinct_pending_candidates() {
+        let hub = StudyHub::in_memory();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 5)).unwrap();
+        // Get past startup so the fantasy path engages.
+        for _ in 0..4 {
+            let s = hub.ask(id, 1).unwrap().remove(0);
+            hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        }
+        let batch = hub.ask(id, 3).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(
+            batch.iter().map(|s| s.trial_id).collect::<Vec<_>>(),
+            vec![4, 5, 6]
+        );
+        for (i, a) in batch.iter().enumerate() {
+            for b in &batch[i + 1..] {
+                assert_ne!(a.x, b.x, "liar fantasies must separate the batch");
+            }
+        }
+        let snap = hub.snapshot(id).unwrap();
+        assert_eq!(snap.pending.len(), 3);
+        // Candidate 1 fantasizes nothing, candidate 2 one point,
+        // candidate 3 two points.
+        assert_eq!(snap.stats.fantasy_appends, 3);
+        // Out-of-order tells.
+        hub.tell(id, 6, 1.0).unwrap();
+        hub.tell(id, 4, 2.0).unwrap();
+        hub.tell(id, 5, 3.0).unwrap();
+        let snap = hub.snapshot(id).unwrap();
+        assert!(snap.pending.is_empty());
+        assert_eq!(snap.trials.len(), 7);
+        // Completion order, not ask order.
+        assert_eq!(snap.trials[4].value, 1.0);
+        assert_eq!(snap.trials[5].value, 2.0);
+        assert_eq!(snap.trials[6].value, 3.0);
+    }
+
+    #[test]
+    fn tell_rejects_unknown_duplicate_and_nonfinite() {
+        let hub = StudyHub::in_memory();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 9)).unwrap();
+        let s = hub.ask(id, 1).unwrap().remove(0);
+        assert!(matches!(hub.tell(id, 99, 1.0), Err(Error::Hub(_))));
+        assert!(matches!(hub.tell(id, s.trial_id, f64::NAN), Err(Error::Hub(_))));
+        hub.tell(id, s.trial_id, 1.0).unwrap();
+        assert!(
+            matches!(hub.tell(id, s.trial_id, 1.0), Err(Error::Hub(_))),
+            "double tell must fail"
+        );
+        assert!(matches!(hub.ask(StudyId(7), 1), Err(Error::Hub(_))));
+        assert!(matches!(hub.ask(id, 0), Err(Error::Hub(_))));
+    }
+
+    #[test]
+    fn concurrent_studies_share_the_pool() {
+        let hub = Arc::new(
+            StudyHub::open(HubConfig {
+                journal: None,
+                pool_workers: 2,
+                service: ServiceConfig::default(),
+            })
+            .unwrap(),
+        );
+        let mut ids = Vec::new();
+        for s in 0..3 {
+            ids.push(
+                hub.create_study(StudySpec::new(format!("s{s}"), quick_cfg(2), s as u64))
+                    .unwrap(),
+            );
+        }
+        let mut joins = Vec::new();
+        for &id in &ids {
+            let hub = Arc::clone(&hub);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    let batch = hub.ask(id, 1).unwrap();
+                    for s in batch {
+                        hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = hub.pool_metrics().unwrap();
+        assert!(m.batches > 0, "model-based asks must route through the pool");
+        assert_eq!(m.failures, 0);
+        assert!(hub.pool_trips().unwrap() <= m.requests);
+        for &id in &ids {
+            assert_eq!(hub.snapshot(id).unwrap().trials.len(), 8);
+        }
+    }
+}

@@ -1,0 +1,413 @@
+//! The hub's shared acquisition-evaluation pool: the multi-tenant
+//! generalization of [`crate::coordinator::BatchService`].
+//!
+//! `BatchService` coalesces concurrent submissions into one oracle
+//! call — but it owns exactly one evaluator, so every submission must
+//! target the same model. A hub serves many studies whose GPs all
+//! differ, and two different posteriors cannot share one GEMM. The
+//! pool therefore coalesces **keyed** jobs: every submission carries
+//! its own evaluator (an [`OwnedGpEvaluator`] holding an
+//! `Arc<GpRegressor>` snapshot), a drain gathers whatever is queued
+//! across all tenant studies (same size/deadline microbatching
+//! discipline and the same [`Metrics`] counting rules as
+//! `BatchService`, via the shared [`ServiceConfig`] knobs), groups the
+//! drained jobs by evaluator identity, and dispatches ONE oracle call
+//! per distinct model — so same-study submissions (e.g. concurrent
+//! fantasy candidates, or Par-D-BE shards) merge into larger GEMMs
+//! while cross-study traffic shares the worker threads and amortizes
+//! the per-drain wakeup.
+//!
+//! Results are bitwise independent of how jobs get grouped: the
+//! batched GP posterior evaluates every query point independently
+//! (enforced by `chunked_parallel_eval_is_bitwise_identical_to_serial`
+//! in `batcheval/native.rs`), which is what lets the hub equivalence
+//! tests demand exact reproduction through the pool.
+
+use crate::batcheval::BatchAcqEvaluator;
+use crate::coordinator::{Metrics, ServiceConfig};
+use crate::error::{Error, Result};
+use crate::gp::{GpRegressor, LogEi};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+type Reply = Result<(Vec<f64>, Vec<Vec<f64>>)>;
+
+struct Job {
+    eval: Arc<dyn BatchAcqEvaluator + Send + Sync>,
+    points: Vec<Vec<f64>>,
+    reply: Sender<Reply>,
+}
+
+/// A batched −LogEI oracle that **owns** its GP snapshot, so it can be
+/// shipped to pool workers ([`crate::batcheval::NativeGpEvaluator`]
+/// borrows the GP and cannot leave the asking thread).
+pub struct OwnedGpEvaluator {
+    gp: Arc<GpRegressor>,
+}
+
+impl OwnedGpEvaluator {
+    pub fn new(gp: Arc<GpRegressor>) -> Self {
+        OwnedGpEvaluator { gp }
+    }
+}
+
+impl BatchAcqEvaluator for OwnedGpEvaluator {
+    fn dim(&self) -> usize {
+        self.gp.train_x()[0].len()
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        Ok(LogEi::new(&self.gp).eval_batch(xs))
+    }
+
+    fn name(&self) -> &str {
+        "owned-gp-logei"
+    }
+}
+
+/// Multi-tenant coalescing worker pool. One handle per hub; shared
+/// across every study actor via `Arc`.
+pub struct AcqPool {
+    tx: Mutex<Option<Sender<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Shared counters, same discipline as the coordinator services.
+    pub metrics: Arc<Metrics>,
+    /// Drain cycles (one per coalesced pickup). `metrics.requests −
+    /// trips` submissions rode along in someone else's drain.
+    trips: Arc<AtomicU64>,
+    n_workers: usize,
+}
+
+impl AcqPool {
+    /// Spawn `workers` threads (0 = one per available core) sharing one
+    /// job queue with the given microbatching knobs.
+    pub fn spawn(workers: usize, cfg: ServiceConfig) -> Arc<AcqPool> {
+        let n_workers = if workers == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let trips = Arc::new(AtomicU64::new(0));
+        let handles = (0..n_workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let metrics = Arc::clone(&metrics);
+                let trips = Arc::clone(&trips);
+                std::thread::spawn(move || worker_loop(&rx, cfg, &metrics, &trips))
+            })
+            .collect();
+        Arc::new(AcqPool {
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(handles),
+            metrics,
+            trips,
+            n_workers,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Coalesced drain cycles so far.
+    pub fn n_trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Submit one keyed batch and block for its answer.
+    pub fn submit(
+        &self,
+        eval: Arc<dyn BatchAcqEvaluator + Send + Sync>,
+        points: Vec<Vec<f64>>,
+    ) -> Reply {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        {
+            let guard =
+                self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let tx = guard
+                .as_ref()
+                .ok_or_else(|| Error::Hub("acquisition pool is shut down".into()))?;
+            tx.send(Job { eval, points, reply: reply_tx })
+                .map_err(|_| Error::Hub("acquisition pool workers are gone".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Hub("acquisition pool dropped the reply".into()))?
+    }
+}
+
+impl Drop for AcqPool {
+    fn drop(&mut self) {
+        // Disconnect the queue, then join: workers drain in-flight jobs
+        // (mpsc keeps yielding queued messages after disconnect) and
+        // exit on the first empty recv.
+        self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take();
+        let handles: Vec<_> = self
+            .workers
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker: pick up a coalesced batch of jobs (the queue mutex is held
+/// only during pickup — the coalescing window — never during oracle
+/// evaluation, so up to `n_workers` oracle calls run concurrently),
+/// group by evaluator identity, dispatch one oracle call per group.
+fn worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    cfg: ServiceConfig,
+    metrics: &Metrics,
+    trips: &AtomicU64,
+) {
+    loop {
+        let jobs = {
+            let rx = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let first = match rx.recv() {
+                Ok(j) => j,
+                Err(_) => return, // pool dropped, queue drained
+            };
+            let mut total = first.points.len();
+            let mut jobs = vec![first];
+            let deadline = Instant::now() + cfg.max_wait;
+            while total < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => {
+                        total += j.points.len();
+                        jobs.push(j);
+                    }
+                    Err(RecvTimeoutError::Timeout)
+                    | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            jobs
+        };
+        trips.fetch_add(1, Ordering::Relaxed);
+
+        // Group the drained jobs by evaluator identity (tenant model).
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            let key = Arc::as_ptr(&job.eval) as *const u8 as usize;
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((key, vec![i])),
+            }
+        }
+
+        let mut replies: Vec<Option<Reply>> = jobs.iter().map(|_| None).collect();
+        for (_, idxs) in &groups {
+            let all_points: Vec<Vec<f64>> = idxs
+                .iter()
+                .flat_map(|&i| jobs[i].points.iter().cloned())
+                .collect();
+            let t0 = Instant::now();
+            match jobs[idxs[0]].eval.eval_batch(&all_points) {
+                Ok((vals, grads)) => {
+                    metrics.record_batch(all_points.len(), t0.elapsed());
+                    let mut off = 0;
+                    for &i in idxs {
+                        let k = jobs[i].points.len();
+                        replies[i] = Some(Ok((
+                            vals[off..off + k].to_vec(),
+                            grads[off..off + k].to_vec(),
+                        )));
+                        off += k;
+                    }
+                }
+                Err(e) => {
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    let msg = e.to_string();
+                    for &i in idxs {
+                        replies[i] = Some(Err(Error::Hub(msg.clone())));
+                    }
+                }
+            }
+        }
+        for (job, reply) in jobs.iter().zip(replies) {
+            let _ = job.reply.send(reply.expect("every job grouped")); // receiver may be gone
+        }
+    }
+}
+
+/// [`BatchAcqEvaluator`] adapter a study actor hands to its MSO run:
+/// submissions go through the shared pool, keyed by this trial's GP
+/// snapshot.
+pub struct PooledEvaluator {
+    pool: Arc<AcqPool>,
+    eval: Arc<dyn BatchAcqEvaluator + Send + Sync>,
+    dim: usize,
+}
+
+impl PooledEvaluator {
+    pub fn new(pool: Arc<AcqPool>, gp: Arc<GpRegressor>) -> Self {
+        let dim = gp.train_x()[0].len();
+        PooledEvaluator { pool, eval: Arc::new(OwnedGpEvaluator::new(gp)), dim }
+    }
+}
+
+impl BatchAcqEvaluator for PooledEvaluator {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_batch(&self, xs: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+        self.pool.submit(Arc::clone(&self.eval), xs.to_vec())
+    }
+
+    fn name(&self) -> &str {
+        "hub-pooled-gp-logei"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batcheval::{NativeGpEvaluator, SyntheticEvaluator};
+    use crate::bbob::Rosenbrock;
+    use crate::gp::GpParams;
+    use crate::rng::Pcg64;
+    use std::time::Duration;
+
+    fn toy_gp(n: usize, d: usize, seed: u64) -> GpRegressor {
+        let mut rng = Pcg64::seeded(seed);
+        let x: Vec<Vec<f64>> = (0..n).map(|_| rng.uniform_vec(d, 0.0, 1.0)).collect();
+        let y: Vec<f64> =
+            x.iter().map(|p| p.iter().map(|v| (v - 0.4).powi(2)).sum()).collect();
+        GpRegressor::fit(x, &y, GpParams::default()).unwrap()
+    }
+
+    #[test]
+    fn pooled_eval_is_bitwise_identical_to_native() {
+        let gp = toy_gp(15, 2, 3);
+        let native = NativeGpEvaluator::new(&gp);
+        let pool = AcqPool::spawn(2, ServiceConfig::default());
+        let pooled = PooledEvaluator::new(Arc::clone(&pool), Arc::new(gp.clone()));
+
+        let mut rng = Pcg64::seeded(9);
+        let qs: Vec<Vec<f64>> = (0..11).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+        let (v0, g0) = native.eval_batch(&qs).unwrap();
+        let (v1, g1) = pooled.eval_batch(&qs).unwrap();
+        assert_eq!(v0, v1, "pool routing must not change values");
+        assert_eq!(g0, g1);
+        assert_eq!(pool.metrics.snapshot().points, 11);
+    }
+
+    #[test]
+    fn concurrent_tenants_get_their_own_answers() {
+        // Two different GPs hammered from many threads: coalescing may
+        // merge submissions into shared drains, but each reply must
+        // match that tenant's own model exactly.
+        let gps: Vec<Arc<GpRegressor>> =
+            (0..2).map(|s| Arc::new(toy_gp(12, 2, 40 + s))).collect();
+        let pool = AcqPool::spawn(
+            2,
+            ServiceConfig { max_batch: 64, max_wait: Duration::from_millis(1) },
+        );
+        let mut joins = Vec::new();
+        for t in 0..6usize {
+            let gp = Arc::clone(&gps[t % 2]);
+            let pool = Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let pooled = PooledEvaluator::new(pool, Arc::clone(&gp));
+                let reference = NativeGpEvaluator::new(&gp);
+                let mut rng = Pcg64::seeded(100 + t as u64);
+                for _ in 0..20 {
+                    let qs: Vec<Vec<f64>> =
+                        (0..3).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+                    let (v, g) = pooled.eval_batch(&qs).unwrap();
+                    let (vr, gr) = reference.eval_batch(&qs).unwrap();
+                    assert_eq!(v, vr, "tenant {t} got another tenant's answers");
+                    assert_eq!(g, gr);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = pool.metrics.snapshot();
+        assert_eq!(snap.points, 6 * 20 * 3);
+        assert_eq!(snap.requests, 6 * 20);
+        assert!(snap.failures == 0);
+        assert!(
+            pool.n_trips() <= snap.requests,
+            "drains must not exceed submissions"
+        );
+    }
+
+    #[test]
+    fn same_key_jobs_merge_into_one_oracle_batch() {
+        // Force two same-tenant jobs into one drain with a generous
+        // window; the worker must dispatch a single grouped oracle call.
+        let gp = Arc::new(toy_gp(10, 2, 7));
+        let pool = AcqPool::spawn(
+            1,
+            ServiceConfig { max_batch: 64, max_wait: Duration::from_millis(50) },
+        );
+        let eval: Arc<dyn BatchAcqEvaluator + Send + Sync> =
+            Arc::new(OwnedGpEvaluator::new(Arc::clone(&gp)));
+        let mut joins = Vec::new();
+        for t in 0..2 {
+            let pool = Arc::clone(&pool);
+            let eval = Arc::clone(&eval);
+            joins.push(std::thread::spawn(move || {
+                pool.submit(eval, vec![vec![0.1 + 0.2 * t as f64, 0.5]]).unwrap()
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = pool.metrics.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.points, 2);
+        // Both requests landed in one drain ⇒ one grouped batch. (The
+        // 50 ms window makes the race deterministic in practice; accept
+        // 2 if the scheduler split them, but never more.)
+        assert!(snap.batches <= 2);
+        assert!(pool.n_trips() <= 2);
+    }
+
+    #[test]
+    fn failed_oracle_reports_failure_not_batch() {
+        struct AlwaysFails;
+        impl BatchAcqEvaluator for AlwaysFails {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn eval_batch(&self, _: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+                Err(Error::Runtime("oracle down".into()))
+            }
+        }
+        let pool = AcqPool::spawn(1, ServiceConfig::default());
+        let err = pool.submit(Arc::new(AlwaysFails), vec![vec![0.0; 2]]);
+        assert!(matches!(err, Err(Error::Hub(_))));
+        let snap = pool.metrics.snapshot();
+        assert_eq!(snap.failures, 1);
+        assert_eq!(snap.batches, 0);
+        assert_eq!(snap.points, 0);
+    }
+
+    #[test]
+    fn shutdown_joins_workers_and_rejects_late_submissions() {
+        let pool = AcqPool::spawn(3, ServiceConfig::default());
+        assert_eq!(pool.n_workers(), 3);
+        let ev = SyntheticEvaluator::new(Box::new(Rosenbrock::new(2)));
+        let ev: Arc<dyn BatchAcqEvaluator + Send + Sync> = Arc::new(ev);
+        pool.submit(Arc::clone(&ev), vec![vec![0.5, 0.5]]).unwrap();
+        drop(pool); // Drop joins all workers; hanging here = regression.
+    }
+}

@@ -1,0 +1,182 @@
+//! Hub run scripts: a line-oriented protocol describing a multi-study
+//! serving workload for `dbe-bo hub`.
+//!
+//! ```text
+//! # one study per line; '#' starts a comment
+//! study name=hot  objective=rastrigin dim=5 trials=40 q=2 seed=7
+//! study name=cold objective=sphere    dim=3 trials=25 q=1 strategy=seq fit-every=4
+//! ```
+//!
+//! Every key is optional except `objective`/`dim` defaults exist too —
+//! unknown keys are rejected so a typo cannot silently fall back to a
+//! default. The CLI synthesizes an equivalent script from flags when
+//! `--script` is not given, so both paths share this parser.
+
+use super::{Liar, StudySpec};
+use crate::bbob::{self, Objective};
+use crate::bo::StudyConfig;
+use crate::error::{Error, Result};
+use crate::optim::mso::MsoStrategy;
+
+/// One study line: the spec plus the driving protocol (which objective
+/// to evaluate and how many candidates to request per ask).
+#[derive(Clone, Debug)]
+pub struct ScriptStudy {
+    pub spec: StudySpec,
+    /// BBOB objective name (see [`bbob::by_name`]).
+    pub objective: String,
+    /// Candidates per ask (constant-liar fantasy batch size).
+    pub q: usize,
+}
+
+/// Parse a hub script. Line numbers in errors are 1-based.
+pub fn parse_script(text: &str) -> Result<Vec<ScriptStudy>> {
+    let mut studies = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut tokens = line.split_whitespace();
+        match tokens.next() {
+            Some("study") => {}
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "hub script line {}: unknown directive '{other}'",
+                    lineno + 1
+                )));
+            }
+            None => continue,
+        }
+
+        let mut name = format!("s{}", studies.len());
+        let mut objective = "rastrigin".to_string();
+        let mut dim = 5usize;
+        let mut trials = 30usize;
+        let mut startup = 10usize;
+        let mut restarts = 10usize;
+        let mut q = 1usize;
+        let mut seed = 7000 + studies.len() as u64;
+        let mut strategy = MsoStrategy::Dbe;
+        let mut fit_every = 1usize;
+        let mut liar = Liar::Best;
+        let mut par_workers = 0usize;
+        let mut eval_workers = 1usize;
+
+        for tok in tokens {
+            let (key, value) = tok.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "hub script line {}: expected key=value, got '{tok}'",
+                    lineno + 1
+                ))
+            })?;
+            let bad = |what: &str| {
+                Error::Config(format!(
+                    "hub script line {}: bad {what} '{value}'",
+                    lineno + 1
+                ))
+            };
+            match key {
+                "name" => name = value.to_string(),
+                "objective" => objective = value.to_string(),
+                "dim" => dim = value.parse().map_err(|_| bad("dim"))?,
+                "trials" => trials = value.parse().map_err(|_| bad("trials"))?,
+                "startup" => startup = value.parse().map_err(|_| bad("startup"))?,
+                "restarts" => restarts = value.parse().map_err(|_| bad("restarts"))?,
+                "q" => q = value.parse().map_err(|_| bad("q"))?,
+                "seed" => seed = value.parse().map_err(|_| bad("seed"))?,
+                "strategy" => strategy = MsoStrategy::parse(value)?,
+                "fit-every" | "fit_every" => {
+                    fit_every = value.parse().map_err(|_| bad("fit-every"))?
+                }
+                "liar" => liar = Liar::parse(value)?,
+                "par-workers" | "par_workers" => {
+                    par_workers = value.parse().map_err(|_| bad("par-workers"))?
+                }
+                "eval-workers" | "eval_workers" => {
+                    eval_workers = value.parse().map_err(|_| bad("eval-workers"))?
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "hub script line {}: unknown key '{other}'",
+                        lineno + 1
+                    )));
+                }
+            }
+        }
+        if q == 0 {
+            return Err(Error::Config(format!(
+                "hub script line {}: q must be >= 1",
+                lineno + 1
+            )));
+        }
+
+        // Objective instances are seeded the same way `dbe-bo bo` seeds
+        // them, so a hub study and a plain study see the same function.
+        let bounds = bbob::by_name(&objective, dim, 1000 + dim as u64)?.bounds();
+        let config = StudyConfig {
+            dim,
+            bounds,
+            n_trials: trials,
+            n_startup: startup,
+            restarts,
+            strategy,
+            fit_every,
+            par_workers,
+            eval_workers,
+            ..StudyConfig::default()
+        };
+        config.validate()?;
+        studies.push(ScriptStudy {
+            spec: StudySpec { name, seed, liar, tag: objective.clone(), config },
+            objective,
+            q,
+        });
+    }
+    Ok(studies)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_multi_study_script_with_comments() {
+        let text = "\
+# serving workload
+study name=hot objective=rastrigin dim=3 trials=24 q=2 seed=5 fit-every=2
+study objective=sphere dim=2 strategy=seq liar=mean   # trailing comment
+
+";
+        let studies = parse_script(text).unwrap();
+        assert_eq!(studies.len(), 2);
+        assert_eq!(studies[0].spec.name, "hot");
+        assert_eq!(studies[0].q, 2);
+        assert_eq!(studies[0].spec.seed, 5);
+        assert_eq!(studies[0].spec.config.dim, 3);
+        assert_eq!(studies[0].spec.config.fit_every, 2);
+        assert_eq!(studies[0].spec.config.bounds.len(), 3);
+        assert_eq!(studies[0].spec.tag, "rastrigin");
+        // Defaults fill the second line.
+        assert_eq!(studies[1].spec.name, "s1");
+        assert_eq!(studies[1].q, 1);
+        assert_eq!(studies[1].spec.config.strategy, MsoStrategy::SeqOpt);
+        assert_eq!(studies[1].spec.liar, Liar::Mean);
+        assert_eq!(studies[1].spec.seed, 7001);
+    }
+
+    #[test]
+    fn rejects_typos_and_bad_values() {
+        assert!(parse_script("study dmi=3").is_err(), "unknown key must fail");
+        assert!(parse_script("study dim=three").is_err());
+        assert!(parse_script("launch dim=3").is_err(), "unknown directive");
+        assert!(parse_script("study q=0").is_err());
+        assert!(parse_script("study objective=nope").is_err());
+        assert!(parse_script("study dim").is_err(), "bare token must fail");
+    }
+
+    #[test]
+    fn empty_script_is_empty() {
+        assert!(parse_script("\n# nothing\n").unwrap().is_empty());
+    }
+}

@@ -14,7 +14,10 @@
 //!   thread-channel batching coordinator ([`coordinator`]) whose
 //!   [`coordinator::BatchService`] coalesces concurrent submissions —
 //!   including those of Par-D-BE's shard workers — into single oracle
-//!   calls.
+//!   calls, and a multi-tenant ask/tell serving layer ([`hub`]) that
+//!   hosts many concurrent studies with constant-liar q-batch
+//!   suggestion, a shared coalescing acquisition pool, and a JSONL
+//!   journal with bitwise-exact replay-on-open.
 //! * **Layer 2 (JAX, build-time)** — GP posterior + LogEI value/grad
 //!   batched over restarts, AOT-lowered to HLO text per shape bucket
 //!   (`python/compile/model.py`).
@@ -60,6 +63,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod gp;
+pub mod hub;
 pub mod linalg;
 pub mod optim;
 pub mod repro;

@@ -5,6 +5,7 @@
 //! dbe-bo bo    --objective rastrigin --dim 5 --strategy dbe [flags]
 //! dbe-bo mso   --objective rosenbrock --dim 5 --restarts 10 [flags]
 //! dbe-bo serve --objective rastrigin --dim 5 --workers 2 [flags]
+//! dbe-bo hub   --studies 4 --q 2 --journal hub.jsonl [flags]
 //! dbe-bo info
 //! ```
 
@@ -13,6 +14,7 @@ use dbe_bo::bo::{Study, StudyConfig};
 use dbe_bo::cli::Args;
 use dbe_bo::config::BenchProtocol;
 use dbe_bo::coordinator::{BatchService, Router, ServiceConfig};
+use dbe_bo::hub::{parse_script, HubConfig, Liar, ScriptStudy, StudyHub, StudySpec};
 use dbe_bo::optim::lbfgsb::LbfgsbOptions;
 use dbe_bo::optim::mso::{run_mso_shared, MsoConfig, MsoStrategy, ParDbe};
 use dbe_bo::repro::{fig_convergence, fig_hessian, table_bench, Solver};
@@ -39,6 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bo") => cmd_bo(args),
         Some("mso") => cmd_mso(args),
         Some("serve") => cmd_serve(args),
+        Some("hub") => cmd_hub(args),
         Some("info") => cmd_info(),
         _ => {
             print_usage();
@@ -56,6 +59,8 @@ fn print_usage() {
            dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe|par_dbe] [--trials N] [--fit-every K] [--seed S]\n\
            dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe|par_dbe] [--par-workers K]\n\
            dbe-bo serve --objective NAME --dim D [--workers K] [--studies M]\n\
+           dbe-bo hub   [--script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
+                        [--workers W] [--journal PATH] [--resume] [--liar best|worst|mean]\n\
            dbe-bo info\n\
          \n\
          Repro targets regenerate every figure/table of the paper; see EXPERIMENTS.md."
@@ -171,7 +176,7 @@ fn cmd_bo(args: &Args) -> Result<()> {
         cfg.n_trials,
         cfg.restarts
     );
-    let mut study = Study::new(cfg, seed);
+    let mut study = Study::try_new(cfg, seed)?;
     let t0 = std::time::Instant::now();
     let best = study.optimize(|x| objective.value(x));
     let wall = t0.elapsed();
@@ -298,7 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 strategy: MsoStrategy::Dbe,
                 ..StudyConfig::default()
             };
-            let mut study = Study::new(cfg, 7000 + s as u64);
+            let mut study = Study::try_new(cfg, 7000 + s as u64)?;
             // Objective evaluations go through the routed, coalescing
             // workers — the "expensive simulator behind a service"
             // deployment shape.
@@ -322,6 +327,157 @@ fn cmd_serve(args: &Args) -> Result<()> {
     drop(workers);
     for h in handles {
         let _ = h.join();
+    }
+    Ok(())
+}
+
+/// The multi-tenant serving hub: many ask/tell studies, constant-liar
+/// q-batch suggestion, a shared coalescing acquisition pool, and an
+/// optional JSONL journal with `--resume` replay.
+fn cmd_hub(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+
+    // Workload: an explicit script, or M synthesized identical studies.
+    let studies: Vec<ScriptStudy> = if args.has("script") {
+        let path = args.get_str("script", "");
+        parse_script(&std::fs::read_to_string(&path)?)?
+    } else {
+        let name = args.get_str("objective", "rastrigin");
+        let dim = args.get_usize("dim", 5)?;
+        let m = args.get_usize("studies", 4)?;
+        let seed = args.get_u64("seed", 7000)?;
+        let liar = Liar::parse(&args.get_str("liar", "best"))?;
+        let objective = bbob::by_name(&name, dim, 1000 + dim as u64)?;
+        (0..m)
+            .map(|s| -> Result<ScriptStudy> {
+                let config = StudyConfig {
+                    dim,
+                    bounds: objective.bounds(),
+                    n_trials: args.get_usize("trials", 30)?,
+                    n_startup: args.get_usize("startup", 10)?,
+                    restarts: args.get_usize("restarts", 10)?,
+                    strategy: MsoStrategy::parse(&args.get_str("strategy", "dbe"))?,
+                    fit_every: args.get_usize("fit-every", 1)?,
+                    ..StudyConfig::default()
+                };
+                Ok(ScriptStudy {
+                    spec: StudySpec {
+                        name: format!("s{s}"),
+                        seed: seed + s as u64,
+                        liar,
+                        tag: name.clone(),
+                        config,
+                    },
+                    objective: name.clone(),
+                    q: args.get_usize("q", 1)?.max(1),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    if studies.is_empty() {
+        return Err(Error::Config("hub workload has no studies".into()));
+    }
+
+    let journal = args.has("journal").then(|| {
+        std::path::PathBuf::from(args.get_str("journal", "results/hub.jsonl"))
+    });
+    let resume = args.has("resume");
+    if let Some(path) = &journal {
+        if path.exists() && !resume {
+            return Err(Error::Config(format!(
+                "journal {} already exists — pass --resume to continue it, or \
+                 remove it for a fresh run",
+                path.display()
+            )));
+        }
+    }
+    let hub_cfg = HubConfig {
+        journal,
+        pool_workers: args.get_usize("workers", 2)?,
+        service: ServiceConfig {
+            max_batch: args.get_usize("max-batch", 64)?,
+            max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 200)?),
+        },
+    };
+    println!(
+        "hub: {} studies, pool workers {}, journal {}",
+        studies.len(),
+        hub_cfg.pool_workers,
+        hub_cfg
+            .journal
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| "(none)".into()),
+    );
+    let replayed = hub_cfg.journal.as_ref().map(|p| p.exists()).unwrap_or(false);
+    let hub = Arc::new(StudyHub::open(hub_cfg)?);
+    if replayed {
+        println!("replayed {} journal events", hub.journal_events());
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for s in studies {
+        let hub = Arc::clone(&hub);
+        joins.push(std::thread::spawn(move || -> Result<(String, f64)> {
+            let ScriptStudy { spec, objective, q } = s;
+            let name = spec.name.clone();
+            let n_trials = spec.config.n_trials;
+            let dim = spec.config.dim;
+            let f = bbob::by_name(&objective, dim, 1000 + dim as u64)?;
+            let id = match hub.find_study(&name) {
+                Some(id) => id, // resumed from the journal
+                None => hub.create_study(spec)?,
+            };
+            let snap0 = hub.snapshot(id)?;
+            // A journaled study must not silently continue against a
+            // different objective — one GP mixing two functions would
+            // be meaningless.
+            if !snap0.tag.is_empty() && snap0.tag != objective {
+                return Err(Error::Config(format!(
+                    "study '{name}' was journaled for objective '{}' but this \
+                     run drives '{objective}' — refusing to mix",
+                    snap0.tag
+                )));
+            }
+            let mut done = snap0.trials.len();
+            // Finish trials a previous (crashed) run asked but never told.
+            for (trial_id, x) in snap0.pending {
+                hub.tell(id, trial_id, f.value(&x))?;
+                done += 1;
+            }
+            while done < n_trials {
+                let batch = hub.ask(id, q.min(n_trials - done))?;
+                for sug in batch {
+                    hub.tell(id, sug.trial_id, f.value(&sug.x))?;
+                    done += 1;
+                }
+            }
+            let snap = hub.snapshot(id)?;
+            let best = snap.best.map(|b| b.value).unwrap_or(f64::INFINITY);
+            println!(
+                "  {name}: best {best:.6} | {} trials | fits {} full + {} incremental | {} fantasy appends",
+                snap.trials.len(),
+                snap.stats.fit_full,
+                snap.stats.fit_incremental,
+                snap.stats.fantasy_appends,
+            );
+            Ok((name, best))
+        }));
+    }
+    let mut results = Vec::new();
+    for j in joins {
+        results.push(j.join().map_err(|_| Error::Hub("study driver panicked".into()))??);
+    }
+    println!("hub run done in {:.2?}: {} studies", t0.elapsed(), results.len());
+    if let Some(m) = hub.pool_metrics() {
+        let trips = hub.pool_trips().unwrap_or(0);
+        let mean_batch =
+            if m.batches > 0 { m.points as f64 / m.batches as f64 } else { 0.0 };
+        println!("pool: {m} | drains {trips} | mean batch {mean_batch:.2} points");
+    }
+    if hub.journal_events() > 0 {
+        println!("journal: {} events recorded", hub.journal_events());
     }
     Ok(())
 }

@@ -92,6 +92,18 @@ impl MsoStrategy {
         }
     }
 
+    /// Canonical CLI/journal token: the inverse of [`MsoStrategy::parse`]
+    /// (`parse(s.token()) == s` for every strategy).
+    pub fn token(self) -> &'static str {
+        match self {
+            MsoStrategy::SeqOpt => "seq",
+            MsoStrategy::Cbe => "cbe",
+            MsoStrategy::Dbe => "dbe",
+            MsoStrategy::CbeBlockDiag => "blockdiag",
+            MsoStrategy::ParDbe => "par_dbe",
+        }
+    }
+
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().replace('-', "_").as_str() {
             "seq" | "seq_opt" | "sequential" => MsoStrategy::SeqOpt,
@@ -376,6 +388,13 @@ mod tests {
         let x0 = starts(3, 3, 5);
         let res = run_mso(MsoStrategy::CbeBlockDiag, &ev, &x0, &cfg(3)).unwrap();
         assert!(res.best_f < 1e-5);
+    }
+
+    #[test]
+    fn token_is_parse_inverse() {
+        for strat in MsoStrategy::all_with_ablations() {
+            assert_eq!(MsoStrategy::parse(strat.token()).unwrap(), strat);
+        }
     }
 
     #[test]

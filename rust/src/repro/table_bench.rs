@@ -83,7 +83,7 @@ pub fn run(protocol: &BenchProtocol, objectives: &[String]) -> Result<Vec<CellRe
                         par_workers: protocol.par_workers,
                         eval_workers: 1,
                     };
-                    let mut study = Study::new(cfg, 9000 + seed);
+                    let mut study = Study::try_new(cfg, 9000 + seed)?;
                     let t0 = std::time::Instant::now();
                     let best = study.optimize(|x| objective.value(x));
                     runs.walls.push(t0.elapsed().as_secs_f64());

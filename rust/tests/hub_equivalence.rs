@@ -1,0 +1,285 @@
+//! StudyHub acceptance equivalences (ISSUE 5):
+//!
+//! 1. A single-study hub driven ask(q=1)/tell in order bitwise-
+//!    reproduces the blocking `Study::optimize` trajectory — same
+//!    trials, same suggestions, same `StudyStats` fit split — with the
+//!    shared acquisition pool both off and on (pool routing must be
+//!    invisible to the numbers).
+//! 2. Journal replay after a simulated crash reconstructs the study
+//!    state bitwise (history, pending set, fit split, warm-started GP
+//!    hyperparameters) and the next ask produces the identical
+//!    suggestion an uninterrupted hub would have produced.
+
+use dbe_bo::bo::{Study, StudyConfig};
+use dbe_bo::coordinator::ServiceConfig;
+use dbe_bo::hub::{HubConfig, StudyHub, StudySnapshot, StudySpec, Suggestion};
+use dbe_bo::optim::mso::MsoStrategy;
+
+fn quick_cfg(fit_every: usize) -> StudyConfig {
+    StudyConfig {
+        dim: 2,
+        bounds: vec![(-5.0, 5.0); 2],
+        n_trials: 40,
+        n_startup: 4,
+        restarts: 3,
+        strategy: MsoStrategy::Dbe,
+        fit_every,
+        ..StudyConfig::default()
+    }
+}
+
+fn bowl(x: &[f64]) -> f64 {
+    (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2)
+}
+
+fn assert_gp_params_bitwise(a: &StudySnapshot, b: &StudySnapshot) {
+    assert_eq!(a.gp_params.log_len.to_bits(), b.gp_params.log_len.to_bits());
+    assert_eq!(a.gp_params.log_sf2.to_bits(), b.gp_params.log_sf2.to_bits());
+    assert_eq!(a.gp_params.log_noise.to_bits(), b.gp_params.log_noise.to_bits());
+}
+
+#[test]
+fn hub_ask1_in_order_bitwise_reproduces_study_run() {
+    // fit_every = 2 exercises both the boundary full-fit path and the
+    // incremental refit_append path through the hub.
+    for pool_workers in [0, 2] {
+        let cfg = quick_cfg(2);
+        let mut study = Study::new(cfg.clone(), 42);
+        let n_trials = 12;
+        for _ in 0..n_trials {
+            let x = study.suggest().unwrap();
+            let y = bowl(&x);
+            study.observe(x, y);
+        }
+
+        let hub = StudyHub::open(HubConfig {
+            journal: None,
+            pool_workers,
+            service: ServiceConfig::default(),
+        })
+        .unwrap();
+        let id = hub.create_study(StudySpec::new("s", cfg, 42)).unwrap();
+        for _ in 0..n_trials {
+            let batch = hub.ask(id, 1).unwrap();
+            assert_eq!(batch.len(), 1);
+            let Suggestion { trial_id, x } = batch.into_iter().next().unwrap();
+            hub.tell(id, trial_id, bowl(&x)).unwrap();
+        }
+
+        let snap = hub.snapshot(id).unwrap();
+        assert_eq!(snap.trials.len(), study.trials().len());
+        for (i, (a, b)) in snap.trials.iter().zip(study.trials()).enumerate() {
+            assert_eq!(a.x, b.x, "pool={pool_workers}: trial {i} suggestion differs");
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        // The StudyStats fit split — the fit engine must have run the
+        // exact same schedule through the hub.
+        assert_eq!(snap.stats.fit_full, study.stats.fit_full);
+        assert_eq!(snap.stats.fit_incremental, study.stats.fit_incremental);
+        assert_eq!(snap.stats.fantasy_appends, 0, "q=1 in order never fantasizes");
+        assert_eq!(snap.stats.iters, study.stats.iters);
+        assert_eq!(snap.stats.n_batches, study.stats.n_batches);
+        assert_eq!(snap.stats.n_points, study.stats.n_points);
+        // Warm-started hyperparameter chain (fit-engine state) matches.
+        assert_eq!(snap.gp_params.log_len.to_bits(), study.gp_params().log_len.to_bits());
+        assert_eq!(snap.gp_params.log_sf2.to_bits(), study.gp_params().log_sf2.to_bits());
+        assert_eq!(
+            snap.gp_params.log_noise.to_bits(),
+            study.gp_params().log_noise.to_bits()
+        );
+        let hub_best = snap.best.unwrap();
+        let study_best = study.best().unwrap();
+        assert_eq!(hub_best.x, study_best.x);
+        assert_eq!(hub_best.value.to_bits(), study_best.value.to_bits());
+        assert_eq!(hub_best.trial, study_best.trial);
+    }
+}
+
+/// Drive `hub` and `twin` through the identical protocol, asserting
+/// every suggestion matches bitwise along the way.
+fn drive_in_lockstep(
+    hub: &StudyHub,
+    hub_id: dbe_bo::hub::StudyId,
+    twin: &StudyHub,
+    twin_id: dbe_bo::hub::StudyId,
+    asks: &[usize],
+    tell_reversed: bool,
+) {
+    for &q in asks {
+        let a = hub.ask(hub_id, q).unwrap();
+        let b = twin.ask(twin_id, q).unwrap();
+        assert_eq!(a.len(), b.len());
+        let mut batch: Vec<(u64, Vec<f64>)> = Vec::new();
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.trial_id, sb.trial_id);
+            assert_eq!(sa.x, sb.x, "journaled and twin suggestions must match");
+            batch.push((sa.trial_id, sa.x.clone()));
+        }
+        if tell_reversed {
+            batch.reverse();
+        }
+        for (trial_id, x) in batch {
+            let y = bowl(&x);
+            hub.tell(hub_id, trial_id, y).unwrap();
+            twin.tell(twin_id, trial_id, y).unwrap();
+        }
+    }
+}
+
+#[test]
+fn journal_replay_bitwise_resumes_after_simulated_crash() {
+    let path = std::env::temp_dir()
+        .join(format!("dbe_bo_hub_equiv_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let cfg = quick_cfg(2);
+    let spec = StudySpec::new("serving", cfg.clone(), 77);
+
+    // The uninterrupted reference: same protocol, no journal, no crash.
+    let twin = StudyHub::in_memory();
+    let twin_id = twin.create_study(spec.clone()).unwrap();
+
+    // The journaled hub that will "crash".
+    let crashed_pending;
+    {
+        let hub = StudyHub::open(HubConfig {
+            journal: Some(path.clone()),
+            pool_workers: 0,
+            service: ServiceConfig::default(),
+        })
+        .unwrap();
+        let id = hub.create_study(spec).unwrap();
+        // Startup + model-based phase, including an out-of-order-told
+        // q=2 batch (fantasy path + completion order ≠ ask order).
+        drive_in_lockstep(&hub, id, &twin, twin_id, &[1, 1, 1, 1, 2, 1, 2], true);
+        // One more ask that never gets told: pending at crash time.
+        let a = hub.ask(id, 1).unwrap();
+        let b = twin.ask(twin_id, 1).unwrap();
+        assert_eq!(a[0].x, b[0].x);
+        assert_eq!(a[0].trial_id, b[0].trial_id);
+        crashed_pending = (a[0].trial_id, a[0].x.clone());
+        // Drop without telling = the simulated crash.
+    }
+
+    // Reopen: replay must reconstruct everything bitwise.
+    let hub = StudyHub::open(HubConfig {
+        journal: Some(path.clone()),
+        pool_workers: 0,
+        service: ServiceConfig::default(),
+    })
+    .unwrap();
+    let id = hub.find_study("serving").expect("replayed study");
+    let snap = hub.snapshot(id).unwrap();
+    let twin_snap = twin.snapshot(twin_id).unwrap();
+
+    assert_eq!(snap.trials.len(), twin_snap.trials.len());
+    for (a, b) in snap.trials.iter().zip(&twin_snap.trials) {
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+    }
+    assert_eq!(snap.pending, twin_snap.pending, "pending set must survive the crash");
+    assert_eq!(snap.pending, vec![crashed_pending]);
+    assert_eq!(snap.next_trial_id, twin_snap.next_trial_id);
+    assert_eq!(snap.stats.fit_full, twin_snap.stats.fit_full, "replayed fit schedule");
+    assert_eq!(snap.stats.fit_incremental, twin_snap.stats.fit_incremental);
+    assert_gp_params_bitwise(&snap, &twin_snap);
+
+    // Resolve the crashed-pending trial on both, then the acceptance
+    // criterion: the next ask after the restart is bitwise identical to
+    // the uninterrupted hub's.
+    let (tid, x) = snap.pending[0].clone();
+    let y = bowl(&x);
+    hub.tell(id, tid, y).unwrap();
+    twin.tell(twin_id, tid, y).unwrap();
+    let next_replayed = hub.ask(id, 2).unwrap();
+    let next_twin = twin.ask(twin_id, 2).unwrap();
+    for (a, b) in next_replayed.iter().zip(&next_twin) {
+        assert_eq!(a.trial_id, b.trial_id);
+        assert_eq!(a.x, b.x, "post-restart suggestion must be bitwise identical");
+    }
+
+    // And a second restart on top of the extended journal still works.
+    drop(hub);
+    let hub = StudyHub::open(HubConfig {
+        journal: Some(path.clone()),
+        pool_workers: 0,
+        service: ServiceConfig::default(),
+    })
+    .unwrap();
+    let id = hub.find_study("serving").unwrap();
+    let snap2 = hub.snapshot(id).unwrap();
+    assert_eq!(
+        snap2.pending.len(),
+        2,
+        "second replay restores the untold post-restart batch"
+    );
+    assert_eq!(
+        snap2.pending,
+        next_replayed.iter().map(|s| (s.trial_id, s.x.clone())).collect::<Vec<_>>()
+    );
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn multi_study_journal_keeps_tenants_separate() {
+    let path = std::env::temp_dir()
+        .join(format!("dbe_bo_hub_multi_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    {
+        let hub = StudyHub::open(HubConfig {
+            journal: Some(path.clone()),
+            pool_workers: 0,
+            service: ServiceConfig::default(),
+        })
+        .unwrap();
+        let a = hub.create_study(StudySpec::new("a", quick_cfg(1), 1)).unwrap();
+        let b = hub.create_study(StudySpec::new("b", quick_cfg(3), 2)).unwrap();
+        // Interleave the two tenants' events in the journal.
+        for _ in 0..6 {
+            for &(id, _name) in &[(a, "a"), (b, "b")] {
+                let s = hub.ask(id, 1).unwrap().remove(0);
+                hub.tell(id, s.trial_id, bowl(&s.x)).unwrap();
+            }
+        }
+    }
+
+    let hub = StudyHub::open(HubConfig {
+        journal: Some(path.clone()),
+        pool_workers: 0,
+        service: ServiceConfig::default(),
+    })
+    .unwrap();
+    assert_eq!(hub.n_studies(), 2);
+    let mut next_asks = Vec::new();
+    for (name, fit_every, seed) in [("a", 1usize, 1u64), ("b", 3, 2)] {
+        let id = hub.find_study(name).unwrap();
+        let snap = hub.snapshot(id).unwrap();
+        assert_eq!(snap.trials.len(), 6, "tenant {name} lost trials in replay");
+        assert_eq!(snap.config.fit_every, fit_every);
+        assert_eq!(snap.seed, seed);
+        assert!(snap.pending.is_empty());
+        // Ask once post-replay; the suggestion goes into the journal.
+        let s = hub.ask(id, 1).unwrap().remove(0);
+        assert_eq!(s.trial_id, 6);
+        next_asks.push((name, (s.trial_id, s.x)));
+    }
+    drop(hub);
+
+    // Replay determinism across tenants: a second reopen restores each
+    // tenant's post-replay ask bitwise, as its pending trial.
+    let hub = StudyHub::open(HubConfig {
+        journal: Some(path.clone()),
+        pool_workers: 0,
+        service: ServiceConfig::default(),
+    })
+    .unwrap();
+    for (name, expected) in next_asks {
+        let id = hub.find_study(name).unwrap();
+        let snap = hub.snapshot(id).unwrap();
+        assert_eq!(snap.pending, vec![expected], "tenant {name} diverged on reopen");
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
