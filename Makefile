@@ -2,7 +2,7 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test lint docs bench bench-smoke bench-gp-fit artifacts
+.PHONY: build test lint docs bench bench-smoke bench-gp-fit serve-smoke artifacts
 
 build:
 	cargo build --release
@@ -29,6 +29,7 @@ bench:
 	cargo bench --bench par_dbe
 	cargo bench --bench gp_fit
 	cargo bench --bench hub_throughput
+	cargo bench --bench serve_throughput
 
 # Tiny-budget pass over every bench target so bench code can't rot
 # (mirrors CI's bench-smoke job).
@@ -40,6 +41,14 @@ bench-smoke:
 	cargo bench --bench par_dbe -- --smoke
 	cargo bench --bench gp_fit -- --smoke
 	cargo bench --bench hub_throughput -- --smoke
+	cargo bench --bench serve_throughput -- --smoke
+
+# The end-to-end serving smoke: loopback clients drive `dbe-bo serve`
+# over real TCP and emit results/BENCH_serve.json (asks/sec, ask-RTT
+# p50/p99). Mirrors CI's serve-smoke job; run without --smoke on a
+# quiet host for real numbers (EXPERIMENTS.md §E2E "Serve").
+serve-smoke:
+	cargo bench --bench serve_throughput -- --smoke
 
 # The fit-engine perf snapshot: emits results/BENCH_gp_fit.json
 # (EXPERIMENTS.md §Perf "GP fit"). Run this on a quiet host for real

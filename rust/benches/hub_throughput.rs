@@ -67,6 +67,7 @@ fn run_hub(
             journal: None,
             pool_workers: p.hub_workers.max(1),
             service: ServiceConfig::default(),
+            mailbox_cap: 0,
         })
         .unwrap(),
     );

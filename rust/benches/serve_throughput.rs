@@ -1,0 +1,235 @@
+//! Bench: `dbe-bo serve` loopback throughput (EXPERIMENTS.md §E2E
+//! "Serve").
+//!
+//! K closed-loop clients connect to an in-process server over real
+//! loopback TCP, each driving its own study: ask(q) → evaluate locally
+//! → tell, until the study completes. Each client measures the
+//! round-trip time of every `ask` (the tell-to-ask serving latency a
+//! remote optimizer user experiences); the bench reports asks/sec plus
+//! exact client-side p50/p99 from the pooled samples, next to the
+//! server's own request counters.
+//!
+//! Emits `results/BENCH_serve.json` (CI uploads the smoke-mode file to
+//! prove the plumbing; real numbers come from a quiet host).
+//!
+//! Run: `cargo bench --bench serve_throughput [-- --smoke] [-- flags]`.
+//! Flags ride through [`BenchProtocol`]: `--clients`, `--trials`,
+//! `--q`, `--hub-workers`, `--dims`, `--objectives`, `--out`.
+
+use dbe_bo::bbob::{self, Objective};
+use dbe_bo::bo::StudyConfig;
+use dbe_bo::cli::Args;
+use dbe_bo::config::BenchProtocol;
+use dbe_bo::coordinator::ServiceConfig;
+use dbe_bo::hub::{HubClient, HubConfig, ServeConfig, Server, StudyHub, StudySpec};
+use dbe_bo::optim::mso::MsoStrategy;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn study_cfg(dim: usize, bounds: Vec<(f64, f64)>, p: &BenchProtocol) -> StudyConfig {
+    StudyConfig {
+        dim,
+        bounds,
+        n_trials: p.trials,
+        n_startup: p.startup.min(p.trials),
+        restarts: p.restarts,
+        strategy: MsoStrategy::Dbe,
+        lbfgsb: p.lbfgsb,
+        fit_every: p.fit_every,
+        ..StudyConfig::default()
+    }
+}
+
+/// One closed-loop client: create, then ask/tell to completion.
+/// Returns (asks issued, per-ask RTTs in seconds, best value).
+fn drive_client(
+    addr: &str,
+    p: &BenchProtocol,
+    dim: usize,
+    objective: &str,
+    i: usize,
+) -> (u64, Vec<f64>, f64) {
+    let f = bbob::by_name(objective, dim, 1000 + dim as u64).unwrap();
+    let mut client = HubClient::connect(addr).expect("connect to loopback server");
+    let spec =
+        StudySpec::new(format!("s{i}"), study_cfg(dim, f.bounds(), p), 500 + i as u64);
+    let name = spec.name.clone();
+    let n_trials = spec.config.n_trials;
+    client.create(&spec).expect("create study over the wire");
+
+    let mut rtts = Vec::with_capacity(n_trials);
+    let mut asks = 0u64;
+    let mut done = 0usize;
+    while done < n_trials {
+        let t0 = Instant::now();
+        let batch = client.ask(&name, p.q.min(n_trials - done)).expect("ask");
+        rtts.push(t0.elapsed().as_secs_f64());
+        asks += 1;
+        for sug in batch {
+            client.tell(&name, sug.trial_id, f.value(&sug.x)).expect("tell");
+            done += 1;
+        }
+    }
+    let snap = client.snapshot(&name).expect("snapshot");
+    let best = snap
+        .field("best")
+        .and_then(|b| b.field("value"))
+        .and_then(dbe_bo::hub::json::Json::as_f64)
+        .expect("best value in snapshot");
+    (asks, rtts, best)
+}
+
+/// Exact quantile from a sorted sample (nearest-rank).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let smoke = args.has("smoke");
+    let mut p = BenchProtocol::from_args(&args).expect("bench flags");
+    if smoke {
+        p.trials = 8;
+        p.startup = 4;
+        p.restarts = 3;
+        p.dims = vec![2];
+        if !args.has("clients") {
+            p.clients = 2;
+        }
+    } else if !args.has("trials") {
+        p.trials = 25;
+    }
+    if !args.has("q") {
+        p.q = 2;
+    }
+    if p.hub_workers == 0 {
+        p.hub_workers = 2;
+    }
+    let dim = p.dims.first().copied().unwrap_or(2);
+    let objective = p
+        .objectives
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "rastrigin".to_string());
+
+    println!(
+        "# serve_throughput — {} loopback clients on {objective} D={dim}, {} trials, q={}, pool workers {}{}",
+        p.clients,
+        p.trials,
+        p.q,
+        p.hub_workers,
+        if smoke { " [SMOKE]" } else { "" }
+    );
+
+    // One serve worker per client: every connection is served
+    // concurrently, so the measurement is protocol + hub, not
+    // accept-queue artifacts.
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: p.clients,
+        ..ServeConfig::default()
+    })
+    .expect("bind loopback server");
+    let hub = Arc::new(
+        StudyHub::open(HubConfig {
+            journal: None,
+            pool_workers: p.hub_workers.max(1),
+            service: ServiceConfig::default(),
+            mailbox_cap: 64,
+        })
+        .unwrap(),
+    );
+    server.install_hub(Arc::clone(&hub));
+    let addr = server.local_addr().to_string();
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..p.clients {
+        let (addr, p, objective) = (addr.clone(), p.clone(), objective.clone());
+        joins.push(std::thread::spawn(move || {
+            drive_client(&addr, &p, dim, &objective, i)
+        }));
+    }
+    let mut asks = 0u64;
+    let mut rtts: Vec<f64> = Vec::new();
+    let mut bests = Vec::new();
+    for j in joins {
+        let (a, r, b) = j.join().expect("client thread");
+        asks += a;
+        rtts.extend(r);
+        bests.push(b);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Drain through the protocol itself, then collect server counters.
+    HubClient::connect(&addr).expect("connect").shutdown().expect("shutdown frame");
+    let sm = server.join();
+
+    rtts.sort_by(|a, b| a.partial_cmp(b).expect("finite rtts"));
+    let p50 = quantile(&rtts, 0.50);
+    let p99 = quantile(&rtts, 0.99);
+    let asks_per_sec = asks as f64 / wall;
+    let trials_per_sec = (p.clients * p.trials) as f64 / wall;
+
+    println!("clients done: {wall:.3}s  bests {bests:?}");
+    println!(
+        "-> {asks_per_sec:.1} asks/s ({trials_per_sec:.1} trials/s), ask RTT p50 {:.1}us p99 {:.1}us",
+        p50 * 1e6,
+        p99 * 1e6
+    );
+    println!("server: {sm}");
+    assert_eq!(sm.errors, 0, "a clean loopback run answers every frame ok");
+    assert_eq!(sm.asks, asks, "server counted every client ask");
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"serve_throughput\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"clients\": {clients},\n",
+            "  \"objective\": \"{objective}\",\n",
+            "  \"dim\": {dim},\n",
+            "  \"trials\": {trials},\n",
+            "  \"q\": {q},\n",
+            "  \"pool_workers\": {workers},\n",
+            "  \"wall_s\": {wall:.6},\n",
+            "  \"asks\": {asks},\n",
+            "  \"asks_per_sec\": {aps:.4},\n",
+            "  \"trials_per_sec\": {tps:.4},\n",
+            "  \"ask_p50_us\": {p50:.3},\n",
+            "  \"ask_p99_us\": {p99:.3},\n",
+            "  \"server_requests\": {sreq},\n",
+            "  \"server_tells\": {stell},\n",
+            "  \"server_busy\": {sbusy},\n",
+            "  \"server_p50_ns\": {sp50},\n",
+            "  \"server_p99_ns\": {sp99}\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        clients = p.clients,
+        objective = objective,
+        dim = dim,
+        trials = p.trials,
+        q = p.q,
+        workers = p.hub_workers,
+        wall = wall,
+        asks = asks,
+        aps = asks_per_sec,
+        tps = trials_per_sec,
+        p50 = p50 * 1e6,
+        p99 = p99 * 1e6,
+        sreq = sm.requests,
+        stell = sm.tells,
+        sbusy = sm.busy,
+        sp50 = sm.p50_ns,
+        sp99 = sm.p99_ns,
+    );
+    std::fs::create_dir_all(&p.out_dir).expect("create out dir");
+    let path = format!("{}/BENCH_serve.json", p.out_dir);
+    std::fs::write(&path, json).expect("write bench json");
+    println!("JSON written to {path}");
+}

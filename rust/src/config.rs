@@ -41,6 +41,8 @@ pub struct BenchProtocol {
     /// Worker threads of the hub's shared acquisition pool (0 = pool
     /// disabled, each study evaluates natively).
     pub hub_workers: usize,
+    /// Closed-loop loopback clients for the serve-throughput bench.
+    pub clients: usize,
 }
 
 impl Default for BenchProtocol {
@@ -72,6 +74,7 @@ impl Default for BenchProtocol {
             fit_every: 1,
             q: 1,
             hub_workers: 0,
+            clients: 4,
         }
     }
 }
@@ -80,7 +83,7 @@ impl BenchProtocol {
     /// Apply CLI overrides: `--trials`, `--seeds`, `--dims`,
     /// `--objectives`, `--restarts`, `--out`, `--fast`, `--paper`,
     /// `--with-par`, `--par-workers`, `--fit-every`, `--q`,
-    /// `--hub-workers`.
+    /// `--hub-workers`, `--clients`.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut p = BenchProtocol::default();
         if args.has("paper") {
@@ -102,6 +105,7 @@ impl BenchProtocol {
         p.fit_every = args.get_usize("fit-every", p.fit_every)?.max(1);
         p.q = args.get_usize("q", p.q)?.max(1);
         p.hub_workers = args.get_usize("hub-workers", p.hub_workers)?;
+        p.clients = args.get_usize("clients", p.clients)?.max(1);
         if args.has("objectives") {
             p.objectives = args
                 .get_str("objectives", "")

@@ -20,6 +20,10 @@ pub enum Error {
     /// Study-hub failure (unknown study/trial, journal corruption,
     /// replay mismatch).
     Hub(String),
+    /// Backpressure: a bounded per-study mailbox is at capacity. The
+    /// request was **not** enqueued; callers should retry later. The
+    /// serving tier maps this to the wire-level `busy` error frame.
+    Busy(String),
     /// I/O error.
     Io(std::io::Error),
 }
@@ -34,6 +38,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Hub(m) => write!(f, "hub error: {m}"),
+            Error::Busy(m) => write!(f, "busy: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -63,6 +68,7 @@ mod tests {
         assert!(Error::Config("x".into()).to_string().contains("config"));
         assert!(Error::Coordinator("x".into()).to_string().contains("coordinator"));
         assert!(Error::Hub("x".into()).to_string().contains("hub"));
+        assert!(Error::Busy("x".into()).to_string().contains("busy"));
     }
 
     #[test]

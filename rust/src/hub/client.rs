@@ -1,0 +1,112 @@
+//! Blocking client for `dbe-bo serve` — the calling side of
+//! [`super::proto`].
+//!
+//! One [`HubClient`] owns one TCP connection and issues one request at
+//! a time (write a frame, read the reply). Wire errors come back as
+//! typed [`Error`] variants: a `busy` frame surfaces as
+//! [`Error::Busy`] so callers can retry, everything else as
+//! [`Error::Hub`] carrying the server's code and message.
+
+use super::json::Json;
+use super::proto::{encode_request, suggestions_from_json, Request};
+use super::{StudySpec, Suggestion};
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// A connected `dbe-bo serve` client.
+pub struct HubClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl HubClient {
+    /// Connect to a serving hub, e.g. `127.0.0.1:7341`.
+    pub fn connect(addr: &str) -> Result<HubClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HubClient { reader, writer: stream, next_id: 0 })
+    }
+
+    /// Issue one request, await its reply, unwrap the ok-frame.
+    fn call(&mut self, req: &Request) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut line = encode_request(id, req).to_string().into_bytes();
+        line.push(b'\n');
+        self.writer.write_all(&line)?;
+
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 {
+            return Err(Error::Hub("server closed the connection".into()));
+        }
+        let frame = Json::parse(reply.trim_end_matches(['\n', '\r']))
+            .map_err(|e| Error::Hub(format!("unparseable reply frame: {e}")))?;
+        // One request in flight at a time, so the echoed id must match.
+        let echoed = frame.field("id")?;
+        if echoed != &Json::u64(id) {
+            return Err(Error::Hub(format!(
+                "reply id {echoed} does not match request id {id}"
+            )));
+        }
+        match frame.field("ok")? {
+            Json::Bool(true) => Ok(frame),
+            _ => {
+                let code = frame
+                    .get("error")
+                    .and_then(|c| c.as_str().ok().map(str::to_string))
+                    .unwrap_or_else(|| "internal".into());
+                let message = frame
+                    .get("message")
+                    .and_then(|m| m.as_str().ok().map(str::to_string))
+                    .unwrap_or_default();
+                if code == "busy" {
+                    Err(Error::Busy(message))
+                } else {
+                    Err(Error::Hub(format!("{code}: {message}")))
+                }
+            }
+        }
+    }
+
+    /// Register a study; returns the server-side study index.
+    pub fn create(&mut self, spec: &StudySpec) -> Result<usize> {
+        let frame = self.call(&Request::Create(Box::new(spec.clone())))?;
+        frame.field("study")?.as_usize()
+    }
+
+    /// Ask for `q` suggestions from the named study.
+    pub fn ask(&mut self, study: &str, q: usize) -> Result<Vec<Suggestion>> {
+        let frame = self.call(&Request::Ask { study: study.into(), q })?;
+        suggestions_from_json(frame.field("suggestions")?)
+    }
+
+    /// Report one trial's objective value.
+    pub fn tell(&mut self, study: &str, trial_id: u64, value: f64) -> Result<()> {
+        self.call(&Request::Tell { study: study.into(), trial_id, value })?;
+        Ok(())
+    }
+
+    /// Fetch the study's wire snapshot (see
+    /// [`super::proto::snapshot_to_json`] for the shape).
+    pub fn snapshot(&mut self, study: &str) -> Result<Json> {
+        let frame = self.call(&Request::Snapshot { study: study.into() })?;
+        Ok(frame.field("snapshot")?.clone())
+    }
+
+    /// Fetch server + pool metrics.
+    pub fn metrics(&mut self) -> Result<Json> {
+        let frame = self.call(&Request::Metrics)?;
+        Ok(frame.field("metrics")?.clone())
+    }
+
+    /// Ask the server to drain. Idempotent; the server answers this
+    /// frame (and any concurrent in-flight work) before closing.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(&Request::Shutdown)?;
+        Ok(())
+    }
+}

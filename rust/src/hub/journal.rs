@@ -37,43 +37,99 @@ pub enum JournalEvent {
     Tell { study: usize, trial_id: u64, value: f64 },
 }
 
+/// Flat field encoding of a [`StudySpec`] — the single codec for specs,
+/// shared by the journal's `create` event and the wire protocol's
+/// `create` request ([`super::proto`]), so a spec that crossed the
+/// network journals byte-identically to one created in process.
+pub fn spec_fields(spec: &StudySpec) -> Vec<(String, Json)> {
+    let c = &spec.config;
+    let bounds = Json::Arr(
+        c.bounds
+            .iter()
+            .map(|&(lo, hi)| Json::Arr(vec![Json::f64(lo), Json::f64(hi)]))
+            .collect(),
+    );
+    let lb = Json::Obj(vec![
+        ("memory".into(), Json::usize(c.lbfgsb.memory)),
+        ("pgtol".into(), Json::f64(c.lbfgsb.pgtol)),
+        ("ftol".into(), Json::f64(c.lbfgsb.ftol)),
+        ("max_iters".into(), Json::usize(c.lbfgsb.max_iters)),
+        ("max_evals".into(), Json::usize(c.lbfgsb.max_evals)),
+    ]);
+    vec![
+        ("name".into(), Json::Str(spec.name.clone())),
+        ("seed".into(), Json::u64(spec.seed)),
+        ("liar".into(), Json::Str(spec.liar.token().into())),
+        ("tag".into(), Json::Str(spec.tag.clone())),
+        ("dim".into(), Json::usize(c.dim)),
+        ("bounds".into(), bounds),
+        ("n_trials".into(), Json::usize(c.n_trials)),
+        ("n_startup".into(), Json::usize(c.n_startup)),
+        ("restarts".into(), Json::usize(c.restarts)),
+        ("strategy".into(), Json::Str(c.strategy.token().into())),
+        ("fit_every".into(), Json::usize(c.fit_every)),
+        ("par_workers".into(), Json::usize(c.par_workers)),
+        ("eval_workers".into(), Json::usize(c.eval_workers)),
+        ("lbfgsb".into(), lb),
+    ]
+}
+
+/// Decode the flat spec fields written by [`spec_fields`] from any
+/// object that embeds them (journal `create` line or wire `create`
+/// frame). Every field is required — a typo'd or truncated spec must
+/// fail, not half-default.
+pub fn spec_from_fields(j: &Json) -> Result<StudySpec> {
+    let lb = j.field("lbfgsb")?;
+    let bounds = j
+        .field("bounds")?
+        .as_arr()?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr()?;
+            if p.len() != 2 {
+                return Err(Error::Hub("bound is not a (lo, hi) pair".into()));
+            }
+            Ok((p[0].as_f64()?, p[1].as_f64()?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let config = StudyConfig {
+        dim: j.field("dim")?.as_usize()?,
+        bounds,
+        n_trials: j.field("n_trials")?.as_usize()?,
+        n_startup: j.field("n_startup")?.as_usize()?,
+        restarts: j.field("restarts")?.as_usize()?,
+        strategy: MsoStrategy::parse(j.field("strategy")?.as_str()?)?,
+        lbfgsb: LbfgsbOptions {
+            memory: lb.field("memory")?.as_usize()?,
+            pgtol: lb.field("pgtol")?.as_f64()?,
+            ftol: lb.field("ftol")?.as_f64()?,
+            max_iters: lb.field("max_iters")?.as_usize()?,
+            max_evals: lb.field("max_evals")?.as_usize()?,
+        },
+        fit_every: j.field("fit_every")?.as_usize()?,
+        par_workers: j.field("par_workers")?.as_usize()?,
+        eval_workers: j.field("eval_workers")?.as_usize()?,
+    };
+    Ok(StudySpec {
+        name: j.field("name")?.as_str()?.to_string(),
+        seed: j.field("seed")?.as_u64()?,
+        liar: Liar::parse(j.field("liar")?.as_str()?)?,
+        tag: j.field("tag")?.as_str()?.to_string(),
+        config,
+    })
+}
+
 impl JournalEvent {
     /// Encode as one JSON object (the journal line, sans newline).
     pub fn encode(&self) -> Json {
         match self {
             JournalEvent::Create { study, spec } => {
-                let c = &spec.config;
-                let bounds = Json::Arr(
-                    c.bounds
-                        .iter()
-                        .map(|&(lo, hi)| Json::Arr(vec![Json::f64(lo), Json::f64(hi)]))
-                        .collect(),
-                );
-                let lb = Json::Obj(vec![
-                    ("memory".into(), Json::usize(c.lbfgsb.memory)),
-                    ("pgtol".into(), Json::f64(c.lbfgsb.pgtol)),
-                    ("ftol".into(), Json::f64(c.lbfgsb.ftol)),
-                    ("max_iters".into(), Json::usize(c.lbfgsb.max_iters)),
-                    ("max_evals".into(), Json::usize(c.lbfgsb.max_evals)),
-                ]);
-                Json::Obj(vec![
+                let mut fields = vec![
                     ("ev".into(), Json::Str("create".into())),
                     ("study".into(), Json::usize(*study)),
-                    ("name".into(), Json::Str(spec.name.clone())),
-                    ("seed".into(), Json::u64(spec.seed)),
-                    ("liar".into(), Json::Str(spec.liar.token().into())),
-                    ("tag".into(), Json::Str(spec.tag.clone())),
-                    ("dim".into(), Json::usize(c.dim)),
-                    ("bounds".into(), bounds),
-                    ("n_trials".into(), Json::usize(c.n_trials)),
-                    ("n_startup".into(), Json::usize(c.n_startup)),
-                    ("restarts".into(), Json::usize(c.restarts)),
-                    ("strategy".into(), Json::Str(c.strategy.token().into())),
-                    ("fit_every".into(), Json::usize(c.fit_every)),
-                    ("par_workers".into(), Json::usize(c.par_workers)),
-                    ("eval_workers".into(), Json::usize(c.eval_workers)),
-                    ("lbfgsb".into(), lb),
-                ])
+                ];
+                fields.extend(spec_fields(spec));
+                Json::Obj(fields)
             }
             JournalEvent::Ask { study, trials } => {
                 let trials = Json::Arr(
@@ -108,49 +164,10 @@ impl JournalEvent {
     /// Decode one journal line.
     pub fn decode(j: &Json) -> Result<JournalEvent> {
         match j.field("ev")?.as_str()? {
-            "create" => {
-                let lb = j.field("lbfgsb")?;
-                let bounds = j
-                    .field("bounds")?
-                    .as_arr()?
-                    .iter()
-                    .map(|pair| {
-                        let p = pair.as_arr()?;
-                        if p.len() != 2 {
-                            return Err(Error::Hub("bound is not a (lo, hi) pair".into()));
-                        }
-                        Ok((p[0].as_f64()?, p[1].as_f64()?))
-                    })
-                    .collect::<Result<Vec<_>>>()?;
-                let config = StudyConfig {
-                    dim: j.field("dim")?.as_usize()?,
-                    bounds,
-                    n_trials: j.field("n_trials")?.as_usize()?,
-                    n_startup: j.field("n_startup")?.as_usize()?,
-                    restarts: j.field("restarts")?.as_usize()?,
-                    strategy: MsoStrategy::parse(j.field("strategy")?.as_str()?)?,
-                    lbfgsb: LbfgsbOptions {
-                        memory: lb.field("memory")?.as_usize()?,
-                        pgtol: lb.field("pgtol")?.as_f64()?,
-                        ftol: lb.field("ftol")?.as_f64()?,
-                        max_iters: lb.field("max_iters")?.as_usize()?,
-                        max_evals: lb.field("max_evals")?.as_usize()?,
-                    },
-                    fit_every: j.field("fit_every")?.as_usize()?,
-                    par_workers: j.field("par_workers")?.as_usize()?,
-                    eval_workers: j.field("eval_workers")?.as_usize()?,
-                };
-                Ok(JournalEvent::Create {
-                    study: j.field("study")?.as_usize()?,
-                    spec: StudySpec {
-                        name: j.field("name")?.as_str()?.to_string(),
-                        seed: j.field("seed")?.as_u64()?,
-                        liar: Liar::parse(j.field("liar")?.as_str()?)?,
-                        tag: j.field("tag")?.as_str()?.to_string(),
-                        config,
-                    },
-                })
-            }
+            "create" => Ok(JournalEvent::Create {
+                study: j.field("study")?.as_usize()?,
+                spec: spec_from_fields(j)?,
+            }),
             "ask" => {
                 let trials = j
                     .field("trials")?

@@ -1,15 +1,30 @@
-//! Minimal JSON for the hub journal (no `serde` offline).
+//! Minimal JSON for the hub journal **and the serving wire protocol**
+//! (no `serde` offline).
 //!
 //! Numbers are kept as their **raw source token** ([`Json::Num`] holds
 //! the string), so `u64` seeds and trial ids round-trip exactly even
 //! above 2⁵³, and `f64` payloads written with Rust's shortest
 //! round-trip `Display` re-parse bitwise. The parser accepts exactly
-//! the JSON subset the journal emits (objects, arrays, strings with
-//! escapes, numbers, booleans, null) and rejects trailing garbage —
-//! a malformed journal line must fail loudly, not half-parse.
+//! the JSON subset the journal and [`super::proto`] emit (objects,
+//! arrays, strings with escapes, numbers, booleans, null) and rejects
+//! trailing garbage — a malformed record must fail loudly, not
+//! half-parse.
+//!
+//! Because `dbe-bo serve` feeds this parser raw network bytes, it is
+//! hardened against adversarial input (`rust/tests/json_proptest.rs`):
+//! number tokens are validated against the strict JSON grammar (no
+//! bare `+`, no leading zeros, no dangling `.`/`e`), and nesting depth
+//! is capped at [`MAX_DEPTH`] so a `[[[[…` bomb returns a typed error
+//! instead of overflowing the stack.
 
 use crate::error::{Error, Result};
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. The journal and wire
+/// protocol nest at most ~5 levels; 64 leaves generous headroom while
+/// keeping recursion depth (and thus stack use) bounded on hostile
+/// input.
+pub const MAX_DEPTH: usize = 64;
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -51,7 +66,7 @@ impl Json {
     /// Required object field, typed error when missing.
     pub fn field(&self, key: &str) -> Result<&Json> {
         self.get(key)
-            .ok_or_else(|| Error::Hub(format!("journal record missing field '{key}'")))
+            .ok_or_else(|| Error::Hub(format!("record missing field '{key}'")))
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -91,16 +106,14 @@ impl Json {
     }
 
     /// Parse one complete JSON document; trailing non-whitespace is an
-    /// error (a truncated or glued journal line must not half-parse).
+    /// error (a truncated or glued record must not half-parse).
     pub fn parse(src: &str) -> Result<Json> {
         let bytes = src.as_bytes();
         let mut pos = 0;
-        let value = parse_value(bytes, &mut pos)?;
+        let value = parse_value(bytes, &mut pos, MAX_DEPTH)?;
         skip_ws(bytes, &mut pos);
         if pos != bytes.len() {
-            return Err(Error::Hub(format!(
-                "trailing garbage at byte {pos} of journal record"
-            )));
+            return Err(Error::Hub(format!("trailing garbage at byte {pos} of record")));
         }
         Ok(value)
     }
@@ -167,18 +180,23 @@ fn expect(bytes: &[u8], pos: &mut usize, byte: u8) -> Result<()> {
         Ok(())
     } else {
         Err(Error::Hub(format!(
-            "expected '{}' at byte {} of journal record",
+            "expected '{}' at byte {} of record",
             byte as char, *pos
         )))
     }
 }
 
-fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    if depth == 0 {
+        return Err(Error::Hub(format!(
+            "record nests deeper than {MAX_DEPTH} levels"
+        )));
+    }
     skip_ws(bytes, pos);
     match bytes.get(*pos) {
-        None => Err(Error::Hub("unexpected end of journal record".into())),
-        Some(b'{') => parse_obj(bytes, pos),
-        Some(b'[') => parse_arr(bytes, pos),
+        None => Err(Error::Hub("unexpected end of record".into())),
+        Some(b'{') => parse_obj(bytes, pos, depth),
+        Some(b'[') => parse_arr(bytes, pos, depth),
         Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
         Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
         Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
@@ -192,7 +210,7 @@ fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Js
         *pos += lit.len();
         Ok(value)
     } else {
-        Err(Error::Hub(format!("bad literal at byte {} of journal record", *pos)))
+        Err(Error::Hub(format!("bad literal at byte {} of record", *pos)))
     }
 }
 
@@ -206,11 +224,55 @@ fn parse_num(bytes: &[u8], pos: &mut usize) -> Result<Json> {
     let tok = std::str::from_utf8(&bytes[start..*pos])
         .expect("numeric bytes are ASCII")
         .to_string();
-    // Validate the token parses as a number at all.
-    if tok.parse::<f64>().is_err() {
+    // Strict JSON number grammar: Rust's f64::from_str is laxer than
+    // JSON (it accepts "+1", ".5", "1.", "01"); a network-facing codec
+    // must not be, or two parsers could disagree on one frame.
+    if !valid_number_token(tok.as_bytes()) {
         return Err(Error::Hub(format!("bad number token '{tok}'")));
     }
     Ok(Json::Num(tok))
+}
+
+/// Strict JSON number grammar:
+/// `-? (0 | [1-9][0-9]*) ('.' [0-9]+)? ([eE] [+-]? [0-9]+)?`.
+fn valid_number_token(tok: &[u8]) -> bool {
+    let mut i = 0;
+    if tok.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match tok.get(i) {
+        Some(b'0') => i += 1,
+        Some(b'1'..=b'9') => {
+            while matches!(tok.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if tok.get(i) == Some(&b'.') {
+        i += 1;
+        let frac_start = i;
+        while matches!(tok.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+        if i == frac_start {
+            return false;
+        }
+    }
+    if matches!(tok.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(tok.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        let exp_start = i;
+        while matches!(tok.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+        if i == exp_start {
+            return false;
+        }
+    }
+    i == tok.len()
 }
 
 fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
@@ -218,7 +280,7 @@ fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
     let mut out = String::new();
     loop {
         match bytes.get(*pos) {
-            None => return Err(Error::Hub("unterminated string in journal record".into())),
+            None => return Err(Error::Hub("unterminated string in record".into())),
             Some(b'"') => {
                 *pos += 1;
                 return Ok(out);
@@ -248,14 +310,14 @@ fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
                         );
                         *pos += 4;
                     }
-                    _ => return Err(Error::Hub("bad escape in journal record".into())),
+                    _ => return Err(Error::Hub("bad escape in record".into())),
                 }
                 *pos += 1;
             }
             Some(_) => {
                 // Consume one UTF-8 scalar (multi-byte sequences pass through).
                 let rest = std::str::from_utf8(&bytes[*pos..])
-                    .map_err(|_| Error::Hub("invalid UTF-8 in journal record".into()))?;
+                    .map_err(|_| Error::Hub("invalid UTF-8 in record".into()))?;
                 let c = rest.chars().next().expect("non-empty");
                 out.push(c);
                 *pos += c.len_utf8();
@@ -264,7 +326,7 @@ fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
     }
 }
 
-fn parse_arr(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+fn parse_arr(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
     expect(bytes, pos, b'[')?;
     let mut items = Vec::new();
     skip_ws(bytes, pos);
@@ -273,7 +335,7 @@ fn parse_arr(bytes: &[u8], pos: &mut usize) -> Result<Json> {
         return Ok(Json::Arr(items));
     }
     loop {
-        items.push(parse_value(bytes, pos)?);
+        items.push(parse_value(bytes, pos, depth - 1)?);
         skip_ws(bytes, pos);
         match bytes.get(*pos) {
             Some(b',') => *pos += 1,
@@ -286,7 +348,7 @@ fn parse_arr(bytes: &[u8], pos: &mut usize) -> Result<Json> {
     }
 }
 
-fn parse_obj(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+fn parse_obj(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
     expect(bytes, pos, b'{')?;
     let mut fields = Vec::new();
     skip_ws(bytes, pos);
@@ -299,7 +361,7 @@ fn parse_obj(bytes: &[u8], pos: &mut usize) -> Result<Json> {
         let key = parse_string(bytes, pos)?;
         skip_ws(bytes, pos);
         expect(bytes, pos, b':')?;
-        let value = parse_value(bytes, pos)?;
+        let value = parse_value(bytes, pos, depth - 1)?;
         fields.push((key, value));
         skip_ws(bytes, pos);
         match bytes.get(*pos) {

@@ -35,15 +35,29 @@
 //! suggestion after a restart is bitwise identical to the suggestion
 //! the un-crashed hub would have produced
 //! (`rust/tests/hub_equivalence.rs`).
+//!
+//! ## Serving: the wire
+//!
+//! [`serve`] exposes the whole hub over JSONL-over-TCP ([`proto`] is
+//! the frame codec, [`client`] the matching driver). With
+//! [`HubConfig::mailbox_cap`] set, each study's mailbox is bounded:
+//! excess requests get a typed [`Error::Busy`] instead of queueing
+//! without limit — the backpressure signal the serve tier forwards to
+//! remote clients as a `busy` error frame.
 
+pub mod client;
 pub mod json;
 pub mod journal;
 pub mod pool;
+pub mod proto;
 pub mod script;
+pub mod serve;
 
+pub use client::HubClient;
 pub use journal::{Journal, JournalEvent};
 pub use pool::{AcqPool, OwnedGpEvaluator, PooledEvaluator};
 pub use script::{parse_script, ScriptStudy};
+pub use serve::{ServeConfig, ServeMetricsSnapshot, Server};
 
 use crate::bo::{BestResult, Study, StudyConfig, StudyStats, Trial};
 use crate::coordinator::{MetricsSnapshot, ServiceConfig};
@@ -51,6 +65,7 @@ use crate::error::{Error, Result};
 use crate::gp::GpParams;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -184,6 +199,13 @@ pub struct HubConfig {
     pub pool_workers: usize,
     /// Microbatching knobs for the pool (coalescing window / batch cap).
     pub service: ServiceConfig,
+    /// Per-study mailbox bound: at most this many requests may be
+    /// queued-or-running on one study actor at a time; excess callers
+    /// get a typed [`Error::Busy`] immediately instead of queueing
+    /// unboundedly. `0` = unbounded (the in-process default; `dbe-bo
+    /// serve` sets a finite cap so a slow study sheds load at the wire
+    /// instead of accumulating every client's backlog).
+    pub mailbox_cap: usize,
 }
 
 enum Msg {
@@ -197,7 +219,38 @@ enum Msg {
 struct Actor {
     name: String,
     tx: Sender<Msg>,
+    /// Requests queued-or-running on this actor (mailbox occupancy).
+    inflight: Arc<AtomicUsize>,
     handle: Option<JoinHandle<()>>,
+}
+
+/// RAII mailbox slot: holds one unit of a study's `inflight` count for
+/// the life of a request (send → reply), releasing it on every exit
+/// path including reply-channel failure.
+struct MailboxPermit(Option<Arc<AtomicUsize>>);
+
+impl MailboxPermit {
+    fn acquire(inflight: &Arc<AtomicUsize>, cap: usize, id: StudyId) -> Result<Self> {
+        if cap == 0 {
+            return Ok(MailboxPermit(None));
+        }
+        let prev = inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= cap {
+            inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(Error::Busy(format!(
+                "{id} mailbox is full ({cap} requests in flight); retry later"
+            )));
+        }
+        Ok(MailboxPermit(Some(Arc::clone(inflight))))
+    }
+}
+
+impl Drop for MailboxPermit {
+    fn drop(&mut self) {
+        if let Some(c) = &self.0 {
+            c.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
 }
 
 /// The hub. `&self` methods are safe to call from many threads.
@@ -205,6 +258,7 @@ pub struct StudyHub {
     actors: Mutex<Vec<Actor>>,
     journal: Option<Arc<Mutex<Journal>>>,
     pool: Option<Arc<AcqPool>>,
+    mailbox_cap: usize,
 }
 
 impl StudyHub {
@@ -223,7 +277,12 @@ impl StudyHub {
             }
             None => (None, Vec::new()),
         };
-        let hub = StudyHub { actors: Mutex::new(Vec::new()), journal, pool };
+        let hub = StudyHub {
+            actors: Mutex::new(Vec::new()),
+            journal,
+            pool,
+            mailbox_cap: cfg.mailbox_cap,
+        };
         for ev in events {
             match ev {
                 JournalEvent::Create { study, spec } => {
@@ -283,7 +342,12 @@ impl StudyHub {
         let journal = self.journal.clone();
         let name = spec.name.clone();
         let handle = std::thread::spawn(move || actor_loop(idx, spec, pool, journal, rx));
-        actors.push(Actor { name, tx, handle: Some(handle) });
+        actors.push(Actor {
+            name,
+            tx,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            handle: Some(handle),
+        });
         Ok(StudyId(idx))
     }
 
@@ -354,18 +418,24 @@ impl StudyHub {
         id: StudyId,
         build: impl FnOnce(Sender<T>) -> Msg,
     ) -> Result<T> {
-        let tx = {
+        let (tx, permit) = {
             let actors =
                 self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             let actor = actors
                 .get(id.0)
                 .ok_or_else(|| Error::Hub(format!("unknown study {id}")))?;
-            actor.tx.clone()
+            // Acquire the mailbox slot before sending (not after), so a
+            // full mailbox rejects without ever enqueueing.
+            let permit = MailboxPermit::acquire(&actor.inflight, self.mailbox_cap, id)?;
+            (actor.tx.clone(), permit)
         };
         let (reply_tx, reply_rx) = channel();
         tx.send(build(reply_tx))
             .map_err(|_| Error::Hub(format!("{id} actor is gone")))?;
-        reply_rx.recv().map_err(|_| Error::Hub(format!("{id} actor died mid-request")))
+        let out =
+            reply_rx.recv().map_err(|_| Error::Hub(format!("{id} actor died mid-request")));
+        drop(permit); // slot held until the reply arrived
+        out
     }
 }
 
@@ -658,6 +728,7 @@ mod tests {
                 journal: None,
                 pool_workers: 2,
                 service: ServiceConfig::default(),
+                mailbox_cap: 0,
             })
             .unwrap(),
         );
@@ -690,5 +761,65 @@ mod tests {
         for &id in &ids {
             assert_eq!(hub.snapshot(id).unwrap().trials.len(), 8);
         }
+    }
+
+    #[test]
+    fn bounded_mailbox_rejects_with_busy() {
+        use std::sync::atomic::AtomicBool;
+
+        let hub = Arc::new(
+            StudyHub::open(HubConfig { mailbox_cap: 1, ..HubConfig::default() }).unwrap(),
+        );
+        // Heavier model-based asks (more MSO restarts) keep the single
+        // mailbox slot occupied long enough to observe contention.
+        let cfg = StudyConfig { restarts: 60, ..quick_cfg(2) };
+        let id = hub.create_study(StudySpec::new("s", cfg, 11)).unwrap();
+        // Past startup, so asks run the slow model-based path.
+        for _ in 0..4 {
+            let s = hub.ask(id, 1).unwrap().remove(0);
+            hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        }
+
+        let done = Arc::new(AtomicBool::new(false));
+        let asker = {
+            let (hub, done) = (Arc::clone(&hub), Arc::clone(&done));
+            std::thread::spawn(move || {
+                for _ in 0..5 {
+                    // Retry through our own Busy rejections: the prober
+                    // below competes for the same single slot.
+                    loop {
+                        match hub.ask(id, 1) {
+                            Ok(batch) => {
+                                let s = batch.into_iter().next().unwrap();
+                                hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+                                break;
+                            }
+                            Err(Error::Busy(_)) => continue,
+                            Err(e) => panic!("unexpected ask error: {e}"),
+                        }
+                    }
+                }
+                done.store(true, Ordering::Release);
+            })
+        };
+
+        // Probe with cheap invalid tells while the asker occupies the
+        // slot: Busy while a request is in flight, a plain Hub error
+        // ("not pending") when the slot is free.
+        let mut busy = 0u64;
+        while !done.load(Ordering::Acquire) {
+            match hub.tell(id, u64::MAX, 1.0) {
+                Err(Error::Busy(m)) => {
+                    busy += 1;
+                    assert!(m.contains("mailbox is full"), "typed busy message: {m}");
+                }
+                Err(Error::Hub(_)) => {}
+                other => panic!("probe tell must fail, got {other:?}"),
+            }
+        }
+        asker.join().unwrap();
+        assert!(busy > 0, "a full cap-1 mailbox must shed load as Error::Busy");
+        // The study itself is unharmed: the rejected probes never enqueued.
+        assert_eq!(hub.snapshot(id).unwrap().trials.len(), 9);
     }
 }

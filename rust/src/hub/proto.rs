@@ -1,0 +1,512 @@
+//! Wire protocol for `dbe-bo serve`: JSONL frames over TCP.
+//!
+//! One request = one JSON object on one `\n`-terminated line; one
+//! response = one JSON object on one line. Numbers travel as raw
+//! tokens through [`super::json`], so `u64` trial ids and `f64`
+//! payloads round-trip **bitwise** across the socket — the loopback
+//! equivalence test (`rust/tests/hub_equivalence.rs`) holds to the
+//! last bit because of this layer.
+//!
+//! ## Frame grammar
+//!
+//! Requests: `{"id": <any>, "op": "<method>", ...}` — `id` is an
+//! opaque client token echoed verbatim in the response (it may be any
+//! JSON value; the bundled [`super::client::HubClient`] uses a
+//! counter).
+//!
+//! | op         | request fields                          | ok-response fields |
+//! |------------|-----------------------------------------|--------------------|
+//! | `create`   | flat [`StudySpec`] fields (see [`super::journal::spec_fields`]) | `study` (index) |
+//! | `ask`      | `study` (name), `q` (optional, ≥1, default 1) | `suggestions`: `[{"id":u64,"x":[f64…]}…]` |
+//! | `tell`     | `study`, `trial` (u64), `value` (finite f64) | — |
+//! | `snapshot` | `study`                                 | `snapshot` object  |
+//! | `metrics`  | —                                       | `metrics` object   |
+//! | `shutdown` | —                                       | `draining`: true   |
+//!
+//! Success: `{"id":…,"ok":true,…}`. Failure:
+//! `{"id":…,"ok":false,"error":"<code>","message":"…"}` with `code`
+//! one of [`ErrorCode`]'s tokens. Per-request errors never close the
+//! connection; only an unrecoverable transport state (EOF, an
+//! oversized frame that cannot be resynchronized) does.
+
+use super::journal::{spec_fields, spec_from_fields};
+use super::json::Json;
+use super::{StudySnapshot, StudySpec, Suggestion};
+use crate::error::{Error, Result};
+
+/// Default cap on one frame's length in bytes (excluding the newline).
+/// Legitimate frames are tiny (a `create` for dim 50 is ~2 KiB); the
+/// cap exists so a hostile client cannot balloon server memory with an
+/// endless unterminated line.
+pub const MAX_FRAME_DEFAULT: usize = 1 << 20;
+
+/// Typed error codes carried in the `error` field of a failure frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not valid JSON (or not a JSON object).
+    Malformed,
+    /// The line exceeded the server's max frame length.
+    Oversized,
+    /// Structurally valid JSON, semantically bad request (unknown op,
+    /// missing field, bad arity such as `q=0` or a non-finite value).
+    BadRequest,
+    /// `study` names no study on this hub.
+    UnknownStudy,
+    /// `tell` for a trial id that is not pending (never asked, or
+    /// already told).
+    UnknownTrial,
+    /// The study's bounded mailbox is full; retry later.
+    Busy,
+    /// The hub is still replaying its journal; retry shortly.
+    Starting,
+    /// The server is draining after `shutdown` and accepts no new work.
+    ShuttingDown,
+    /// Unexpected server-side failure.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn token(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownStudy => "unknown_study",
+            ErrorCode::UnknownTrial => "unknown_trial",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Starting => "starting",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "malformed" => ErrorCode::Malformed,
+            "oversized" => ErrorCode::Oversized,
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_study" => ErrorCode::UnknownStudy,
+            "unknown_trial" => ErrorCode::UnknownTrial,
+            "busy" => ErrorCode::Busy,
+            "starting" => ErrorCode::Starting,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// A decoded request body.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Register a study (boxed: a spec is much larger than the others).
+    Create(Box<StudySpec>),
+    Ask { study: String, q: usize },
+    Tell { study: String, trial_id: u64, value: f64 },
+    Snapshot { study: String },
+    Metrics,
+    Shutdown,
+}
+
+/// A decoded request frame: the client's opaque `id` plus the body.
+#[derive(Clone, Debug)]
+pub struct RequestFrame {
+    /// Echoed verbatim in the response; `None` when the request had no
+    /// `id` field (the response then carries `"id":null`).
+    pub id: Option<Json>,
+    pub req: Request,
+}
+
+/// A request-level failure, ready to encode as an error frame.
+#[derive(Clone, Debug)]
+pub struct ProtoError {
+    pub id: Option<Json>,
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn new(id: Option<Json>, code: ErrorCode, message: impl Into<String>) -> Self {
+        ProtoError { id, code, message: message.into() }
+    }
+
+    /// Encode as the documented failure frame.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("id".into(), self.id.clone().unwrap_or(Json::Null)),
+            ("ok".into(), Json::Bool(false)),
+            ("error".into(), Json::Str(self.code.token().into())),
+            ("message".into(), Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// Decode one request line. Errors come back as a typed [`ProtoError`]
+/// (already carrying the request's `id` when it could be read), so the
+/// server can answer without tearing the connection down.
+pub fn decode_request(text: &str) -> std::result::Result<RequestFrame, ProtoError> {
+    let j = Json::parse(text)
+        .map_err(|e| ProtoError::new(None, ErrorCode::Malformed, e.to_string()))?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(ProtoError::new(
+            None,
+            ErrorCode::Malformed,
+            "request frame must be a JSON object",
+        ));
+    }
+    let id = j.get("id").cloned();
+    let bad = |msg: String| ProtoError::new(id.clone(), ErrorCode::BadRequest, msg);
+    let op = match j.get("op") {
+        Some(Json::Str(s)) => s.as_str(),
+        Some(_) => return Err(bad("'op' must be a string".into())),
+        None => return Err(bad("request missing 'op'".into())),
+    };
+    let study = |j: &Json| -> std::result::Result<String, ProtoError> {
+        match j.get("study") {
+            Some(Json::Str(s)) => Ok(s.clone()),
+            Some(_) => Err(bad("'study' must be a string (the study name)".into())),
+            None => Err(bad(format!("'{op}' requires a 'study' field"))),
+        }
+    };
+    let req = match op {
+        "create" => Request::Create(Box::new(
+            spec_from_fields(&j).map_err(|e| bad(format!("bad study spec: {e}")))?,
+        )),
+        "ask" => {
+            let q = match j.get("q") {
+                None => 1,
+                Some(v) => v.as_usize().map_err(|e| bad(e.to_string()))?,
+            };
+            if q == 0 {
+                return Err(bad("ask needs q >= 1".into()));
+            }
+            Request::Ask { study: study(&j)?, q }
+        }
+        "tell" => {
+            let trial_id = j
+                .field("trial")
+                .and_then(Json::as_u64)
+                .map_err(|e| bad(format!("bad 'trial': {e}")))?;
+            let value = j
+                .field("value")
+                .and_then(Json::as_f64)
+                .map_err(|e| bad(format!("bad 'value': {e}")))?;
+            if !value.is_finite() {
+                return Err(bad(format!("tell value {value} is not finite")));
+            }
+            Request::Tell { study: study(&j)?, trial_id, value }
+        }
+        "snapshot" => Request::Snapshot { study: study(&j)? },
+        "metrics" => Request::Metrics,
+        "shutdown" => Request::Shutdown,
+        other => return Err(bad(format!("unknown op '{other}'"))),
+    };
+    Ok(RequestFrame { id, req })
+}
+
+/// Encode a request frame (the client side of [`decode_request`]).
+pub fn encode_request(id: u64, req: &Request) -> Json {
+    let mut fields = vec![("id".into(), Json::u64(id))];
+    match req {
+        Request::Create(spec) => {
+            fields.push(("op".into(), Json::Str("create".into())));
+            fields.extend(spec_fields(spec));
+        }
+        Request::Ask { study, q } => {
+            fields.push(("op".into(), Json::Str("ask".into())));
+            fields.push(("study".into(), Json::Str(study.clone())));
+            fields.push(("q".into(), Json::usize(*q)));
+        }
+        Request::Tell { study, trial_id, value } => {
+            fields.push(("op".into(), Json::Str("tell".into())));
+            fields.push(("study".into(), Json::Str(study.clone())));
+            fields.push(("trial".into(), Json::u64(*trial_id)));
+            fields.push(("value".into(), Json::f64(*value)));
+        }
+        Request::Snapshot { study } => {
+            fields.push(("op".into(), Json::Str("snapshot".into())));
+            fields.push(("study".into(), Json::Str(study.clone())));
+        }
+        Request::Metrics => fields.push(("op".into(), Json::Str("metrics".into()))),
+        Request::Shutdown => fields.push(("op".into(), Json::Str("shutdown".into()))),
+    }
+    Json::Obj(fields)
+}
+
+/// Build a success frame: `{"id":…,"ok":true,<extra fields>}`.
+pub fn ok_response(id: Option<Json>, extra: Vec<(String, Json)>) -> Json {
+    let mut fields = vec![
+        ("id".into(), id.unwrap_or(Json::Null)),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    fields.extend(extra);
+    Json::Obj(fields)
+}
+
+/// Encode an ask batch: `[{"id":<u64>,"x":[f64…]}…]`.
+pub fn suggestions_to_json(batch: &[Suggestion]) -> Json {
+    Json::Arr(
+        batch
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("id".into(), Json::u64(s.trial_id)),
+                    ("x".into(), Json::Arr(s.x.iter().map(|&v| Json::f64(v)).collect())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Decode an ask batch produced by [`suggestions_to_json`].
+pub fn suggestions_from_json(j: &Json) -> Result<Vec<Suggestion>> {
+    j.as_arr()?
+        .iter()
+        .map(|s| {
+            let x = s
+                .field("x")?
+                .as_arr()?
+                .iter()
+                .map(Json::as_f64)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Suggestion { trial_id: s.field("id")?.as_u64()?, x })
+        })
+        .collect()
+}
+
+/// Wire encoding of a [`StudySnapshot`].
+///
+/// Only **deterministic** state crosses the wire: trials, pending set,
+/// ids, seeds, the GP warm-start chain, and the counting half of
+/// `StudyStats`. Wall-clock durations are deliberately omitted — the
+/// loopback equivalence test compares this encoding token-for-token
+/// against an in-process twin, and timings would differ on every run.
+pub fn snapshot_to_json(s: &StudySnapshot) -> Json {
+    let trials = Json::Arr(
+        s.trials
+            .iter()
+            .map(|t| {
+                Json::Obj(vec![
+                    ("x".into(), Json::Arr(t.x.iter().map(|&v| Json::f64(v)).collect())),
+                    ("value".into(), Json::f64(t.value)),
+                ])
+            })
+            .collect(),
+    );
+    let pending = Json::Arr(
+        s.pending
+            .iter()
+            .map(|(id, x)| {
+                Json::Obj(vec![
+                    ("id".into(), Json::u64(*id)),
+                    ("x".into(), Json::Arr(x.iter().map(|&v| Json::f64(v)).collect())),
+                ])
+            })
+            .collect(),
+    );
+    let best = match &s.best {
+        None => Json::Null,
+        Some(b) => Json::Obj(vec![
+            ("x".into(), Json::Arr(b.x.iter().map(|&v| Json::f64(v)).collect())),
+            ("value".into(), Json::f64(b.value)),
+            ("trial".into(), Json::usize(b.trial)),
+        ]),
+    };
+    let gp = Json::Obj(vec![
+        ("log_len".into(), Json::f64(s.gp_params.log_len)),
+        ("log_sf2".into(), Json::f64(s.gp_params.log_sf2)),
+        ("log_noise".into(), Json::f64(s.gp_params.log_noise)),
+    ]);
+    let stats = Json::Obj(vec![
+        ("fit_full".into(), Json::usize(s.stats.fit_full)),
+        ("fit_incremental".into(), Json::usize(s.stats.fit_incremental)),
+        ("fantasy_appends".into(), Json::usize(s.stats.fantasy_appends)),
+        ("n_batches".into(), Json::usize(s.stats.n_batches)),
+        ("n_points".into(), Json::usize(s.stats.n_points)),
+        (
+            "iters".into(),
+            Json::Arr(s.stats.iters.iter().map(|&i| Json::usize(i)).collect()),
+        ),
+    ]);
+    Json::Obj(vec![
+        ("name".into(), Json::Str(s.name.clone())),
+        ("seed".into(), Json::u64(s.seed)),
+        ("liar".into(), Json::Str(s.liar.token().into())),
+        ("tag".into(), Json::Str(s.tag.clone())),
+        ("trials".into(), trials),
+        ("pending".into(), pending),
+        ("next_trial".into(), Json::u64(s.next_trial_id)),
+        ("best".into(), best),
+        ("gp".into(), gp),
+        ("stats".into(), stats),
+    ])
+}
+
+/// Map a hub-layer error to the wire code for the op that raised it.
+///
+/// The hub reports every domain failure as [`Error::Hub`], so the op
+/// provides the disambiguation: a failed `tell` is an unknown/already-
+/// told trial, a failed `create` is a bad spec (duplicate name,
+/// invalid config). [`Error::Busy`] and [`Error::Config`] map
+/// uniformly.
+pub fn error_code_for(op: &Request, e: &Error) -> ErrorCode {
+    match e {
+        Error::Busy(_) => ErrorCode::Busy,
+        Error::Config(_) => ErrorCode::BadRequest,
+        Error::Hub(_) => match op {
+            Request::Create(_) => ErrorCode::BadRequest,
+            Request::Tell { .. } => ErrorCode::UnknownTrial,
+            _ => ErrorCode::Internal,
+        },
+        _ => ErrorCode::Internal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bo::StudyConfig;
+    use crate::optim::mso::MsoStrategy;
+
+    fn spec() -> StudySpec {
+        StudySpec::new(
+            "s0",
+            StudyConfig {
+                dim: 2,
+                bounds: vec![(-5.0, 5.0); 2],
+                n_trials: 30,
+                n_startup: 5,
+                restarts: 4,
+                strategy: MsoStrategy::Dbe,
+                fit_every: 2,
+                ..StudyConfig::default()
+            },
+            u64::MAX - 3,
+        )
+        .with_tag("rosenbrock")
+    }
+
+    #[test]
+    fn create_request_round_trips_the_spec() {
+        let line = encode_request(7, &Request::Create(Box::new(spec()))).to_string();
+        let frame = decode_request(&line).unwrap();
+        assert_eq!(frame.id, Some(Json::u64(7)));
+        match frame.req {
+            Request::Create(back) => {
+                assert_eq!(back.name, "s0");
+                assert_eq!(back.seed, u64::MAX - 3);
+                assert_eq!(back.tag, "rosenbrock");
+                assert_eq!(back.config.dim, 2);
+                assert_eq!(back.config.bounds, vec![(-5.0, 5.0); 2]);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ask_tell_snapshot_round_trip() {
+        let reqs = [
+            Request::Ask { study: "s".into(), q: 4 },
+            Request::Tell { study: "s".into(), trial_id: u64::MAX, value: -0.1 },
+            Request::Snapshot { study: "s".into() },
+            Request::Metrics,
+            Request::Shutdown,
+        ];
+        for (i, req) in reqs.iter().enumerate() {
+            let frame = decode_request(&encode_request(i as u64, req).to_string()).unwrap();
+            match (req, &frame.req) {
+                (Request::Ask { study: a, q: qa }, Request::Ask { study: b, q: qb }) => {
+                    assert_eq!((a, qa), (b, qb));
+                }
+                (
+                    Request::Tell { trial_id: ta, value: va, .. },
+                    Request::Tell { trial_id: tb, value: vb, .. },
+                ) => {
+                    assert_eq!(ta, tb);
+                    assert_eq!(va.to_bits(), vb.to_bits());
+                }
+                (Request::Snapshot { study: a }, Request::Snapshot { study: b }) => {
+                    assert_eq!(a, b);
+                }
+                (Request::Metrics, Request::Metrics) => {}
+                (Request::Shutdown, Request::Shutdown) => {}
+                (want, got) => panic!("{want:?} decoded as {got:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ask_defaults_q_to_one_and_rejects_zero() {
+        let frame =
+            decode_request("{\"id\":1,\"op\":\"ask\",\"study\":\"s\"}").unwrap();
+        assert!(matches!(frame.req, Request::Ask { q: 1, .. }));
+        let err = decode_request("{\"id\":1,\"op\":\"ask\",\"study\":\"s\",\"q\":0}")
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert_eq!(err.id, Some(Json::u64(1)));
+    }
+
+    #[test]
+    fn bad_frames_decode_to_typed_errors() {
+        // Malformed JSON: no id recoverable.
+        let e = decode_request("{\"id\":3,").unwrap_err();
+        assert_eq!(e.code, ErrorCode::Malformed);
+        assert!(e.id.is_none());
+        // Non-object.
+        assert_eq!(decode_request("[1,2]").unwrap_err().code, ErrorCode::Malformed);
+        // Missing / unknown op keep the id for the reply.
+        let e = decode_request("{\"id\":9}").unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, Some(Json::u64(9)));
+        let e = decode_request("{\"id\":9,\"op\":\"evolve\"}").unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        // Non-finite tell value (1e999 parses to +inf in Rust).
+        let e = decode_request(
+            "{\"id\":2,\"op\":\"tell\",\"study\":\"s\",\"trial\":0,\"value\":1e999}",
+        )
+        .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        // The error frame itself is well-formed JSON with ok:false.
+        let j = e.to_json();
+        assert_eq!(j.field("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(j.field("error").unwrap().as_str().unwrap(), "bad_request");
+    }
+
+    #[test]
+    fn suggestions_round_trip_bitwise() {
+        let batch = vec![
+            Suggestion { trial_id: 0, x: vec![0.1, -2.5] },
+            Suggestion { trial_id: u64::MAX, x: vec![1e-300] },
+        ];
+        let back =
+            suggestions_from_json(&Json::parse(&suggestions_to_json(&batch).to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in batch.iter().zip(&back) {
+            assert_eq!(a.trial_id, b.trial_id);
+            assert_eq!(a.x.len(), b.x.len());
+            for (xa, xb) in a.x.iter().zip(&b.x) {
+                assert_eq!(xa.to_bits(), xb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn error_code_tokens_round_trip() {
+        for code in [
+            ErrorCode::Malformed,
+            ErrorCode::Oversized,
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownStudy,
+            ErrorCode::UnknownTrial,
+            ErrorCode::Busy,
+            ErrorCode::Starting,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.token()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+    }
+}

@@ -1,0 +1,619 @@
+//! `dbe-bo serve`: the TCP front-end over [`StudyHub`].
+//!
+//! N worker threads share one non-blocking [`TcpListener`]; each
+//! accepted connection is served to completion by the worker that
+//! accepted it (requests on one connection are answered in order —
+//! pipelining works, interleaving across connections comes from
+//! multiple workers). Frames are JSONL ([`super::proto`]); request-
+//! level failures answer with a typed error frame and keep the
+//! connection alive — only EOF, a transport error, or drain closes it.
+//!
+//! ## Startup, backpressure, drain
+//!
+//! * **Startup**: [`Server::bind`] owns the port *before* the hub
+//!   exists; until [`Server::install_hub`] is called (i.e. while a
+//!   journal is replaying), study ops answer a typed `starting` frame —
+//!   a client can never observe a half-replayed study
+//!   (`rust/tests/serve_protocol.rs`).
+//! * **Backpressure**: the hub's bounded mailboxes surface
+//!   [`Error::Busy`](crate::error::Error::Busy) which maps to a `busy`
+//!   frame; the request was never enqueued, the client retries.
+//! * **Drain**: a `shutdown` frame (or [`Server::shutdown`]) stops
+//!   accepting, answers requests already in flight, then answers every
+//!   later request with `shutting_down` and closes. The journal needs
+//!   no extra flush — every append was flushed before its reply.
+//!
+//! Request counts and a power-of-two latency histogram sit next to the
+//! pool's coalescing metrics in the `metrics` op.
+
+use super::proto::{
+    decode_request, ok_response, snapshot_to_json, suggestions_to_json, ErrorCode,
+    ProtoError, Request, RequestFrame, MAX_FRAME_DEFAULT,
+};
+use super::json::Json;
+use super::StudyHub;
+use crate::error::Result;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7341` (port 0 = ephemeral).
+    pub addr: String,
+    /// Acceptor/worker threads; each serves one connection at a time.
+    pub workers: usize,
+    /// Per-frame byte cap (excluding the newline); see
+    /// [`MAX_FRAME_DEFAULT`].
+    pub max_frame: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { addr: "127.0.0.1:7341".into(), workers: 4, max_frame: MAX_FRAME_DEFAULT }
+    }
+}
+
+/// Power-of-two latency histogram: bucket `i` counts requests whose
+/// handling took `[2^i, 2^(i+1))` ns. Lock-free, fixed memory, and
+/// quantiles come out with ≤ 2× relative error — plenty for p50/p99
+/// serving dashboards.
+struct LatencyHist {
+    buckets: [AtomicU64; 64],
+}
+
+impl LatencyHist {
+    fn new() -> Self {
+        LatencyHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn record(&self, d: Duration) {
+        let ns = (d.as_nanos().min(u64::MAX as u128) as u64).max(1);
+        let idx = 63 - ns.leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate `q`-quantile in nanoseconds (bucket midpoint).
+    fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return (1u64 << i) + ((1u64 << i) >> 1);
+            }
+        }
+        unreachable!("cumulative count reaches total")
+    }
+}
+
+/// Serving-tier request counters (all relaxed atomics).
+struct ServeMetrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    busy: AtomicU64,
+    creates: AtomicU64,
+    asks: AtomicU64,
+    tells: AtomicU64,
+    snapshots: AtomicU64,
+    metrics_calls: AtomicU64,
+    shutdowns: AtomicU64,
+    latency: LatencyHist,
+}
+
+impl ServeMetrics {
+    fn new() -> Self {
+        ServeMetrics {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            creates: AtomicU64::new(0),
+            asks: AtomicU64::new(0),
+            tells: AtomicU64::new(0),
+            snapshots: AtomicU64::new(0),
+            metrics_calls: AtomicU64::new(0),
+            shutdowns: AtomicU64::new(0),
+            latency: LatencyHist::new(),
+        }
+    }
+
+    fn snapshot(&self) -> ServeMetricsSnapshot {
+        ServeMetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            creates: self.creates.load(Ordering::Relaxed),
+            asks: self.asks.load(Ordering::Relaxed),
+            tells: self.tells.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            metrics_calls: self.metrics_calls.load(Ordering::Relaxed),
+            shutdowns: self.shutdowns.load(Ordering::Relaxed),
+            p50_ns: self.latency.quantile(0.50),
+            p99_ns: self.latency.quantile(0.99),
+        }
+    }
+}
+
+/// Point-in-time copy of the serving counters.
+#[derive(Clone, Debug)]
+pub struct ServeMetricsSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    /// Requests shed by a full study mailbox (subset of `errors`).
+    pub busy: u64,
+    pub creates: u64,
+    pub asks: u64,
+    pub tells: u64,
+    pub snapshots: u64,
+    pub metrics_calls: u64,
+    pub shutdowns: u64,
+    /// Approximate request-handling latency quantiles (nanoseconds).
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl std::fmt::Display for ServeMetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} errors={} busy={} asks={} tells={} p50={:.1}us p99={:.1}us",
+            self.requests,
+            self.errors,
+            self.busy,
+            self.asks,
+            self.tells,
+            self.p50_ns as f64 / 1e3,
+            self.p99_ns as f64 / 1e3,
+        )
+    }
+}
+
+/// State shared by every worker thread.
+struct Shared {
+    /// `None` until the hub finishes journal replay
+    /// ([`Server::install_hub`]); study ops answer `starting` meanwhile.
+    hub: RwLock<Option<Arc<StudyHub>>>,
+    draining: AtomicBool,
+    max_frame: usize,
+    metrics: ServeMetrics,
+}
+
+/// The running server: N worker threads behind one listener.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind the listener and spawn the workers. The hub is installed
+    /// separately ([`Server::install_hub`]) so the port can be owned
+    /// *before* (possibly long) journal replay begins — clients that
+    /// connect early get typed `starting` frames instead of connection
+    /// refusals or access to half-replayed state.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            hub: RwLock::new(None),
+            draining: AtomicBool::new(false),
+            max_frame: cfg.max_frame,
+            metrics: ServeMetrics::new(),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for w in 0..cfg.workers.max(1) {
+            let listener = listener.try_clone()?;
+            let shared = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dbe-serve-{w}"))
+                    .spawn(move || accept_loop(listener, shared))
+                    .expect("spawn serve worker"),
+            );
+        }
+        Ok(Server { shared, workers, addr })
+    }
+
+    /// Make the (fully replayed) hub visible to the workers.
+    pub fn install_hub(&self, hub: Arc<StudyHub>) {
+        *self.shared.hub.write().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            Some(hub);
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether a drain has been requested (by frame or by handle).
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::Acquire)
+    }
+
+    /// Request a drain from the hosting process (same effect as a
+    /// client `shutdown` frame).
+    pub fn shutdown(&self) {
+        self.shared.draining.store(true, Ordering::Release);
+    }
+
+    /// Block until every worker has drained, then return the final
+    /// serving metrics.
+    pub fn join(mut self) -> ServeMetricsSnapshot {
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.draining.store(true, Ordering::Release);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => serve_conn(stream, &shared),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(1)),
+        }
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, frame: &Json) -> std::io::Result<()> {
+    let mut line = frame.to_string().into_bytes();
+    line.push(b'\n');
+    stream.write_all(&line)
+}
+
+/// Serve one connection until EOF, transport error, or drain.
+fn serve_conn(mut stream: TcpStream, shared: &Shared) {
+    // Accepted sockets can inherit the listener's non-blocking mode on
+    // some platforms; force blocking + a short read timeout so the
+    // loop both waits efficiently and notices a drain promptly.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+    let _ = stream.set_nodelay(true);
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // True while discarding the remainder of an oversized line we have
+    // already answered (the only way to resynchronize frame boundaries).
+    let mut skipping = false;
+
+    loop {
+        while let Some(nl) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=nl).collect();
+            if skipping {
+                skipping = false; // the oversized line finally ended
+                continue;
+            }
+            let mut line = &line[..line.len() - 1];
+            if line.last() == Some(&b'\r') {
+                line = &line[..line.len() - 1];
+            }
+            if line.is_empty() {
+                continue; // tolerate blank keep-alive lines
+            }
+            let resp = if line.len() > shared.max_frame {
+                shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                ProtoError::new(
+                    None,
+                    ErrorCode::Oversized,
+                    format!(
+                        "frame of {} bytes exceeds the {}-byte limit",
+                        line.len(),
+                        shared.max_frame
+                    ),
+                )
+                .to_json()
+            } else {
+                match std::str::from_utf8(line) {
+                    Ok(text) => handle_line(text, shared),
+                    Err(_) => {
+                        shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        ProtoError::new(
+                            None,
+                            ErrorCode::Malformed,
+                            "frame is not valid UTF-8",
+                        )
+                        .to_json()
+                    }
+                }
+            };
+            if write_frame(&mut stream, &resp).is_err() {
+                return;
+            }
+        }
+
+        // No complete line buffered. An over-long unterminated line is
+        // rejected *now* — waiting for its newline would let a hostile
+        // client grow the buffer without bound.
+        if !skipping && buf.len() > shared.max_frame {
+            buf.clear();
+            skipping = true;
+            shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let resp = ProtoError::new(
+                None,
+                ErrorCode::Oversized,
+                format!("unterminated frame exceeds the {}-byte limit", shared.max_frame),
+            )
+            .to_json();
+            if write_frame(&mut stream, &resp).is_err() {
+                return;
+            }
+        }
+
+        // Draining and nothing buffered: every in-flight request has
+        // been answered, hang up now rather than waiting out the
+        // timeout.
+        if shared.draining.load(Ordering::Acquire) && buf.is_empty() {
+            return;
+        }
+
+        match stream.read(&mut chunk) {
+            // EOF. Anything left in `buf` is a torn (newline-less) tail
+            // the client never finished — drop it silently, exactly as
+            // the journal drops a torn final line.
+            Ok(0) => return,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                // Idle tick: a draining server hangs up once nothing is
+                // buffered; in-flight bytes still get answered above.
+                if shared.draining.load(Ordering::Acquire) && buf.is_empty() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Handle one complete frame: decode, dispatch, meter.
+fn handle_line(text: &str, shared: &Shared) -> Json {
+    let t0 = Instant::now();
+    shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let resp = match decode_request(text) {
+        Err(pe) => {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            pe.to_json()
+        }
+        Ok(frame) => dispatch(frame, shared),
+    };
+    shared.metrics.latency.record(t0.elapsed());
+    resp
+}
+
+fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
+    let RequestFrame { id, req } = frame;
+    let m = &shared.metrics;
+
+    // Drain gate: `shutdown` stays idempotent and `metrics` keeps
+    // answering (so an operator can watch the drain), everything else
+    // is refused with a typed frame.
+    if shared.draining.load(Ordering::Acquire) {
+        match req {
+            Request::Shutdown => {
+                m.shutdowns.fetch_add(1, Ordering::Relaxed);
+                return ok_response(id, vec![("draining".into(), Json::Bool(true))]);
+            }
+            Request::Metrics => {}
+            _ => {
+                m.errors.fetch_add(1, Ordering::Relaxed);
+                return ProtoError::new(
+                    id,
+                    ErrorCode::ShuttingDown,
+                    "server is draining and accepts no new work",
+                )
+                .to_json();
+            }
+        }
+    }
+
+    match &req {
+        Request::Shutdown => {
+            shared.draining.store(true, Ordering::Release);
+            m.shutdowns.fetch_add(1, Ordering::Relaxed);
+            return ok_response(id, vec![("draining".into(), Json::Bool(true))]);
+        }
+        Request::Metrics => {
+            m.metrics_calls.fetch_add(1, Ordering::Relaxed);
+            return ok_response(id, vec![("metrics".into(), metrics_json(shared))]);
+        }
+        _ => {}
+    }
+
+    // Study ops need the hub; before `install_hub` (journal replay in
+    // progress) they answer `starting` — never a half-replayed study.
+    let hub = shared
+        .hub
+        .read()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .clone();
+    let Some(hub) = hub else {
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        return ProtoError::new(
+            id,
+            ErrorCode::Starting,
+            "hub is still replaying its journal; retry shortly",
+        )
+        .to_json();
+    };
+
+    let fail = |id: Option<Json>, code: ErrorCode, e: &crate::error::Error| {
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        if code == ErrorCode::Busy {
+            m.busy.fetch_add(1, Ordering::Relaxed);
+        }
+        ProtoError::new(id, code, e.to_string()).to_json()
+    };
+    let unknown_study = |id: Option<Json>, name: &str| {
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        ProtoError::new(
+            id,
+            ErrorCode::UnknownStudy,
+            format!("no study named '{name}' on this hub"),
+        )
+        .to_json()
+    };
+
+    match &req {
+        Request::Create(spec) => {
+            m.creates.fetch_add(1, Ordering::Relaxed);
+            match hub.create_study((**spec).clone()) {
+                Ok(sid) => ok_response(
+                    id,
+                    vec![("study".into(), Json::usize(sid.index()))],
+                ),
+                Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
+            }
+        }
+        Request::Ask { study, q } => {
+            m.asks.fetch_add(1, Ordering::Relaxed);
+            match hub.find_study(study) {
+                None => unknown_study(id, study),
+                Some(sid) => match hub.ask(sid, *q) {
+                    Ok(batch) => ok_response(
+                        id,
+                        vec![("suggestions".into(), suggestions_to_json(&batch))],
+                    ),
+                    Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
+                },
+            }
+        }
+        Request::Tell { study, trial_id, value } => {
+            m.tells.fetch_add(1, Ordering::Relaxed);
+            match hub.find_study(study) {
+                None => unknown_study(id, study),
+                Some(sid) => match hub.tell(sid, *trial_id, *value) {
+                    Ok(()) => ok_response(id, Vec::new()),
+                    Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
+                },
+            }
+        }
+        Request::Snapshot { study } => {
+            m.snapshots.fetch_add(1, Ordering::Relaxed);
+            match hub.find_study(study) {
+                None => unknown_study(id, study),
+                Some(sid) => match hub.snapshot(sid) {
+                    Ok(snap) => ok_response(
+                        id,
+                        vec![("snapshot".into(), snapshot_to_json(&snap))],
+                    ),
+                    Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
+                },
+            }
+        }
+        Request::Metrics | Request::Shutdown => unreachable!("handled above"),
+    }
+}
+
+/// The `metrics` op payload: serving counters, the pool's coalescing
+/// counters (null when the pool is off or the hub not yet installed),
+/// and journal progress.
+fn metrics_json(shared: &Shared) -> Json {
+    let s = shared.metrics.snapshot();
+    let serve = Json::Obj(vec![
+        ("requests".into(), Json::u64(s.requests)),
+        ("errors".into(), Json::u64(s.errors)),
+        ("busy".into(), Json::u64(s.busy)),
+        ("creates".into(), Json::u64(s.creates)),
+        ("asks".into(), Json::u64(s.asks)),
+        ("tells".into(), Json::u64(s.tells)),
+        ("snapshots".into(), Json::u64(s.snapshots)),
+        ("p50_ns".into(), Json::u64(s.p50_ns)),
+        ("p99_ns".into(), Json::u64(s.p99_ns)),
+    ]);
+    let hub = shared
+        .hub
+        .read()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .clone();
+    let (ready, pool, journal_events, studies) = match hub {
+        None => (false, Json::Null, 0, Vec::new()),
+        Some(h) => {
+            let pool = match h.pool_metrics() {
+                None => Json::Null,
+                Some(p) => Json::Obj(vec![
+                    ("requests".into(), Json::u64(p.requests)),
+                    ("batches".into(), Json::u64(p.batches)),
+                    ("points".into(), Json::u64(p.points)),
+                    ("failures".into(), Json::u64(p.failures)),
+                    (
+                        "oracle_us".into(),
+                        Json::u64(p.oracle.as_micros().min(u64::MAX as u128) as u64),
+                    ),
+                ]),
+            };
+            (true, pool, h.journal_events(), h.study_names())
+        }
+    };
+    Json::Obj(vec![
+        ("ready".into(), Json::Bool(ready)),
+        ("serve".into(), serve),
+        ("pool".into(), pool),
+        ("journal_events".into(), Json::usize(journal_events)),
+        (
+            "studies".into(),
+            Json::Arr(studies.into_iter().map(Json::Str).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_hist_buckets_and_quantiles() {
+        let h = LatencyHist::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram reads 0");
+        // 99 fast requests (~1us) and one slow (~1ms).
+        for _ in 0..99 {
+            h.record(Duration::from_nanos(1_100));
+        }
+        h.record(Duration::from_millis(1));
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // Bucket mids are within 2x of the true values.
+        assert!((512..=2_048).contains(&p50), "p50 ~1.1us, got {p50}ns");
+        assert!((512..=2_048).contains(&p99), "p99 still in the fast bucket, got {p99}ns");
+        let p100 = h.quantile(1.0);
+        assert!((524_288..=2_097_152).contains(&p100), "max ~1ms, got {p100}ns");
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.workers >= 1);
+        assert_eq!(cfg.max_frame, MAX_FRAME_DEFAULT);
+        assert!(cfg.addr.contains(':'));
+    }
+}

@@ -16,8 +16,11 @@
 //!   including those of Par-D-BE's shard workers — into single oracle
 //!   calls, and a multi-tenant ask/tell serving layer ([`hub`]) that
 //!   hosts many concurrent studies with constant-liar q-batch
-//!   suggestion, a shared coalescing acquisition pool, and a JSONL
-//!   journal with bitwise-exact replay-on-open.
+//!   suggestion, a shared coalescing acquisition pool, a JSONL
+//!   journal with bitwise-exact replay-on-open, and a zero-dependency
+//!   JSONL-over-TCP serving tier ([`hub::Server`] / [`hub::HubClient`]
+//!   behind `dbe-bo serve` / `dbe-bo client`) with typed error frames
+//!   and bounded-mailbox backpressure.
 //! * **Layer 2 (JAX, build-time)** — GP posterior + LogEI value/grad
 //!   batched over restarts, AOT-lowered to HLO text per shape bucket
 //!   (`python/compile/model.py`).

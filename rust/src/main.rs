@@ -1,11 +1,13 @@
 //! dbe-bo CLI — leader entrypoint.
 //!
 //! ```text
-//! dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [flags]
-//! dbe-bo bo    --objective rastrigin --dim 5 --strategy dbe [flags]
-//! dbe-bo mso   --objective rosenbrock --dim 5 --restarts 10 [flags]
-//! dbe-bo serve --objective rastrigin --dim 5 --workers 2 [flags]
-//! dbe-bo hub   --studies 4 --q 2 --journal hub.jsonl [flags]
+//! dbe-bo repro  <fig1|fig2|fig3|fig4|fig5|table1|table2> [flags]
+//! dbe-bo bo     --objective rastrigin --dim 5 --strategy dbe [flags]
+//! dbe-bo mso    --objective rosenbrock --dim 5 --restarts 10 [flags]
+//! dbe-bo hub    --studies 4 --q 2 --journal hub.jsonl [flags]
+//! dbe-bo serve  --addr 127.0.0.1:7341 --journal hub.jsonl [flags]
+//! dbe-bo client --addr 127.0.0.1:7341 --studies 2 [flags]
+//! dbe-bo demo-coordinator --objective rastrigin --dim 5 --workers 2 [flags]
 //! dbe-bo info
 //! ```
 
@@ -41,6 +43,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bo") => cmd_bo(args),
         Some("mso") => cmd_mso(args),
         Some("serve") => cmd_serve(args),
+        Some("client") => cmd_client(args),
+        Some("demo-coordinator") => cmd_demo_coordinator(args),
         Some("hub") => cmd_hub(args),
         Some("info") => cmd_info(),
         _ => {
@@ -58,9 +62,13 @@ fn print_usage() {
            dbe-bo repro <fig1|fig2|fig3|fig4|fig5|table1|table2> [--fast|--paper] [--with-par] [--fit-every K] [--out DIR]\n\
            dbe-bo bo    --objective NAME --dim D [--strategy seq|cbe|dbe|par_dbe] [--trials N] [--fit-every K] [--seed S]\n\
            dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe|par_dbe] [--par-workers K]\n\
-           dbe-bo serve --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo hub   [--script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
                         [--workers W] [--journal PATH] [--resume] [--liar best|worst|mean]\n\
+           dbe-bo serve [--addr HOST:PORT] [--workers K] [--pool-workers W] [--mailbox-cap C]\n\
+                        [--max-frame BYTES] [--journal PATH] [--resume]\n\
+           dbe-bo client [--addr HOST:PORT] [--shutdown | --metrics |\n\
+                        --script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
+           dbe-bo demo-coordinator --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo info\n\
          \n\
          Repro targets regenerate every figure/table of the paper; see EXPERIMENTS.md."
@@ -259,8 +267,9 @@ fn cmd_mso(args: &Args) -> Result<()> {
 }
 
 /// Demo of the coordination layer: several concurrent BO studies share
-/// routed batch-evaluation workers.
-fn cmd_serve(args: &Args) -> Result<()> {
+/// routed batch-evaluation workers (in-process; the network serving
+/// tier is `dbe-bo serve`).
+fn cmd_demo_coordinator(args: &Args) -> Result<()> {
     let name = args.get_str("objective", "rastrigin");
     let dim = args.get_usize("dim", 5)?;
     let n_workers = args.get_usize("workers", 2)?;
@@ -331,20 +340,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The multi-tenant serving hub: many ask/tell studies, constant-liar
-/// q-batch suggestion, a shared coalescing acquisition pool, and an
-/// optional JSONL journal with `--resume` replay.
-fn cmd_hub(args: &Args) -> Result<()> {
-    use std::sync::Arc;
-
-    // Workload: an explicit script, or M synthesized identical studies.
+/// Build a driver workload: an explicit `--script` file, or M
+/// synthesized identical studies from flags (shared by `dbe-bo hub`
+/// and `dbe-bo client`).
+fn workload_from_args(
+    args: &Args,
+    default_studies: usize,
+    default_trials: usize,
+) -> Result<Vec<ScriptStudy>> {
     let studies: Vec<ScriptStudy> = if args.has("script") {
         let path = args.get_str("script", "");
         parse_script(&std::fs::read_to_string(&path)?)?
     } else {
         let name = args.get_str("objective", "rastrigin");
         let dim = args.get_usize("dim", 5)?;
-        let m = args.get_usize("studies", 4)?;
+        let m = args.get_usize("studies", default_studies)?;
         let seed = args.get_u64("seed", 7000)?;
         let liar = Liar::parse(&args.get_str("liar", "best"))?;
         let objective = bbob::by_name(&name, dim, 1000 + dim as u64)?;
@@ -353,7 +363,7 @@ fn cmd_hub(args: &Args) -> Result<()> {
                 let config = StudyConfig {
                     dim,
                     bounds: objective.bounds(),
-                    n_trials: args.get_usize("trials", 30)?,
+                    n_trials: args.get_usize("trials", default_trials)?,
                     n_startup: args.get_usize("startup", 10)?,
                     restarts: args.get_usize("restarts", 10)?,
                     strategy: MsoStrategy::parse(&args.get_str("strategy", "dbe"))?,
@@ -375,15 +385,20 @@ fn cmd_hub(args: &Args) -> Result<()> {
             .collect::<Result<Vec<_>>>()?
     };
     if studies.is_empty() {
-        return Err(Error::Config("hub workload has no studies".into()));
+        return Err(Error::Config("workload has no studies".into()));
     }
+    Ok(studies)
+}
 
+/// `--journal` path with the shared exists/--resume discipline: an
+/// existing journal is only reopened when the caller explicitly asked
+/// to continue it.
+fn journal_from_args(args: &Args) -> Result<Option<std::path::PathBuf>> {
     let journal = args.has("journal").then(|| {
         std::path::PathBuf::from(args.get_str("journal", "results/hub.jsonl"))
     });
-    let resume = args.has("resume");
     if let Some(path) = &journal {
-        if path.exists() && !resume {
+        if path.exists() && !args.has("resume") {
             return Err(Error::Config(format!(
                 "journal {} already exists — pass --resume to continue it, or \
                  remove it for a fresh run",
@@ -391,6 +406,17 @@ fn cmd_hub(args: &Args) -> Result<()> {
             )));
         }
     }
+    Ok(journal)
+}
+
+/// The multi-tenant serving hub: many ask/tell studies, constant-liar
+/// q-batch suggestion, a shared coalescing acquisition pool, and an
+/// optional JSONL journal with `--resume` replay.
+fn cmd_hub(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+
+    let studies = workload_from_args(args, 4, 30)?;
+    let journal = journal_from_args(args)?;
     let hub_cfg = HubConfig {
         journal,
         pool_workers: args.get_usize("workers", 2)?,
@@ -398,6 +424,7 @@ fn cmd_hub(args: &Args) -> Result<()> {
             max_batch: args.get_usize("max-batch", 64)?,
             max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 200)?),
         },
+        mailbox_cap: args.get_usize("mailbox-cap", 0)?,
     };
     println!(
         "hub: {} studies, pool workers {}, journal {}",
@@ -479,5 +506,161 @@ fn cmd_hub(args: &Args) -> Result<()> {
     if hub.journal_events() > 0 {
         println!("journal: {} events recorded", hub.journal_events());
     }
+    Ok(())
+}
+
+/// The network serving tier: a [`StudyHub`] behind JSONL-over-TCP.
+/// Binds the listener *before* journal replay (early clients get typed
+/// `starting` frames, never a half-replayed study), then serves until
+/// a client sends a `shutdown` frame.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use dbe_bo::hub::proto::MAX_FRAME_DEFAULT;
+    use dbe_bo::hub::{ServeConfig, Server};
+    use std::sync::Arc;
+
+    let journal = journal_from_args(args)?;
+    let hub_cfg = HubConfig {
+        journal,
+        pool_workers: args.get_usize("pool-workers", 2)?,
+        service: ServiceConfig {
+            max_batch: args.get_usize("max-batch", 64)?,
+            max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 200)?),
+        },
+        // Finite by default at the wire: a slow study sheds load as
+        // typed `busy` frames instead of absorbing every client's
+        // backlog.
+        mailbox_cap: args.get_usize("mailbox-cap", 64)?,
+    };
+    let serve_cfg = ServeConfig {
+        addr: args.get_str("addr", "127.0.0.1:7341"),
+        workers: args.get_usize("workers", 4)?.max(1),
+        max_frame: args.get_usize("max-frame", MAX_FRAME_DEFAULT)?,
+    };
+
+    // Own the port first; replay the journal second. That ordering is
+    // the whole replay/live-traffic race fix.
+    let server = Server::bind(serve_cfg.clone())?;
+    println!(
+        "serving on {} with {} workers (mailbox cap {})",
+        server.local_addr(),
+        serve_cfg.workers,
+        hub_cfg.mailbox_cap,
+    );
+    let replaying = hub_cfg.journal.as_ref().map(|p| p.exists()).unwrap_or(false);
+    let hub = Arc::new(StudyHub::open(hub_cfg)?);
+    if replaying {
+        println!("replayed {} journal events", hub.journal_events());
+    }
+    server.install_hub(Arc::clone(&hub));
+    println!("ready — drain with `dbe-bo client --addr {} --shutdown`", server.local_addr());
+
+    let metrics = server.join();
+    println!("drained: {metrics}");
+    if let Some(m) = hub.pool_metrics() {
+        println!("pool: {m}");
+    }
+    if hub.journal_events() > 0 {
+        println!("journal: {} events recorded", hub.journal_events());
+    }
+    Ok(())
+}
+
+/// Retry a wire call through `busy` backpressure frames.
+fn retry_busy<T>(mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    loop {
+        match f() {
+            Err(Error::Busy(_)) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            other => return other,
+        }
+    }
+}
+
+/// Scripted remote workload driver for `dbe-bo serve`: one connection
+/// per study, resume-or-create, closed ask/tell loop with local
+/// objective evaluation. `--shutdown` drains the server, `--metrics`
+/// prints its counters.
+fn cmd_client(args: &Args) -> Result<()> {
+    use dbe_bo::hub::json::Json;
+    use dbe_bo::hub::HubClient;
+
+    let addr = args.get_str("addr", "127.0.0.1:7341");
+    if args.has("shutdown") {
+        HubClient::connect(&addr)?.shutdown()?;
+        println!("server at {addr} is draining");
+        return Ok(());
+    }
+    if args.has("metrics") {
+        println!("{}", HubClient::connect(&addr)?.metrics()?);
+        return Ok(());
+    }
+
+    let studies = workload_from_args(args, 2, 20)?;
+    println!("client: driving {} studies against {addr}", studies.len());
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for s in studies {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> Result<(String, f64)> {
+            let ScriptStudy { spec, objective, q } = s;
+            let name = spec.name.clone();
+            let n_trials = spec.config.n_trials;
+            let dim = spec.config.dim;
+            let f = bbob::by_name(&objective, dim, 1000 + dim as u64)?;
+            let mut client = HubClient::connect(&addr)?;
+
+            // Resume-or-create: probe with a snapshot; `unknown_study`
+            // means the hub has never seen this name.
+            let snap0 = match client.snapshot(&name) {
+                Ok(snap) => snap,
+                Err(Error::Hub(msg)) if msg.starts_with("unknown_study") => {
+                    client.create(&spec)?;
+                    client.snapshot(&name)?
+                }
+                Err(e) => return Err(e),
+            };
+            // Same tag guard as `dbe-bo hub`: a journaled study must
+            // not silently continue against a different objective.
+            let tag = snap0.field("tag")?.as_str()?.to_string();
+            if !tag.is_empty() && tag != objective {
+                return Err(Error::Config(format!(
+                    "study '{name}' was journaled for objective '{tag}' but this \
+                     run drives '{objective}' — refusing to mix"
+                )));
+            }
+            let mut done = snap0.field("trials")?.as_arr()?.len();
+            // Finish trials a previous (crashed) driver asked but never told.
+            for p in snap0.field("pending")?.as_arr()? {
+                let trial_id = p.field("id")?.as_u64()?;
+                let x = p
+                    .field("x")?
+                    .as_arr()?
+                    .iter()
+                    .map(Json::as_f64)
+                    .collect::<Result<Vec<_>>>()?;
+                client.tell(&name, trial_id, f.value(&x))?;
+                done += 1;
+            }
+            while done < n_trials {
+                let batch = retry_busy(|| client.ask(&name, q.min(n_trials - done)))?;
+                for sug in batch {
+                    let y = f.value(&sug.x);
+                    retry_busy(|| client.tell(&name, sug.trial_id, y))?;
+                    done += 1;
+                }
+            }
+            let snap = client.snapshot(&name)?;
+            let best = match snap.field("best")? {
+                Json::Null => f64::INFINITY,
+                b => b.field("value")?.as_f64()?,
+            };
+            println!("  {name}: best {best:.6} | {done} trials (remote)");
+            Ok((name, best))
+        }));
+    }
+    let mut results = Vec::new();
+    for j in joins {
+        results.push(j.join().map_err(|_| Error::Hub("client driver panicked".into()))??);
+    }
+    println!("client run done in {:.2?}: {} studies", t0.elapsed(), results.len());
     Ok(())
 }

@@ -9,11 +9,20 @@
 //!    state bitwise (history, pending set, fit split, warm-started GP
 //!    hyperparameters) and the next ask produces the identical
 //!    suggestion an uninterrupted hub would have produced.
+//! 3. (ISSUE 6) The TCP serving path is numerically invisible: a study
+//!    driven through `Server` + `HubClient` over real loopback sockets
+//!    bitwise-reproduces an in-process twin — suggestions, snapshot
+//!    wire form, and journal bytes.
 
 use dbe_bo::bo::{Study, StudyConfig};
 use dbe_bo::coordinator::ServiceConfig;
-use dbe_bo::hub::{HubConfig, StudyHub, StudySnapshot, StudySpec, Suggestion};
+use dbe_bo::hub::proto::snapshot_to_json;
+use dbe_bo::hub::{
+    HubClient, HubConfig, ServeConfig, Server, StudyHub, StudySnapshot, StudySpec,
+    Suggestion,
+};
 use dbe_bo::optim::mso::MsoStrategy;
+use std::sync::Arc;
 
 fn quick_cfg(fit_every: usize) -> StudyConfig {
     StudyConfig {
@@ -56,6 +65,7 @@ fn hub_ask1_in_order_bitwise_reproduces_study_run() {
             journal: None,
             pool_workers,
             service: ServiceConfig::default(),
+            mailbox_cap: 0,
         })
         .unwrap();
         let id = hub.create_study(StudySpec::new("s", cfg, 42)).unwrap();
@@ -146,6 +156,7 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
             journal: Some(path.clone()),
             pool_workers: 0,
             service: ServiceConfig::default(),
+            mailbox_cap: 0,
         })
         .unwrap();
         let id = hub.create_study(spec).unwrap();
@@ -166,6 +177,7 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
         journal: Some(path.clone()),
         pool_workers: 0,
         service: ServiceConfig::default(),
+        mailbox_cap: 0,
     })
     .unwrap();
     let id = hub.find_study("serving").expect("replayed study");
@@ -204,6 +216,7 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
         journal: Some(path.clone()),
         pool_workers: 0,
         service: ServiceConfig::default(),
+        mailbox_cap: 0,
     })
     .unwrap();
     let id = hub.find_study("serving").unwrap();
@@ -232,6 +245,7 @@ fn multi_study_journal_keeps_tenants_separate() {
             journal: Some(path.clone()),
             pool_workers: 0,
             service: ServiceConfig::default(),
+            mailbox_cap: 0,
         })
         .unwrap();
         let a = hub.create_study(StudySpec::new("a", quick_cfg(1), 1)).unwrap();
@@ -249,6 +263,7 @@ fn multi_study_journal_keeps_tenants_separate() {
         journal: Some(path.clone()),
         pool_workers: 0,
         service: ServiceConfig::default(),
+        mailbox_cap: 0,
     })
     .unwrap();
     assert_eq!(hub.n_studies(), 2);
@@ -273,6 +288,7 @@ fn multi_study_journal_keeps_tenants_separate() {
         journal: Some(path.clone()),
         pool_workers: 0,
         service: ServiceConfig::default(),
+        mailbox_cap: 0,
     })
     .unwrap();
     for (name, expected) in next_asks {
@@ -282,4 +298,95 @@ fn multi_study_journal_keeps_tenants_separate() {
     }
 
     let _ = std::fs::remove_file(&path);
+}
+
+/// The serving tier must be numerically invisible (ISSUE 6 acceptance):
+/// driving a study over real loopback TCP — JSONL frames, the raw-token
+/// number codec, the bounded-mailbox path — bitwise-reproduces an
+/// in-process twin, for q=1 and a q=4 fantasy batch, pool on. Three
+/// layers are compared: every suggestion, the full wire snapshot, and
+/// the journal bytes the two hubs wrote.
+#[test]
+fn tcp_loopback_bitwise_reproduces_in_process_hub() {
+    for q in [1usize, 4] {
+        let dir = std::env::temp_dir();
+        let path_twin =
+            dir.join(format!("dbe_bo_loop_twin_{}_q{q}.jsonl", std::process::id()));
+        let path_wire =
+            dir.join(format!("dbe_bo_loop_wire_{}_q{q}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path_twin);
+        let _ = std::fs::remove_file(&path_wire);
+        let hub_cfg = |path: &std::path::Path| HubConfig {
+            journal: Some(path.to_path_buf()),
+            pool_workers: 2,
+            service: ServiceConfig::default(),
+            mailbox_cap: 0,
+        };
+        let spec = StudySpec::new("eq", quick_cfg(2), 42);
+
+        // In-process twin.
+        let twin = StudyHub::open(hub_cfg(&path_twin)).unwrap();
+        let twin_id = twin.create_study(spec.clone()).unwrap();
+
+        // The same hub shape behind a real TCP server.
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let wire_hub = Arc::new(StudyHub::open(hub_cfg(&path_wire)).unwrap());
+        server.install_hub(Arc::clone(&wire_hub));
+        let mut client = HubClient::connect(&server.local_addr().to_string()).unwrap();
+        client.create(&spec).unwrap();
+
+        // Lockstep: identical asks, identical tell order and values.
+        let n_trials = 12;
+        let mut done = 0;
+        while done < n_trials {
+            let k = q.min(n_trials - done);
+            let a = twin.ask(twin_id, k).unwrap();
+            let b = client.ask("eq", k).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (sa, sb) in a.iter().zip(&b) {
+                assert_eq!(sa.trial_id, sb.trial_id, "q={q}: trial ids diverged");
+                for (xa, xb) in sa.x.iter().zip(&sb.x) {
+                    assert_eq!(
+                        xa.to_bits(),
+                        xb.to_bits(),
+                        "q={q}: TCP suggestion differs from in-process twin"
+                    );
+                }
+            }
+            for s in a {
+                let y = bowl(&s.x);
+                twin.tell(twin_id, s.trial_id, y).unwrap();
+                client.tell("eq", s.trial_id, y).unwrap();
+            }
+            done += k;
+        }
+
+        // The wire snapshot is token-for-token the twin's encoding —
+        // raw-token numbers make Json equality bitwise f64 equality.
+        let wire_snap = client.snapshot("eq").unwrap();
+        let twin_snap = snapshot_to_json(&twin.snapshot(twin_id).unwrap());
+        assert_eq!(wire_snap, twin_snap, "q={q}: wire snapshot diverged");
+
+        // Drain the server through the protocol, then compare journals.
+        client.shutdown().unwrap();
+        drop(client);
+        server.join();
+        drop(wire_hub);
+        drop(twin);
+        let bytes_twin = std::fs::read(&path_twin).unwrap();
+        let bytes_wire = std::fs::read(&path_wire).unwrap();
+        assert!(!bytes_twin.is_empty());
+        assert_eq!(
+            bytes_twin, bytes_wire,
+            "q={q}: TCP-driven journal must be byte-identical to the twin's"
+        );
+
+        let _ = std::fs::remove_file(&path_twin);
+        let _ = std::fs::remove_file(&path_wire);
+    }
 }

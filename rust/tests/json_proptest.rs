@@ -1,0 +1,227 @@
+//! Property/fuzz battery for the hub's JSONL codec (`hub::json`).
+//!
+//! The codec is network-facing (journal records and `dbe-bo serve`
+//! frames), so two things must hold unconditionally:
+//!
+//! 1. **Round-trip fidelity** — any tree the emitter can produce parses
+//!    back structurally equal. Numbers are raw tokens, so structural
+//!    equality is token equality, which is bitwise f64/u64 equality.
+//! 2. **Total parsing** — arbitrary malformed input returns `Err`;
+//!    it never panics and never overflows the stack (depth cap).
+//!
+//! Random trees come from the in-crate `forall` runner (seeded Pcg64,
+//! scale-shrinking), so failures replay exactly.
+
+use dbe_bo::hub::json::{Json, MAX_DEPTH};
+use dbe_bo::testing::{forall, Gen};
+
+/// Characters that exercise every escape path in the emitter: quoting,
+/// backslash, the named escapes, a sub-0x20 control (emitted as \u), a
+/// multi-byte scalar, an astral-plane scalar, and JSON structure bytes
+/// that must pass through strings unharmed.
+const STRING_ALPHABET: &[char] = &[
+    'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{1}', '\u{1f}', 'é', 'λ',
+    '🦀', '{', '}', '[', ']', ':', ',',
+];
+
+fn gen_string(g: &mut Gen) -> String {
+    let len = g.rng.below(9);
+    (0..len).map(|_| STRING_ALPHABET[g.rng.below(STRING_ALPHABET.len())]).collect()
+}
+
+fn gen_finite_f64(g: &mut Gen) -> f64 {
+    loop {
+        let v = f64::from_bits(g.rng.next_u64());
+        if v.is_finite() {
+            return v;
+        }
+    }
+}
+
+fn gen_num(g: &mut Gen) -> Json {
+    match g.rng.below(3) {
+        0 => Json::u64(g.rng.next_u64()),
+        1 => Json::f64(gen_finite_f64(g)),
+        _ => Json::f64(g.f64_in(1e9)),
+    }
+}
+
+/// Random Json tree; `depth` bounds nesting (leaf-only at 0).
+fn gen_value(g: &mut Gen, depth: usize) -> Json {
+    let n_kinds = if depth == 0 { 4 } else { 6 };
+    match g.rng.below(n_kinds) {
+        0 => Json::Null,
+        1 => Json::Bool(g.rng.below(2) == 0),
+        2 => gen_num(g),
+        3 => Json::Str(gen_string(g)),
+        4 => {
+            let n = g.rng.below(5);
+            Json::Arr((0..n).map(|_| gen_value(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.rng.below(5);
+            Json::Obj(
+                (0..n).map(|_| (gen_string(g), gen_value(g, depth - 1))).collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn random_trees_round_trip_structurally() {
+    forall("emit→parse round-trips the tree", 300, |g| {
+        let depth = g.size(6);
+        let tree = gen_value(g, depth);
+        let text = tree.to_string();
+        let back = Json::parse(&text)
+            .map_err(|e| format!("emitted {text:?} failed to parse: {e}"))?;
+        // PartialEq on Json compares Num tokens verbatim, so this is
+        // bitwise number equality, not approximate equality.
+        if back != tree {
+            return Err(format!("round-trip changed the tree: {text:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_finite_f64_round_trip_bitwise() {
+    forall("f64 bits survive emit→parse", 2000, |g| {
+        let v = gen_finite_f64(g);
+        let back = Json::parse(&Json::f64(v).to_string())
+            .map_err(|e| format!("{v:?}: {e}"))?
+            .as_f64()
+            .map_err(|e| format!("{v:?}: {e}"))?;
+        if back.to_bits() != v.to_bits() {
+            return Err(format!("{v:?} ({:#x}) came back {back:?}", v.to_bits()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_u64_round_trip_exact() {
+    forall("u64 survives emit→parse", 2000, |g| {
+        let v = g.rng.next_u64();
+        let back = Json::parse(&Json::u64(v).to_string())
+            .map_err(|e| format!("{v}: {e}"))?
+            .as_u64()
+            .map_err(|e| format!("{v}: {e}"))?;
+        if back != v {
+            return Err(format!("{v} came back {back}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn negative_zero_is_preserved() {
+    let back = Json::parse(&Json::f64(-0.0).to_string()).unwrap().as_f64().unwrap();
+    assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "-0.0 must not collapse to 0.0");
+}
+
+/// Every entry must return `Err` from `Json::parse` — and, implicitly,
+/// not panic. Covers truncation, bad escapes, the strict number
+/// grammar (Rust's `f64::from_str` would accept several of these),
+/// bad literals, structural junk, and trailing garbage.
+#[test]
+fn malformed_corpus_errors_without_panicking() {
+    let corpus: &[&str] = &[
+        "",
+        "   ",
+        "{",
+        "[1,2",
+        "{\"a\":1",
+        "\"abc",
+        "\"\\u12",
+        "\"\\q\"",
+        "+1",
+        "01",
+        "1.",
+        ".5",
+        "--3",
+        "1e",
+        "1e+",
+        "-",
+        "{\"a\":+2}",
+        "[01]",
+        "nul",
+        "truee",
+        "falsely",
+        "[1 2]",
+        "{\"a\" 1}",
+        "{\"a\":1,}",
+        "[1,]",
+        "{,}",
+        "{\"a\":1} x",
+        "[] []",
+        "\"\\u{41}\"",
+        "{\"a\"}",
+        "[\"\\uD800\"]",
+    ];
+    for src in corpus {
+        assert!(
+            Json::parse(src).is_err(),
+            "malformed input {src:?} must be rejected"
+        );
+    }
+}
+
+fn nested_arrays(n: usize) -> String {
+    let mut s = String::with_capacity(2 * n + 4);
+    for _ in 0..n {
+        s.push('[');
+    }
+    s.push_str("null");
+    for _ in 0..n {
+        s.push(']');
+    }
+    s
+}
+
+#[test]
+fn depth_cap_boundary_is_exact() {
+    // A scalar under n arrays parses at depth MAX_DEPTH - n, so
+    // n = MAX_DEPTH - 1 is the deepest accepted nesting.
+    assert!(Json::parse(&nested_arrays(MAX_DEPTH - 1)).is_ok());
+    assert!(Json::parse(&nested_arrays(MAX_DEPTH)).is_err());
+    assert!(Json::parse(&nested_arrays(MAX_DEPTH + 1)).is_err());
+}
+
+#[test]
+fn deep_nesting_bomb_errors_fast_instead_of_overflowing() {
+    // 100k unclosed brackets: without the depth cap this would recurse
+    // 100k frames deep and blow the stack before ever reporting EOF.
+    let bomb = "[".repeat(100_000);
+    assert!(Json::parse(&bomb).is_err());
+    let obj_bomb = "{\"k\":".repeat(100_000);
+    assert!(Json::parse(&obj_bomb).is_err());
+}
+
+/// Random mutations of valid emissions: flip/delete/insert one byte and
+/// require parse to either succeed (the mutation may be harmless, e.g.
+/// inside a string) or return Err — never panic.
+#[test]
+fn random_single_byte_mutations_never_panic() {
+    forall("mutated frames parse totally", 500, |g| {
+        let tree = gen_value(g, 4);
+        let mut bytes = tree.to_string().into_bytes();
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        let at = g.rng.below(bytes.len());
+        match g.rng.below(3) {
+            0 => bytes[at] = (g.rng.next_u64() & 0x7f) as u8,
+            1 => {
+                bytes.remove(at);
+            }
+            _ => bytes.insert(at, b"{}[]\",:x01"[g.rng.below(10)]),
+        }
+        // Mutation can produce invalid UTF-8; only valid strings reach
+        // the parser in production (lines are checked first).
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(text); // must not panic
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,355 @@
+//! Adversarial protocol battery for `dbe-bo serve` (ISSUE 6).
+//!
+//! Every test drives a real loopback TCP server. The contract under
+//! test: a request-level failure answers with a *typed error frame*
+//! (`{"id":…,"ok":false,"error":<code>,"message":…}`) and the
+//! connection keeps serving; only EOF, a transport error, or drain
+//! closes it. Covers the malformed corpus, oversized-frame resync,
+//! torn frames, pipelining, unknown study/trial, the journal-replay
+//! `starting` window, and shutdown drain.
+
+use dbe_bo::bo::StudyConfig;
+use dbe_bo::coordinator::ServiceConfig;
+use dbe_bo::hub::json::Json;
+use dbe_bo::hub::proto::{encode_request, Request};
+use dbe_bo::hub::{HubClient, HubConfig, ServeConfig, Server, StudyHub, StudySpec};
+use dbe_bo::optim::mso::MsoStrategy;
+use dbe_bo::Error;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn quick_cfg() -> StudyConfig {
+    StudyConfig {
+        dim: 2,
+        bounds: vec![(-5.0, 5.0); 2],
+        n_trials: 40,
+        n_startup: 4,
+        restarts: 3,
+        strategy: MsoStrategy::Dbe,
+        fit_every: 2,
+        ..StudyConfig::default()
+    }
+}
+
+fn bowl(x: &[f64]) -> f64 {
+    (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2)
+}
+
+/// Ephemeral-port server with an in-memory hub already installed.
+fn start_server(max_frame: usize) -> (Server, String) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_frame,
+    })
+    .unwrap();
+    server.install_hub(Arc::new(StudyHub::in_memory()));
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+/// A raw line client — no protocol smarts, so it can speak garbage.
+struct Raw {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Raw {
+    fn connect(addr: &str) -> Raw {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Raw { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8]) {
+        self.writer.write_all(bytes).unwrap();
+    }
+
+    fn send_line(&mut self, line: &str) {
+        self.send_bytes(line.as_bytes());
+        self.send_bytes(b"\n");
+    }
+
+    /// Read one reply frame; panics on EOF (`expect_eof` covers that).
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim_end_matches(['\n', '\r'])).expect("reply frame parses")
+    }
+
+    fn expect_eof(&mut self) {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "expected EOF, got reply {line:?}");
+    }
+}
+
+/// Assert a frame is a typed error with the given code and echoed id.
+fn assert_error(frame: &Json, code: &str, id: &Json) {
+    assert_eq!(frame.field("ok").unwrap(), &Json::Bool(false), "frame: {frame}");
+    assert_eq!(frame.field("error").unwrap().as_str().unwrap(), code, "frame: {frame}");
+    assert_eq!(frame.field("id").unwrap(), id, "id must be echoed verbatim: {frame}");
+    // Every error carries a human-readable message.
+    assert!(!frame.field("message").unwrap().as_str().unwrap().is_empty());
+}
+
+fn assert_ok(frame: &Json) {
+    assert_eq!(frame.field("ok").unwrap(), &Json::Bool(true), "frame: {frame}");
+}
+
+#[test]
+fn adversarial_corpus_answers_typed_errors_and_keeps_serving() {
+    let (server, addr) = start_server(1 << 20);
+    let mut raw = Raw::connect(&addr);
+
+    // (line, expected code, expected echoed id).
+    let corpus: &[(&str, &str, Json)] = &[
+        // Not JSON at all.
+        ("{", "malformed", Json::Null),
+        ("@@@@", "malformed", Json::Null),
+        ("07", "malformed", Json::Null),
+        // JSON, but not a request object.
+        ("[]", "malformed", Json::Null),
+        ("\"just a string\"", "malformed", Json::Null),
+        // Objects with a bad shape: the id IS recoverable and echoed.
+        ("{\"id\":1,\"op\":\"frobnicate\"}", "bad_request", Json::u64(1)),
+        ("{\"id\":2}", "bad_request", Json::u64(2)),
+        ("{\"id\":3,\"op\":\"ask\"}", "bad_request", Json::u64(3)),
+        ("{\"id\":6,\"op\":\"ask\",\"study\":\"ghost\",\"q\":0}", "bad_request", Json::u64(6)),
+        (
+            "{\"id\":7,\"op\":\"tell\",\"study\":\"ghost\",\"trial\":0,\"value\":1e999}",
+            "bad_request",
+            Json::u64(7),
+        ),
+        ("{\"id\":8,\"op\":5}", "bad_request", Json::u64(8)),
+        // Ids are opaque — non-numeric ids echo too.
+        ("{\"id\":\"abc\",\"op\":\"nope\"}", "bad_request", Json::Str("abc".into())),
+        // Well-formed requests against nonexistent state.
+        ("{\"id\":4,\"op\":\"ask\",\"study\":\"ghost\"}", "unknown_study", Json::u64(4)),
+        (
+            "{\"id\":5,\"op\":\"tell\",\"study\":\"ghost\",\"trial\":0,\"value\":1}",
+            "unknown_study",
+            Json::u64(5),
+        ),
+    ];
+    for (line, code, id) in corpus {
+        raw.send_line(line);
+        assert_error(&raw.recv(), code, id);
+    }
+
+    // A line that is not valid UTF-8.
+    raw.send_bytes(&[0xff, 0xfe, 0x01, b'\n']);
+    assert_error(&raw.recv(), "malformed", &Json::Null);
+
+    // Blank and CRLF keep-alive lines are skipped, not answered.
+    raw.send_bytes(b"\n\r\n");
+
+    // The same connection still serves real work.
+    raw.send_line("{\"id\":99,\"op\":\"metrics\"}");
+    let frame = raw.recv();
+    assert_ok(&frame);
+    assert_eq!(frame.field("id").unwrap(), &Json::u64(99));
+    let serve = frame.field("metrics").unwrap().field("serve").unwrap();
+    let errors = serve.field("errors").unwrap().as_u64().unwrap();
+    assert_eq!(
+        errors,
+        corpus.len() as u64 + 1,
+        "every adversarial line was counted exactly once"
+    );
+
+    drop(raw);
+    server.shutdown();
+    let m = server.join();
+    assert_eq!(m.requests, corpus.len() as u64 + 2, "blank lines are not requests");
+}
+
+#[test]
+fn oversized_frames_reject_and_resync() {
+    let (server, addr) = start_server(512);
+    let mut raw = Raw::connect(&addr);
+
+    // A 2 KiB line: whether it arrives whole (complete-line check) or
+    // in pieces (unterminated-buffer check), exactly one `oversized`
+    // frame comes back and the stream resynchronizes at the newline.
+    let big = format!("{{\"op\":\"metrics\",\"pad\":\"{}\"}}", "x".repeat(2048));
+    raw.send_line(&big);
+    assert_error(&raw.recv(), "oversized", &Json::Null);
+
+    // Back in sync: the next frame is served normally.
+    raw.send_line("{\"id\":1,\"op\":\"metrics\"}");
+    let frame = raw.recv();
+    assert_ok(&frame);
+    assert_eq!(frame.field("id").unwrap(), &Json::u64(1));
+
+    drop(raw);
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn torn_frame_at_eof_is_dropped_silently() {
+    let (server, addr) = start_server(1 << 20);
+
+    // Half a request, then the client dies mid-frame.
+    let mut raw = Raw::connect(&addr);
+    raw.send_bytes(b"{\"id\":1,\"op\":\"met");
+    raw.writer.shutdown(std::net::Shutdown::Write).unwrap();
+    // The torn tail is dropped like a torn journal line: no reply, EOF.
+    raw.expect_eof();
+
+    // The worker survived and serves the next connection.
+    let mut raw2 = Raw::connect(&addr);
+    raw2.send_line("{\"id\":2,\"op\":\"metrics\"}");
+    assert_ok(&raw2.recv());
+
+    drop(raw2);
+    server.shutdown();
+    let m = server.join();
+    assert_eq!(m.requests, 1, "the torn frame never became a request");
+}
+
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let (server, addr) = start_server(1 << 20);
+    let mut raw = Raw::connect(&addr);
+
+    let spec = StudySpec::new("pipe", quick_cfg(), 7);
+    let mut batch = Vec::new();
+    for (id, req) in [
+        (10, Request::Metrics),
+        (11, Request::Create(Box::new(spec))),
+        (12, Request::Ask { study: "pipe".into(), q: 2 }),
+    ] {
+        batch.extend_from_slice(encode_request(id, &req).to_string().as_bytes());
+        batch.push(b'\n');
+    }
+    // One write, three frames: responses come back in request order.
+    raw.send_bytes(&batch);
+    for expect_id in [10u64, 11, 12] {
+        let frame = raw.recv();
+        assert_ok(&frame);
+        assert_eq!(frame.field("id").unwrap(), &Json::u64(expect_id));
+        if expect_id == 12 {
+            let sugs = frame.field("suggestions").unwrap().as_arr().unwrap();
+            assert_eq!(sugs.len(), 2, "ask q=2 returns two suggestions");
+        }
+    }
+
+    drop(raw);
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn tell_for_never_asked_trial_is_unknown_trial() {
+    let (server, addr) = start_server(1 << 20);
+    let mut client = HubClient::connect(&addr).unwrap();
+    client.create(&StudySpec::new("t", quick_cfg(), 3)).unwrap();
+
+    let err = client.tell("t", 999, 1.0).unwrap_err();
+    match err {
+        Error::Hub(msg) => {
+            assert!(msg.starts_with("unknown_trial"), "typed code first: {msg}")
+        }
+        other => panic!("expected Error::Hub(unknown_trial: …), got {other:?}"),
+    }
+
+    // The study is unharmed: a real ask/tell round still works.
+    let sugs = client.ask("t", 1).unwrap();
+    client.tell("t", sugs[0].trial_id, bowl(&sugs[0].x)).unwrap();
+
+    drop(client);
+    server.shutdown();
+    server.join();
+}
+
+/// The replay race (ISSUE 6 fix): the listener owns the port *before*
+/// journal replay, and clients that connect during replay get a typed
+/// `starting` frame — never a connection refusal, never a half-replayed
+/// study.
+#[test]
+fn client_during_journal_replay_gets_starting_then_replayed_state() {
+    let path = std::env::temp_dir()
+        .join(format!("dbe_bo_serve_proto_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let hub_cfg = || HubConfig {
+        journal: Some(path.clone()),
+        pool_workers: 0,
+        service: ServiceConfig::default(),
+        mailbox_cap: 0,
+    };
+
+    // Session 1: journal a study with six completed trials.
+    {
+        let hub = StudyHub::open(hub_cfg()).unwrap();
+        let id = hub.create_study(StudySpec::new("s0", quick_cfg(), 42)).unwrap();
+        for _ in 0..6 {
+            let sug = hub.ask(id, 1).unwrap().pop().unwrap();
+            hub.tell(id, sug.trial_id, bowl(&sug.x)).unwrap();
+        }
+    }
+
+    // Session 2: the serve startup ordering — bind first, replay after.
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_frame: 1 << 20,
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    // The port is live but the hub is not installed yet (replay still
+    // "running"): study ops answer `starting`, metrics answers with
+    // ready=false so operators can watch.
+    let mut raw = Raw::connect(&addr);
+    raw.send_line("{\"id\":1,\"op\":\"ask\",\"study\":\"s0\"}");
+    assert_error(&raw.recv(), "starting", &Json::u64(1));
+    raw.send_line("{\"id\":2,\"op\":\"metrics\"}");
+    let frame = raw.recv();
+    assert_ok(&frame);
+    let ready = frame.field("metrics").unwrap().field("ready").unwrap();
+    assert_eq!(ready, &Json::Bool(false));
+
+    // Replay finishes; the same connection now sees the full study.
+    let hub = Arc::new(StudyHub::open(hub_cfg()).unwrap());
+    server.install_hub(Arc::clone(&hub));
+
+    raw.send_line("{\"id\":3,\"op\":\"snapshot\",\"study\":\"s0\"}");
+    let frame = raw.recv();
+    assert_ok(&frame);
+    let snap = frame.field("snapshot").unwrap();
+    assert_eq!(snap.field("trials").unwrap().as_arr().unwrap().len(), 6);
+    assert_eq!(snap.field("name").unwrap().as_str().unwrap(), "s0");
+
+    raw.send_line("{\"id\":4,\"op\":\"ask\",\"study\":\"s0\"}");
+    let frame = raw.recv();
+    assert_ok(&frame);
+    assert_eq!(frame.field("suggestions").unwrap().as_arr().unwrap().len(), 1);
+
+    drop(raw);
+    server.shutdown();
+    server.join();
+    drop(hub);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn shutdown_frame_drains_idempotently() {
+    let (server, addr) = start_server(1 << 20);
+
+    let mut client = HubClient::connect(&addr).unwrap();
+    client.create(&StudySpec::new("d", quick_cfg(), 5)).unwrap();
+    client.shutdown().unwrap();
+    // Idempotent: a second shutdown on the draining server still
+    // answers ok (it may race the connection close — EOF is also fine).
+    let _ = client.shutdown();
+    // New work is refused with a typed frame or the connection is gone.
+    assert!(client.ask("d", 1).is_err(), "a draining server accepts no new work");
+    drop(client);
+
+    let m = server.join();
+    assert!(m.shutdowns >= 1);
+    assert_eq!(m.creates, 1);
+}
