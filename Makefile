@@ -2,7 +2,7 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test lint docs bench bench-smoke bench-gp-fit serve-smoke artifacts
+.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke artifacts
 
 build:
 	cargo build --release
@@ -15,6 +15,12 @@ test:
 lint:
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings
+
+# CI's chaos gate: the crash-only battery plus the supervised-spawn
+# source lint (no bare std::thread::spawn inside the hub).
+chaos:
+	cargo test --release --test chaos
+	! grep -rn "std::thread::spawn" rust/src/hub/
 
 # CI's docs gate: rustdoc must be warning-clean and doctests must pass.
 docs:

@@ -68,6 +68,7 @@ fn run_hub(
             pool_workers: p.hub_workers.max(1),
             service: ServiceConfig::default(),
             mailbox_cap: 0,
+            ..HubConfig::default()
         })
         .unwrap(),
     );

@@ -140,6 +140,7 @@ fn main() {
             pool_workers: p.hub_workers.max(1),
             service: ServiceConfig::default(),
             mailbox_cap: 64,
+            ..HubConfig::default()
         })
         .unwrap(),
     );

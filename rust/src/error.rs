@@ -24,6 +24,17 @@ pub enum Error {
     /// request was **not** enqueued; callers should retry later. The
     /// serving tier maps this to the wire-level `busy` error frame.
     Busy(String),
+    /// A study actor panicked and exhausted its restart budget (or
+    /// could not be rebuilt from its journal). Terminal for that
+    /// study: every further request answers with this. The serving
+    /// tier maps it to the wire-level `crashed` frame.
+    Crashed(String),
+    /// A study actor panicked and was restarted by replaying its
+    /// journal segment. The in-flight request was **not** applied
+    /// beyond what the journal recorded; callers should snapshot to
+    /// resync pending trials, then retry. Maps to the wire-level
+    /// `restarting` frame.
+    Restarting(String),
     /// I/O error.
     Io(std::io::Error),
 }
@@ -39,6 +50,8 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Hub(m) => write!(f, "hub error: {m}"),
             Error::Busy(m) => write!(f, "busy: {m}"),
+            Error::Crashed(m) => write!(f, "crashed: {m}"),
+            Error::Restarting(m) => write!(f, "restarting: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -69,6 +82,8 @@ mod tests {
         assert!(Error::Coordinator("x".into()).to_string().contains("coordinator"));
         assert!(Error::Hub("x".into()).to_string().contains("hub"));
         assert!(Error::Busy("x".into()).to_string().contains("busy"));
+        assert!(Error::Crashed("x".into()).to_string().contains("crashed"));
+        assert!(Error::Restarting("x".into()).to_string().contains("restarting"));
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! One [`HubClient`] owns one TCP connection and issues one request at
 //! a time (write a frame, read the reply). Wire errors come back as
 //! typed [`Error`] variants: a `busy` frame surfaces as
-//! [`Error::Busy`] so callers can retry, everything else as
-//! [`Error::Hub`] carrying the server's code and message.
+//! [`Error::Busy`] (retry as-is), `restarting` as [`Error::Restarting`]
+//! (snapshot to resync, then retry), `crashed` as [`Error::Crashed`]
+//! (terminal for that study), and everything else as [`Error::Hub`]
+//! carrying the server's code and message.
 
 use super::json::Json;
 use super::proto::{encode_request, suggestions_from_json, Request};
@@ -63,10 +65,11 @@ impl HubClient {
                     .get("message")
                     .and_then(|m| m.as_str().ok().map(str::to_string))
                     .unwrap_or_default();
-                if code == "busy" {
-                    Err(Error::Busy(message))
-                } else {
-                    Err(Error::Hub(format!("{code}: {message}")))
+                match code.as_str() {
+                    "busy" => Err(Error::Busy(message)),
+                    "restarting" => Err(Error::Restarting(message)),
+                    "crashed" => Err(Error::Crashed(message)),
+                    _ => Err(Error::Hub(format!("{code}: {message}"))),
                 }
             }
         }

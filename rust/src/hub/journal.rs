@@ -6,16 +6,37 @@
 //! history, pending trials, fit schedule, and (per-trial-derived) RNG
 //! stream exactly — see `rust/tests/hub_equivalence.rs`.
 //!
-//! Crash discipline: events are appended *after* the state change they
-//! record and flushed before the client sees a reply, so the journal
-//! never claims an operation that didn't happen; an operation whose
-//! event was lost mid-write was never acknowledged. Because every
-//! append writes `line\n` as one buffer, an acknowledged event always
-//! ends with its newline — so an *unterminated* final line is the one
-//! legitimate crash artifact (detected on open, reported, truncated
-//! away), while ANY newline-terminated line that fails to parse —
-//! interior or final — is corruption of acknowledged state and fails
-//! the open with a typed [`Error::Hub`].
+//! ## Crash discipline and what "durable" actually means
+//!
+//! Events are appended *before* the in-memory state change they record
+//! and before the client's reply, so the journal never under-claims:
+//! an acknowledged operation is always on the journal's write path.
+//! How far down that path it got when the lights went out depends on
+//! the configured [`SyncPolicy`]:
+//!
+//! * [`SyncPolicy::Os`] (default) — each append is written and
+//!   `flush()`ed into the OS page cache before the reply. An
+//!   acknowledged event survives a **process** crash (panic, abort,
+//!   `kill -9`) but **not** an OS crash or power loss: the kernel may
+//!   not have reached the disk yet.
+//! * [`SyncPolicy::Data`] — each append additionally calls
+//!   `sync_data()` before the reply: an acknowledged event survives
+//!   power loss (modulo hardware that lies about flushes).
+//! * [`SyncPolicy::EveryN`] — `sync_data()` once per `n` appends and
+//!   on drop: under power loss at most the final `n-1` acknowledged
+//!   events are lost, at a fraction of `Data`'s cost.
+//!
+//! Because every append writes `line\n` as one buffer, an acknowledged
+//! event always ends with its newline — so an *unterminated* final
+//! line is the one legitimate crash artifact (detected on open,
+//! reported, truncated away), while ANY newline-terminated line that
+//! fails to parse — interior or final — is corruption of acknowledged
+//! state and fails the open with a typed [`Error::Hub`]. A *failed*
+//! append (I/O error or injected fault) truncates any partially
+//! written bytes back to the last valid record before surfacing the
+//! error; if even that truncation fails, the journal poisons itself
+//! and every later append fails typed rather than risk gluing a new
+//! line onto a torn tail.
 
 use super::json::Json;
 use super::{Liar, StudySpec};
@@ -195,10 +216,58 @@ impl JournalEvent {
     }
 }
 
+/// Per-append durability level. See the module docs for the guarantee
+/// each level actually provides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SyncPolicy {
+    /// `flush()` to the OS page cache per append: survives process
+    /// crash, not power loss. The default.
+    #[default]
+    Os,
+    /// `sync_data()` per append: survives power loss.
+    Data,
+    /// `sync_data()` every `n` appends and on drop: at most `n-1`
+    /// acknowledged events lost to power failure.
+    EveryN(usize),
+}
+
+impl SyncPolicy {
+    /// Parse a CLI token: `os`, `data`, or `every:N` (N ≥ 1).
+    pub fn parse(s: &str) -> Result<SyncPolicy> {
+        match s {
+            "os" => Ok(SyncPolicy::Os),
+            "data" => Ok(SyncPolicy::Data),
+            other => match
+                other.strip_prefix("every:").and_then(|n| n.parse::<usize>().ok())
+            {
+                Some(n) if n >= 1 => Ok(SyncPolicy::EveryN(n)),
+                _ => Err(Error::Config(format!(
+                    "unknown sync policy '{other}' (expected os, data, or every:N)"
+                ))),
+            },
+        }
+    }
+
+    /// The CLI token this policy parses from.
+    pub fn token(&self) -> String {
+        match self {
+            SyncPolicy::Os => "os".into(),
+            SyncPolicy::Data => "data".into(),
+            SyncPolicy::EveryN(n) => format!("every:{n}"),
+        }
+    }
+}
+
 /// The append-only journal file.
 pub struct Journal {
     file: std::fs::File,
     n_events: usize,
+    sync: SyncPolicy,
+    /// Byte length of the terminated, parseable prefix. Invariant
+    /// between appends: the file's physical length equals this.
+    valid_len: u64,
+    since_sync: usize,
+    poisoned: bool,
 }
 
 impl Journal {
@@ -207,7 +276,7 @@ impl Journal {
     ///
     /// A torn final line is truncated away (with a note on stderr); a
     /// malformed interior line fails the open.
-    pub fn open(path: &Path) -> Result<(Journal, Vec<JournalEvent>)> {
+    pub fn open(path: &Path, sync: SyncPolicy) -> Result<(Journal, Vec<JournalEvent>)> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
@@ -260,21 +329,123 @@ impl Journal {
         let mut file = file;
         file.seek(SeekFrom::End(0))?;
         let n_events = events.len();
-        Ok((Journal { file, n_events }, events))
+        let journal = Journal {
+            file,
+            n_events,
+            sync,
+            valid_len,
+            since_sync: 0,
+            poisoned: false,
+        };
+        Ok((journal, events))
     }
 
-    /// Append one event and flush it to the OS before returning.
+    /// Append one event, making it as durable as the [`SyncPolicy`]
+    /// demands before returning. On failure the on-disk prefix is
+    /// truncated back to the last acknowledged record, so a failed
+    /// append is as if it never started (or the journal poisons
+    /// itself if even that restore fails).
     pub fn append(&mut self, ev: &JournalEvent) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::Hub(
+                "journal is poisoned: a failed append could not be truncated back \
+                 to the last valid record; reopen the journal to recover"
+                    .into(),
+            ));
+        }
+        crate::testing::failpoint::fail_point("hub::journal::append")?;
         let line = format!("{}\n", ev.encode());
-        self.file.write_all(line.as_bytes())?;
+        match self.write_line(line.as_bytes()) {
+            Ok(()) => {
+                self.valid_len += line.len() as u64;
+                self.n_events += 1;
+                Ok(())
+            }
+            Err(e) => {
+                // Claw back any torn bytes so the on-disk prefix stays
+                // exactly the acknowledged events.
+                let restored = self.file.set_len(self.valid_len).is_ok()
+                    && self.file.seek(SeekFrom::End(0)).is_ok();
+                if !restored {
+                    self.poisoned = true;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Write `line\n` and sync it per policy.
+    fn write_line(&mut self, bytes: &[u8]) -> Result<()> {
+        use crate::testing::failpoint::{triggered, FailAction};
+        if let Some(action) = triggered("hub::journal::torn") {
+            // Model a crash mid-write: half the line lands, then the
+            // failure surfaces. `append` truncates the torn half away.
+            let _ = self.file.write_all(&bytes[..bytes.len() / 2]);
+            let _ = self.file.flush();
+            let (FailAction::Error(m) | FailAction::Panic(m)) = action;
+            return Err(Error::Hub(format!(
+                "injected failure at hub::journal::torn: {m}"
+            )));
+        }
+        self.file.write_all(bytes)?;
         self.file.flush()?;
-        self.n_events += 1;
+        match self.sync {
+            SyncPolicy::Os => {}
+            SyncPolicy::Data => self.file.sync_data()?,
+            SyncPolicy::EveryN(n) => {
+                self.since_sync += 1;
+                if self.since_sync >= n.max(1) {
+                    self.file.sync_data()?;
+                    self.since_sync = 0;
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Re-read every acknowledged event from the start of the file
+    /// (the valid prefix), leaving the handle positioned for
+    /// appending. The actor supervisor replays this to rebuild a
+    /// crashed study without reopening the hub.
+    pub fn read_all(&mut self) -> Result<Vec<JournalEvent>> {
+        use std::io::Read;
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut raw = String::new();
+        self.file.by_ref().take(self.valid_len).read_to_string(&mut raw)?;
+        self.file.seek(SeekFrom::End(0))?;
+        let mut events = Vec::new();
+        for (i, chunk) in raw.split_inclusive('\n').enumerate() {
+            let text = chunk.trim_end_matches(['\n', '\r']);
+            if text.is_empty() {
+                continue;
+            }
+            let ev = Json::parse(text)
+                .and_then(|j| JournalEvent::decode(&j))
+                .map_err(|e| {
+                    Error::Hub(format!("journal corrupt at line {}: {e}", i + 1))
+                })?;
+            events.push(ev);
+        }
+        Ok(events)
     }
 
     /// Events recorded over this journal's lifetime (replayed + appended).
     pub fn n_events(&self) -> usize {
         self.n_events
+    }
+
+    /// The durability policy this journal was opened with.
+    pub fn sync_policy(&self) -> SyncPolicy {
+        self.sync
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        // Push any unsynced EveryN residue to disk; best-effort.
+        if !matches!(self.sync, SyncPolicy::Os) {
+            let _ = self.file.sync_data();
+        }
     }
 }
 
@@ -360,17 +531,17 @@ mod tests {
         let path = tmp("roundtrip");
         let _ = std::fs::remove_file(&path);
         {
-            let (mut j, replayed) = Journal::open(&path).unwrap();
+            let (mut j, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
             assert!(replayed.is_empty());
             j.append(&JournalEvent::Create { study: 0, spec: spec(2) }).unwrap();
             j.append(&JournalEvent::Ask { study: 0, trials: vec![(0, vec![1.0, 2.0])] })
                 .unwrap();
             assert_eq!(j.n_events(), 2);
         } // drop = crash point
-        let (mut j, replayed) = Journal::open(&path).unwrap();
+        let (mut j, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(replayed.len(), 2);
         j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 7.0 }).unwrap();
-        let (_, replayed) = Journal::open(&path).unwrap();
+        let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(replayed.len(), 3);
         let _ = std::fs::remove_file(&path);
     }
@@ -380,32 +551,126 @@ mod tests {
         let path = tmp("torn");
         let _ = std::fs::remove_file(&path);
         {
-            let (mut j, _) = Journal::open(&path).unwrap();
+            let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
             j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 }).unwrap();
         }
         // Simulate a crash mid-append: garbage partial line at the end.
         let mut raw = std::fs::read_to_string(&path).unwrap();
         raw.push_str("{\"ev\":\"tell\",\"stu");
         std::fs::write(&path, &raw).unwrap();
-        let (mut j, replayed) = Journal::open(&path).unwrap();
+        let (mut j, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(replayed.len(), 1, "torn tail must be dropped");
         // The torn bytes must be physically gone so appends stay valid.
         j.append(&JournalEvent::Tell { study: 0, trial_id: 2, value: 3.0 }).unwrap();
         drop(j);
-        let (_, replayed) = Journal::open(&path).unwrap();
+        let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(replayed.len(), 2);
 
         // Interior corruption is a hard error...
         let good = std::fs::read_to_string(&path).unwrap();
         let corrupted = format!("not json at all\n{good}");
         std::fs::write(&path, corrupted).unwrap();
-        assert!(matches!(Journal::open(&path), Err(Error::Hub(_))));
+        assert!(matches!(Journal::open(&path, SyncPolicy::Os), Err(Error::Hub(_))));
 
         // ...and so is a newline-TERMINATED malformed final line: it
         // was acknowledged (appends write `line\n` atomically w.r.t.
         // acknowledgment), so it must never be silently dropped.
         std::fs::write(&path, format!("{good}not json either\n")).unwrap();
-        assert!(matches!(Journal::open(&path), Err(Error::Hub(_))));
+        assert!(matches!(Journal::open(&path, SyncPolicy::Os), Err(Error::Hub(_))));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sync_policy_tokens_round_trip() {
+        for p in [SyncPolicy::Os, SyncPolicy::Data, SyncPolicy::EveryN(8)] {
+            assert_eq!(SyncPolicy::parse(&p.token()).unwrap(), p);
+        }
+        assert!(matches!(SyncPolicy::parse("fsync"), Err(Error::Config(_))));
+        assert!(matches!(SyncPolicy::parse("every:0"), Err(Error::Config(_))));
+        assert!(matches!(SyncPolicy::parse("every:x"), Err(Error::Config(_))));
+        assert_eq!(SyncPolicy::default(), SyncPolicy::Os);
+    }
+
+    #[test]
+    fn data_and_every_n_policies_journal_identically() {
+        for (label, policy) in
+            [("data", SyncPolicy::Data), ("every2", SyncPolicy::EveryN(2))]
+        {
+            let path = tmp(&format!("sync_{label}"));
+            let _ = std::fs::remove_file(&path);
+            {
+                let (mut j, _) = Journal::open(&path, policy).unwrap();
+                assert_eq!(j.sync_policy(), policy);
+                for t in 0..3u64 {
+                    j.append(&JournalEvent::Tell { study: 0, trial_id: t, value: t as f64 })
+                        .unwrap();
+                }
+            } // drop syncs the EveryN residue
+            let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
+            assert_eq!(replayed.len(), 3, "policy {label} lost events");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn read_all_returns_the_acknowledged_prefix_and_appends_still_work() {
+        let path = tmp("read_all");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        for t in 0..4u64 {
+            j.append(&JournalEvent::Tell { study: 1, trial_id: t, value: -(t as f64) })
+                .unwrap();
+        }
+        let events = j.read_all().unwrap();
+        assert_eq!(events.len(), 4);
+        for (t, ev) in events.iter().enumerate() {
+            match ev {
+                JournalEvent::Tell { study, trial_id, value } => {
+                    assert_eq!(*study, 1);
+                    assert_eq!(*trial_id, t as u64);
+                    assert_eq!(value.to_bits(), (-(t as f64)).to_bits());
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        // The handle is back at the end: appends keep working.
+        j.append(&JournalEvent::Tell { study: 1, trial_id: 9, value: 9.0 }).unwrap();
+        assert_eq!(j.read_all().unwrap().len(), 5);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_and_torn_appends_truncate_back_to_the_last_valid_record() {
+        use crate::testing::failpoint::{self, FailAction, FailSpec, Trigger};
+        let _guard = failpoint::exclusive();
+        let path = tmp("inject");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
+
+        // An injected pre-write failure: nothing lands on disk.
+        failpoint::configure(
+            "hub::journal::append",
+            FailSpec::new(Trigger::Nth(1), FailAction::Error("disk full".into())),
+        );
+        let e = j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 });
+        assert!(failpoint::is_injected(&e.unwrap_err()));
+
+        // An injected torn write: half a line lands, then is clawed back.
+        failpoint::configure(
+            "hub::journal::torn",
+            FailSpec::new(Trigger::Nth(1), FailAction::Error("power cut".into())),
+        );
+        let e = j.append(&JournalEvent::Tell { study: 0, trial_id: 2, value: 3.0 });
+        assert!(e.unwrap_err().to_string().contains("hub::journal::torn"));
+        assert_eq!(failpoint::fires("hub::journal::torn"), 1);
+
+        // The journal healed in place: the retry appends cleanly.
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 2, value: 3.0 }).unwrap();
+        assert_eq!(j.read_all().unwrap().len(), 2);
+        drop(j);
+        let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(replayed.len(), 2, "only acknowledged events survive");
         let _ = std::fs::remove_file(&path);
     }
 }

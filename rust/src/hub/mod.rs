@@ -44,6 +44,23 @@
 //! excess requests get a typed [`Error::Busy`] instead of queueing
 //! without limit — the backpressure signal the serve tier forwards to
 //! remote clients as a `busy` error frame.
+//!
+//! ## Supervision: crash-only actors
+//!
+//! Every actor message is handled under `catch_unwind`. When a
+//! handler panics, the actor's supervisor records the panic
+//! ([`StudyHub::panic_log`]), marks the study
+//! [`StudyStatus::Restarting`], and rebuilds it in place by replaying
+//! its acknowledged events — from the journal when one is configured,
+//! else from an in-memory segment the actor keeps for itself. Because
+//! suggestions are pure functions of (seed, trial id, history), the
+//! rebuilt study is bitwise identical to one that never crashed
+//! (`rust/tests/chaos.rs`). The in-flight caller gets a typed
+//! [`Error::Restarting`] (snapshot to resync, then retry); each panic
+//! consumes one unit of [`HubConfig::restart_budget`], after which the
+//! study is [`StudyStatus::Crashed`] for good and every request —
+//! including the wire's, as a `crashed` frame — answers with a typed
+//! [`Error::Crashed`] instead of hanging on a dead channel.
 
 pub mod client;
 pub mod json;
@@ -54,7 +71,7 @@ pub mod script;
 pub mod serve;
 
 pub use client::HubClient;
-pub use journal::{Journal, JournalEvent};
+pub use journal::{Journal, JournalEvent, SyncPolicy};
 pub use pool::{AcqPool, OwnedGpEvaluator, PooledEvaluator};
 pub use script::{parse_script, ScriptStudy};
 pub use serve::{ServeConfig, ServeMetricsSnapshot, Server};
@@ -64,8 +81,9 @@ use crate::coordinator::{MetricsSnapshot, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::gp::GpParams;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -190,7 +208,7 @@ pub struct StudySnapshot {
 }
 
 /// Hub-wide configuration.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct HubConfig {
     /// JSONL journal path; `None` = in-memory hub (no durability).
     pub journal: Option<PathBuf>,
@@ -206,6 +224,63 @@ pub struct HubConfig {
     /// serve` sets a finite cap so a slow study sheds load at the wire
     /// instead of accumulating every client's backlog).
     pub mailbox_cap: usize,
+    /// Journal durability level (see [`SyncPolicy`] for what each
+    /// level guarantees); ignored without a journal.
+    pub sync: SyncPolicy,
+    /// How many times a panicking study actor may be restarted (by
+    /// replaying its acknowledged events) before it is marked
+    /// [`StudyStatus::Crashed`] for good. Each supervised panic
+    /// consumes one restart.
+    pub restart_budget: usize,
+}
+
+impl Default for HubConfig {
+    fn default() -> Self {
+        HubConfig {
+            journal: None,
+            pool_workers: 0,
+            service: ServiceConfig::default(),
+            mailbox_cap: 0,
+            sync: SyncPolicy::Os,
+            restart_budget: 3,
+        }
+    }
+}
+
+/// Supervision state of one study actor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StudyStatus {
+    /// Serving normally.
+    Running,
+    /// Mid-rebuild after a panic; requests answer [`Error::Restarting`].
+    Restarting,
+    /// Restart budget exhausted or rebuild failed — terminal. Every
+    /// request answers [`Error::Crashed`].
+    Crashed,
+}
+
+const STATUS_RUNNING: u8 = 0;
+const STATUS_RESTARTING: u8 = 1;
+const STATUS_CRASHED: u8 = 2;
+
+fn status_from_u8(v: u8) -> StudyStatus {
+    match v {
+        STATUS_RUNNING => StudyStatus::Running,
+        STATUS_RESTARTING => StudyStatus::Restarting,
+        _ => StudyStatus::Crashed,
+    }
+}
+
+/// One supervised panic, kept in the hub-wide log
+/// ([`StudyHub::panic_log`]).
+#[derive(Clone, Debug)]
+pub struct PanicRecord {
+    pub study: String,
+    /// The panic payload (stringified).
+    pub message: String,
+    /// 1-based restart attempt this panic consumed; attempts past the
+    /// budget mark the study crashed instead of restarting it.
+    pub attempt: usize,
 }
 
 enum Msg {
@@ -213,7 +288,7 @@ enum Msg {
     Tell { trial_id: u64, value: f64, reply: Sender<Result<()>> },
     ReplayAsk { trials: Vec<(u64, Vec<f64>)>, reply: Sender<Result<()>> },
     ReplayTell { trial_id: u64, value: f64, reply: Sender<Result<()>> },
-    Snapshot { reply: Sender<StudySnapshot> },
+    Snapshot { reply: Sender<Result<StudySnapshot>> },
 }
 
 struct Actor {
@@ -221,6 +296,10 @@ struct Actor {
     tx: Sender<Msg>,
     /// Requests queued-or-running on this actor (mailbox occupancy).
     inflight: Arc<AtomicUsize>,
+    /// Supervision state, shared with the actor thread.
+    status: Arc<AtomicU8>,
+    /// Supervised restarts of this actor, shared with its thread.
+    restarts: Arc<AtomicUsize>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -259,6 +338,8 @@ pub struct StudyHub {
     journal: Option<Arc<Mutex<Journal>>>,
     pool: Option<Arc<AcqPool>>,
     mailbox_cap: usize,
+    restart_budget: usize,
+    panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
 impl StudyHub {
@@ -272,7 +353,7 @@ impl StudyHub {
         };
         let (journal, events) = match &cfg.journal {
             Some(path) => {
-                let (j, evs) = Journal::open(path)?;
+                let (j, evs) = Journal::open(path, cfg.sync)?;
                 (Some(Arc::new(Mutex::new(j))), evs)
             }
             None => (None, Vec::new()),
@@ -282,6 +363,8 @@ impl StudyHub {
             journal,
             pool,
             mailbox_cap: cfg.mailbox_cap,
+            restart_budget: cfg.restart_budget,
+            panic_log: Arc::new(Mutex::new(Vec::new())),
         };
         for ev in events {
             match ev {
@@ -338,14 +421,28 @@ impl StudyHub {
             }
         }
         let (tx, rx) = channel::<Msg>();
-        let pool = self.pool.clone();
-        let journal = self.journal.clone();
         let name = spec.name.clone();
-        let handle = std::thread::spawn(move || actor_loop(idx, spec, pool, journal, rx));
+        let status = Arc::new(AtomicU8::new(STATUS_RUNNING));
+        let restarts = Arc::new(AtomicUsize::new(0));
+        let ctx = ActorContext {
+            idx,
+            spec,
+            pool: self.pool.clone(),
+            journal: self.journal.clone(),
+            status: Arc::clone(&status),
+            restarts: Arc::clone(&restarts),
+            budget: self.restart_budget,
+            panic_log: Arc::clone(&self.panic_log),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("hub-study-{idx}"))
+            .spawn(move || actor_loop(ctx, rx))?;
         actors.push(Actor {
             name,
             tx,
             inflight: Arc::new(AtomicUsize::new(0)),
+            status,
+            restarts,
             handle: Some(handle),
         });
         Ok(StudyId(idx))
@@ -389,7 +486,40 @@ impl StudyHub {
 
     /// Full state copy of one study.
     pub fn snapshot(&self, id: StudyId) -> Result<StudySnapshot> {
-        self.study_request(id, |reply| Msg::Snapshot { reply })
+        self.study_request(id, |reply| Msg::Snapshot { reply })?
+    }
+
+    /// Supervision status of one study.
+    pub fn study_status(&self, id: StudyId) -> Result<StudyStatus> {
+        let actors =
+            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let actor = actors
+            .get(id.0)
+            .ok_or_else(|| Error::Hub(format!("unknown study {id}")))?;
+        Ok(status_from_u8(actor.status.load(Ordering::Acquire)))
+    }
+
+    /// Names of studies that are crashed for good.
+    pub fn crashed_studies(&self) -> Vec<String> {
+        let actors =
+            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        actors
+            .iter()
+            .filter(|a| a.status.load(Ordering::Acquire) == STATUS_CRASHED)
+            .map(|a| a.name.clone())
+            .collect()
+    }
+
+    /// Total supervised restarts across all studies.
+    pub fn total_restarts(&self) -> usize {
+        let actors =
+            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        actors.iter().map(|a| a.restarts.load(Ordering::Acquire)).sum()
+    }
+
+    /// Every supervised panic so far, oldest first.
+    pub fn panic_log(&self) -> Vec<PanicRecord> {
+        self.panic_log.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
     }
 
     /// Shared-pool counters (None when the pool is disabled).
@@ -424,6 +554,23 @@ impl StudyHub {
             let actor = actors
                 .get(id.0)
                 .ok_or_else(|| Error::Hub(format!("unknown study {id}")))?;
+            // Fail fast with the typed supervision state instead of
+            // queueing onto a crashed (or mid-rebuild) actor.
+            match actor.status.load(Ordering::Acquire) {
+                STATUS_CRASHED => {
+                    return Err(Error::Crashed(format!(
+                        "{id} ('{}') has crashed and exhausted its restart budget",
+                        actor.name
+                    )))
+                }
+                STATUS_RESTARTING => {
+                    return Err(Error::Restarting(format!(
+                        "{id} ('{}') is restarting after a panic; retry shortly",
+                        actor.name
+                    )))
+                }
+                _ => {}
+            }
             // Acquire the mailbox slot before sending (not after), so a
             // full mailbox rejects without ever enqueueing.
             let permit = MailboxPermit::acquire(&actor.inflight, self.mailbox_cap, id)?;
@@ -437,177 +584,429 @@ impl StudyHub {
         drop(permit); // slot held until the reply arrived
         out
     }
+
+    /// Join every actor and *report* crashes instead of swallowing
+    /// them: `Err(Error::Hub(...))` lists every study that crashed
+    /// past its restart budget or whose thread died outside the
+    /// supervisor. `Drop` can only log; this is the checked path.
+    pub fn shutdown(mut self) -> Result<()> {
+        let crashed = self.join_actors();
+        if crashed.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Hub(format!(
+                "hub shut down with crashed studies: {}",
+                crashed.join(", ")
+            )))
+        }
+    }
+
+    /// Disconnect and join every actor; returns the crashed study
+    /// names. Idempotent — a second call (e.g. `Drop` running after
+    /// `shutdown`) sees no actors and does nothing.
+    fn join_actors(&mut self) -> Vec<String> {
+        let mut actors =
+            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let taken: Vec<(String, Arc<AtomicU8>, Option<JoinHandle<()>>)> = actors
+            .iter_mut()
+            .map(|a| (a.name.clone(), Arc::clone(&a.status), a.handle.take()))
+            .collect();
+        // Drop the senders: actors drain queued requests (mpsc yields
+        // buffered messages after disconnect) and then exit, so no
+        // accepted work is dropped on shutdown.
+        actors.clear();
+        drop(actors);
+        let mut crashed = Vec::new();
+        for (name, status, handle) in taken {
+            // A supervised crash leaves the thread alive answering
+            // typed errors (join Ok, status Crashed); a panic that
+            // escaped the supervisor kills the thread (join Err).
+            let died = handle.is_some_and(|h| h.join().is_err());
+            if died || status.load(Ordering::Acquire) == STATUS_CRASHED {
+                crashed.push(name);
+            }
+        }
+        crashed
+    }
 }
 
 impl Drop for StudyHub {
     fn drop(&mut self) {
-        // Disconnect every actor's mailbox, then join. Actors drain
-        // queued requests first (mpsc yields buffered messages after
-        // disconnect), so no accepted work is dropped on shutdown.
-        let mut actors =
-            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-        let handles: Vec<_> =
-            actors.iter_mut().filter_map(|a| a.handle.take()).collect();
-        actors.clear(); // drops the senders
-        drop(actors);
-        for h in handles {
-            let _ = h.join();
+        let crashed = self.join_actors();
+        if !crashed.is_empty() {
+            eprintln!(
+                "StudyHub dropped with crashed studies: {} (use StudyHub::shutdown \
+                 to surface this as an error)",
+                crashed.join(", ")
+            );
         }
         // `self.pool` drops after the actors released their Arcs, so
         // AcqPool::drop joins the pool workers cleanly.
     }
 }
 
-/// The per-study actor: owns the `Study` (built here, on this thread,
-/// so thread-bound evaluator factories are fine), the pending set, and
-/// the trial-id counter.
-fn actor_loop(
+/// Everything [`actor_loop`] needs, bundled so `install_study` can
+/// hand it to the thread in one move.
+struct ActorContext {
     idx: usize,
     spec: StudySpec,
     pool: Option<Arc<AcqPool>>,
     journal: Option<Arc<Mutex<Journal>>>,
-    rx: Receiver<Msg>,
-) {
-    let StudySpec { name, seed, liar, tag, config } = spec;
-    let mut study = match Study::try_new(config, seed) {
-        Ok(s) => s,
-        Err(_) => return, // pre-validated in install_study; unreachable
-    };
+    status: Arc<AtomicU8>,
+    restarts: Arc<AtomicUsize>,
+    budget: usize,
+    panic_log: Arc<Mutex<Vec<PanicRecord>>>,
+}
+
+/// Build a study (on the calling thread — evaluator factories may be
+/// thread-bound) and wire it to the shared pool. Used at actor birth
+/// and again by the supervisor's rebuild.
+fn build_study(
+    config: &StudyConfig,
+    seed: u64,
+    pool: &Option<Arc<AcqPool>>,
+) -> Result<Study> {
+    let mut study = Study::try_new(config.clone(), seed)?;
     if let Some(pool) = pool {
+        let pool = Arc::clone(pool);
         study.set_eval_factory(Box::new(move |gp| {
             Ok(Box::new(PooledEvaluator::new(Arc::clone(&pool), Arc::new(gp.clone()))))
         }));
     }
-    let mut pending: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
-    let mut next_id: u64 = 0;
+    Ok(study)
+}
 
-    let journal_append = |journal: &Option<Arc<Mutex<Journal>>>,
-                          ev: JournalEvent|
-     -> Result<()> {
-        if let Some(j) = journal {
-            j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).append(&ev)?;
-        }
-        Ok(())
+/// Stringify a caught panic payload for the log and error messages.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// The per-study actor state: owns the `Study` (built on the actor
+/// thread, so thread-bound evaluator factories are fine), the pending
+/// set, the trial-id counter, and its own supervision bookkeeping.
+struct ActorState {
+    idx: usize,
+    name: String,
+    seed: u64,
+    liar: Liar,
+    tag: String,
+    config: StudyConfig,
+    study: Study,
+    pending: BTreeMap<u64, Vec<f64>>,
+    next_id: u64,
+    pool: Option<Arc<AcqPool>>,
+    journal: Option<Arc<Mutex<Journal>>>,
+    /// This study's own committed events — kept only for journal-less
+    /// hubs, as the supervisor's replay source; journaled hubs rebuild
+    /// from the journal itself (the single source of truth, so a panic
+    /// in the append-to-commit window recovers the journal's view).
+    segment: Vec<JournalEvent>,
+    status: Arc<AtomicU8>,
+    restarts: Arc<AtomicUsize>,
+    budget: usize,
+    panic_log: Arc<Mutex<Vec<PanicRecord>>>,
+}
+
+fn actor_loop(ctx: ActorContext, rx: Receiver<Msg>) {
+    let ActorContext { idx, spec, pool, journal, status, restarts, budget, panic_log } =
+        ctx;
+    let StudySpec { name, seed, liar, tag, config } = spec;
+    let study = match build_study(&config, seed, &pool) {
+        Ok(s) => s,
+        Err(_) => return, // pre-validated in install_study; unreachable
     };
-
+    let mut state = ActorState {
+        idx,
+        name,
+        seed,
+        liar,
+        tag,
+        config,
+        study,
+        pending: BTreeMap::new(),
+        next_id: 0,
+        pool,
+        journal,
+        segment: Vec::new(),
+        status,
+        restarts,
+        budget,
+        panic_log,
+    };
     while let Ok(msg) = rx.recv() {
+        state.handle(msg);
+    }
+}
+
+impl ActorState {
+    /// Handle one message under `catch_unwind`: a panicking handler
+    /// routes through [`ActorState::supervise`] and the caller gets a
+    /// typed error instead of a dead reply channel.
+    fn handle(&mut self, msg: Msg) {
+        if self.status.load(Ordering::Acquire) == STATUS_CRASHED {
+            // Terminal: answer everything with the typed crash error
+            // until the hub drops the mailbox.
+            let e = self.crashed_error();
+            match msg {
+                Msg::Ask { reply, .. } => drop(reply.send(Err(e))),
+                Msg::Tell { reply, .. } => drop(reply.send(Err(e))),
+                Msg::ReplayAsk { reply, .. } => drop(reply.send(Err(e))),
+                Msg::ReplayTell { reply, .. } => drop(reply.send(Err(e))),
+                Msg::Snapshot { reply } => drop(reply.send(Err(e))),
+            }
+            return;
+        }
         match msg {
             Msg::Ask { q, reply } => {
-                let result = (|| -> Result<Vec<Suggestion>> {
-                    // Compute all q candidates first; commit pending +
-                    // journal only when the whole batch succeeded, so a
-                    // failed ask leaves no half-issued trials behind.
-                    //
-                    // Each candidate re-clones the GP and re-appends
-                    // all fantasies (O(q²·n²) per ask) instead of
-                    // growing one fantasy clone incrementally
-                    // (O(q·n²)): q and the pending set are small, MSO
-                    // dominates each candidate anyway, and routing
-                    // every candidate through the one equivalence-
-                    // tested suggest core keeps live asks and journal
-                    // replay trivially in lockstep.
-                    let mut out: Vec<Suggestion> = Vec::with_capacity(q);
-                    for j in 0..q as u64 {
-                        let trial_id = next_id + j;
-                        let fantasies: Vec<(Vec<f64>, f64)> =
-                            if study.trials().is_empty() {
-                                Vec::new()
-                            } else {
-                                let lie = liar.value(study.trials());
-                                pending
-                                    .values()
-                                    .cloned()
-                                    .chain(out.iter().map(|s| s.x.clone()))
-                                    .map(|x| (x, lie))
-                                    .collect()
-                            };
-                        let x = study.suggest_for_trial(trial_id, &fantasies)?;
-                        out.push(Suggestion { trial_id, x });
-                    }
-                    journal_append(
-                        &journal,
-                        JournalEvent::Ask {
-                            study: idx,
-                            trials: out
-                                .iter()
-                                .map(|s| (s.trial_id, s.x.clone()))
-                                .collect(),
-                        },
-                    )?;
-                    for s in &out {
-                        pending.insert(s.trial_id, s.x.clone());
-                    }
-                    next_id += q as u64;
-                    Ok(out)
-                })();
-                let _ = reply.send(result);
+                let r = catch_unwind(AssertUnwindSafe(|| self.do_ask(q)));
+                let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
+                let _ = reply.send(out);
             }
             Msg::Tell { trial_id, value, reply } => {
-                let result = (|| -> Result<()> {
-                    if !pending.contains_key(&trial_id) {
-                        return Err(Error::Hub(format!(
-                            "trial {trial_id} is not pending (unknown or already told)"
-                        )));
-                    }
-                    journal_append(
-                        &journal,
-                        JournalEvent::Tell { study: idx, trial_id, value },
-                    )?;
-                    let x = pending.remove(&trial_id).expect("checked above");
-                    study.observe(x, value);
-                    Ok(())
-                })();
-                let _ = reply.send(result);
+                let r = catch_unwind(AssertUnwindSafe(|| self.do_tell(trial_id, value)));
+                let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
+                let _ = reply.send(out);
             }
             Msg::ReplayAsk { trials, reply } => {
-                let result = (|| -> Result<()> {
-                    for (trial_id, x) in trials {
-                        // Reproduce the fit/warm-start schedule the live
-                        // ask drove, without re-running MSO; the recorded
-                        // suggestion is restored verbatim.
-                        study.sync_model_for_trial(trial_id)?;
-                        if x.len() != study.config().dim {
-                            return Err(Error::Hub(format!(
-                                "journal ask for trial {trial_id} has dim {} != {}",
-                                x.len(),
-                                study.config().dim
-                            )));
-                        }
-                        pending.insert(trial_id, x);
-                        next_id = next_id.max(trial_id + 1);
-                    }
-                    Ok(())
-                })();
-                let _ = reply.send(result);
+                let r = catch_unwind(AssertUnwindSafe(|| self.do_replay_ask(trials)));
+                let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
+                let _ = reply.send(out);
             }
             Msg::ReplayTell { trial_id, value, reply } => {
-                let result = (|| -> Result<()> {
-                    let x = pending.remove(&trial_id).ok_or_else(|| {
-                        Error::Hub(format!(
-                            "journal tells trial {trial_id} that was never asked"
-                        ))
-                    })?;
-                    study.observe(x, value);
-                    Ok(())
-                })();
-                let _ = reply.send(result);
+                let r =
+                    catch_unwind(AssertUnwindSafe(|| self.do_replay_tell(trial_id, value)));
+                let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
+                let _ = reply.send(out);
             }
             Msg::Snapshot { reply } => {
-                let _ = reply.send(StudySnapshot {
-                    name: name.clone(),
-                    seed,
-                    liar,
-                    tag: tag.clone(),
-                    config: study.config().clone(),
-                    trials: study.trials().to_vec(),
-                    pending: pending.iter().map(|(&k, v)| (k, v.clone())).collect(),
-                    next_trial_id: next_id,
-                    stats: study.stats.clone(),
-                    gp_params: study.gp_params(),
-                    best: study.best(),
-                });
+                let r = catch_unwind(AssertUnwindSafe(|| self.make_snapshot()));
+                let out = match r {
+                    Ok(snap) => Ok(snap),
+                    Err(p) => Err(self.supervise(p)),
+                };
+                let _ = reply.send(out);
             }
         }
+    }
+
+    fn do_ask(&mut self, q: usize) -> Result<Vec<Suggestion>> {
+        crate::testing::failpoint::fail_point("hub::actor::ask")?;
+        // Compute all q candidates first; commit pending + journal
+        // only when the whole batch succeeded, so a failed ask leaves
+        // no half-issued trials behind.
+        //
+        // Each candidate re-clones the GP and re-appends all
+        // fantasies (O(q²·n²) per ask) instead of growing one fantasy
+        // clone incrementally (O(q·n²)): q and the pending set are
+        // small, MSO dominates each candidate anyway, and routing
+        // every candidate through the one equivalence-tested suggest
+        // core keeps live asks and journal replay trivially in
+        // lockstep.
+        let mut out: Vec<Suggestion> = Vec::with_capacity(q);
+        for j in 0..q as u64 {
+            let trial_id = self.next_id + j;
+            let fantasies: Vec<(Vec<f64>, f64)> = if self.study.trials().is_empty() {
+                Vec::new()
+            } else {
+                let lie = self.liar.value(self.study.trials());
+                self.pending
+                    .values()
+                    .cloned()
+                    .chain(out.iter().map(|s| s.x.clone()))
+                    .map(|x| (x, lie))
+                    .collect()
+            };
+            let x = self.study.suggest_for_trial(trial_id, &fantasies)?;
+            out.push(Suggestion { trial_id, x });
+        }
+        let ev = JournalEvent::Ask {
+            study: self.idx,
+            trials: out.iter().map(|s| (s.trial_id, s.x.clone())).collect(),
+        };
+        self.journal_append(&ev)?;
+        // `Panic`-only failpoint: the journal already holds the event,
+        // so only the supervisor's replay-from-journal recovers here.
+        crate::testing::failpoint::fail_point("hub::actor::ask::commit")?;
+        self.record(ev);
+        for s in &out {
+            self.pending.insert(s.trial_id, s.x.clone());
+        }
+        self.next_id += q as u64;
+        Ok(out)
+    }
+
+    fn do_tell(&mut self, trial_id: u64, value: f64) -> Result<()> {
+        crate::testing::failpoint::fail_point("hub::actor::tell")?;
+        if !self.pending.contains_key(&trial_id) {
+            return Err(Error::Hub(format!(
+                "trial {trial_id} is not pending (unknown or already told)"
+            )));
+        }
+        let ev = JournalEvent::Tell { study: self.idx, trial_id, value };
+        self.journal_append(&ev)?;
+        // `Panic`-only failpoint (see `hub::actor::ask::commit`).
+        crate::testing::failpoint::fail_point("hub::actor::tell::commit")?;
+        self.record(ev);
+        let x = self.pending.remove(&trial_id).expect("checked above");
+        self.study.observe(x, value);
+        Ok(())
+    }
+
+    fn do_replay_ask(&mut self, trials: Vec<(u64, Vec<f64>)>) -> Result<()> {
+        for (trial_id, x) in trials {
+            // Reproduce the fit/warm-start schedule the live ask
+            // drove, without re-running MSO; the recorded suggestion
+            // is restored verbatim.
+            self.study.sync_model_for_trial(trial_id)?;
+            if x.len() != self.study.config().dim {
+                return Err(Error::Hub(format!(
+                    "journal ask for trial {trial_id} has dim {} != {}",
+                    x.len(),
+                    self.study.config().dim
+                )));
+            }
+            self.pending.insert(trial_id, x);
+            self.next_id = self.next_id.max(trial_id + 1);
+        }
+        Ok(())
+    }
+
+    fn do_replay_tell(&mut self, trial_id: u64, value: f64) -> Result<()> {
+        let x = self.pending.remove(&trial_id).ok_or_else(|| {
+            Error::Hub(format!("journal tells trial {trial_id} that was never asked"))
+        })?;
+        self.study.observe(x, value);
+        Ok(())
+    }
+
+    fn make_snapshot(&mut self) -> StudySnapshot {
+        StudySnapshot {
+            name: self.name.clone(),
+            seed: self.seed,
+            liar: self.liar,
+            tag: self.tag.clone(),
+            config: self.study.config().clone(),
+            trials: self.study.trials().to_vec(),
+            pending: self.pending.iter().map(|(&k, v)| (k, v.clone())).collect(),
+            next_trial_id: self.next_id,
+            stats: self.study.stats.clone(),
+            gp_params: self.study.gp_params(),
+            best: self.study.best(),
+        }
+    }
+
+    fn journal_append(&self, ev: &JournalEvent) -> Result<()> {
+        if let Some(j) = &self.journal {
+            j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).append(ev)?;
+        }
+        Ok(())
+    }
+
+    /// Remember a committed event for the supervisor's rebuild —
+    /// only needed when there is no journal to replay from.
+    fn record(&mut self, ev: JournalEvent) {
+        if self.journal.is_none() {
+            self.segment.push(ev);
+        }
+    }
+
+    fn crashed_error(&self) -> Error {
+        Error::Crashed(format!(
+            "study '{}' has crashed (restart budget {} exhausted); it answers no \
+             further requests",
+            self.name, self.budget
+        ))
+    }
+
+    fn log_panic(&self, cause: &str, attempt: usize) {
+        let mut log =
+            self.panic_log.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        log.push(PanicRecord {
+            study: self.name.clone(),
+            message: cause.to_string(),
+            attempt,
+        });
+    }
+
+    /// A handler panicked: rebuild the study from its replay source
+    /// (journal if configured, else the in-memory segment), consuming
+    /// restart budget. Returns the typed error for the in-flight
+    /// caller — [`Error::Restarting`] (retryable after a snapshot
+    /// resync) when the rebuild succeeded, [`Error::Crashed`]
+    /// (terminal) when the budget is exhausted or the rebuild itself
+    /// failed.
+    fn supervise(&mut self, payload: Box<dyn std::any::Any + Send>) -> Error {
+        let mut cause = panic_message(payload.as_ref());
+        loop {
+            let attempt = self.restarts.load(Ordering::Acquire) + 1;
+            self.log_panic(&cause, attempt);
+            if attempt > self.budget {
+                self.status.store(STATUS_CRASHED, Ordering::Release);
+                return Error::Crashed(format!(
+                    "study '{}' panicked ({cause}) with its restart budget ({}) \
+                     exhausted; the study is offline",
+                    self.name, self.budget
+                ));
+            }
+            self.status.store(STATUS_RESTARTING, Ordering::Release);
+            self.restarts.fetch_add(1, Ordering::AcqRel);
+            match catch_unwind(AssertUnwindSafe(|| self.rebuild())) {
+                Ok(Ok(())) => {
+                    self.status.store(STATUS_RUNNING, Ordering::Release);
+                    return Error::Restarting(format!(
+                        "study '{}' panicked ({cause}); restarted by replay (attempt \
+                         {attempt}/{}) — snapshot to resync pending trials, then retry",
+                        self.name, self.budget
+                    ));
+                }
+                Ok(Err(e)) => {
+                    self.status.store(STATUS_CRASHED, Ordering::Release);
+                    return Error::Crashed(format!(
+                        "study '{}' panicked ({cause}) and could not be rebuilt: {e}",
+                        self.name
+                    ));
+                }
+                Err(p) => {
+                    // The rebuild itself panicked: burn another attempt.
+                    cause = format!("rebuild panicked: {}", panic_message(p.as_ref()));
+                }
+            }
+        }
+    }
+
+    /// Rebuild the study from scratch and replay its acknowledged
+    /// events. Suggestions are pure functions of (seed, trial id,
+    /// history), so the rebuilt state is bitwise identical to one
+    /// that never crashed.
+    fn rebuild(&mut self) -> Result<()> {
+        self.study = build_study(&self.config, self.seed, &self.pool)?;
+        self.pending.clear();
+        self.next_id = 0;
+        let events: Vec<JournalEvent> = match &self.journal {
+            Some(j) => j
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .read_all()?,
+            None => self.segment.clone(),
+        };
+        for ev in events {
+            match ev {
+                JournalEvent::Ask { study, trials } if study == self.idx => {
+                    self.do_replay_ask(trials)?;
+                }
+                JournalEvent::Tell { study, trial_id, value } if study == self.idx => {
+                    self.do_replay_tell(trial_id, value)?;
+                }
+                _ => {}
+            }
+        }
+        Ok(())
     }
 }
 
@@ -724,13 +1123,8 @@ mod tests {
     #[test]
     fn concurrent_studies_share_the_pool() {
         let hub = Arc::new(
-            StudyHub::open(HubConfig {
-                journal: None,
-                pool_workers: 2,
-                service: ServiceConfig::default(),
-                mailbox_cap: 0,
-            })
-            .unwrap(),
+            StudyHub::open(HubConfig { pool_workers: 2, ..HubConfig::default() })
+                .unwrap(),
         );
         let mut ids = Vec::new();
         for s in 0..3 {
@@ -742,14 +1136,19 @@ mod tests {
         let mut joins = Vec::new();
         for &id in &ids {
             let hub = Arc::clone(&hub);
-            joins.push(std::thread::spawn(move || {
-                for _ in 0..8 {
-                    let batch = hub.ask(id, 1).unwrap();
-                    for s in batch {
-                        hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
-                    }
-                }
-            }));
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("test-driver-{}", id.index()))
+                    .spawn(move || {
+                        for _ in 0..8 {
+                            let batch = hub.ask(id, 1).unwrap();
+                            for s in batch {
+                                hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+                            }
+                        }
+                    })
+                    .unwrap(),
+            );
         }
         for j in joins {
             j.join().unwrap();
@@ -783,24 +1182,27 @@ mod tests {
         let done = Arc::new(AtomicBool::new(false));
         let asker = {
             let (hub, done) = (Arc::clone(&hub), Arc::clone(&done));
-            std::thread::spawn(move || {
-                for _ in 0..5 {
-                    // Retry through our own Busy rejections: the prober
-                    // below competes for the same single slot.
-                    loop {
-                        match hub.ask(id, 1) {
-                            Ok(batch) => {
-                                let s = batch.into_iter().next().unwrap();
-                                hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
-                                break;
+            std::thread::Builder::new()
+                .name("test-asker".into())
+                .spawn(move || {
+                    for _ in 0..5 {
+                        // Retry through our own Busy rejections: the prober
+                        // below competes for the same single slot.
+                        loop {
+                            match hub.ask(id, 1) {
+                                Ok(batch) => {
+                                    let s = batch.into_iter().next().unwrap();
+                                    hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+                                    break;
+                                }
+                                Err(Error::Busy(_)) => continue,
+                                Err(e) => panic!("unexpected ask error: {e}"),
                             }
-                            Err(Error::Busy(_)) => continue,
-                            Err(e) => panic!("unexpected ask error: {e}"),
                         }
                     }
-                }
-                done.store(true, Ordering::Release);
-            })
+                    done.store(true, Ordering::Release);
+                })
+                .unwrap()
         };
 
         // Probe with cheap invalid tells while the asker occupies the
@@ -821,5 +1223,101 @@ mod tests {
         assert!(busy > 0, "a full cap-1 mailbox must shed load as Error::Busy");
         // The study itself is unharmed: the rejected probes never enqueued.
         assert_eq!(hub.snapshot(id).unwrap().trials.len(), 9);
+    }
+
+    #[test]
+    fn healthy_hub_shutdown_is_ok_and_statuses_run() {
+        let hub = StudyHub::in_memory();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 3)).unwrap();
+        let s = hub.ask(id, 1).unwrap().remove(0);
+        hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        assert_eq!(hub.study_status(id).unwrap(), StudyStatus::Running);
+        assert!(hub.crashed_studies().is_empty());
+        assert_eq!(hub.total_restarts(), 0);
+        assert!(hub.panic_log().is_empty());
+        hub.shutdown().unwrap();
+    }
+
+    #[test]
+    fn supervised_panic_restarts_by_replay_and_preserves_state() {
+        use crate::testing::failpoint::{self, FailAction, FailSpec, Trigger};
+        let _guard = failpoint::exclusive();
+
+        let hub = StudyHub::in_memory();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 3)).unwrap();
+        for _ in 0..3 {
+            let s = hub.ask(id, 1).unwrap().remove(0);
+            hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        }
+        let before = hub.snapshot(id).unwrap();
+
+        failpoint::configure(
+            "hub::actor::ask",
+            FailSpec::new(Trigger::Nth(1), FailAction::Panic("chaos".into())),
+        );
+        let e = hub.ask(id, 1).unwrap_err();
+        assert!(matches!(e, Error::Restarting(_)), "got {e}");
+        failpoint::clear();
+
+        // Restarted in place: history intact, restart accounted, and
+        // the retried ask succeeds with the same trial id.
+        assert_eq!(hub.study_status(id).unwrap(), StudyStatus::Running);
+        assert_eq!(hub.total_restarts(), 1);
+        let log = hub.panic_log();
+        assert_eq!(log.len(), 1);
+        assert!(log[0].message.contains("injected panic"), "{}", log[0].message);
+        assert_eq!(log[0].attempt, 1);
+        let after = hub.snapshot(id).unwrap();
+        assert_eq!(after.trials.len(), before.trials.len());
+        for (a, b) in after.trials.iter().zip(before.trials.iter()) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        assert_eq!(after.next_trial_id, before.next_trial_id);
+        let s = hub.ask(id, 1).unwrap().remove(0);
+        assert_eq!(s.trial_id, 3);
+        hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        hub.shutdown().unwrap();
+    }
+
+    #[test]
+    fn exhausted_budget_crashes_study_and_shutdown_reports_it() {
+        use crate::testing::failpoint::{self, FailAction, FailSpec, Trigger};
+        let _guard = failpoint::exclusive();
+
+        let hub =
+            StudyHub::open(HubConfig { restart_budget: 1, ..HubConfig::default() })
+                .unwrap();
+        let doomed = hub.create_study(StudySpec::new("doomed", quick_cfg(2), 1)).unwrap();
+        let healthy =
+            hub.create_study(StudySpec::new("healthy", quick_cfg(2), 2)).unwrap();
+
+        failpoint::configure(
+            "hub::actor::ask",
+            FailSpec::new(Trigger::Always, FailAction::Panic("chaos".into())),
+        );
+        // First panic consumes the budget's one restart...
+        assert!(matches!(hub.ask(doomed, 1), Err(Error::Restarting(_))));
+        // ...the second exceeds it: crashed for good.
+        assert!(matches!(hub.ask(doomed, 1), Err(Error::Crashed(_))));
+        failpoint::clear();
+
+        assert_eq!(hub.study_status(doomed).unwrap(), StudyStatus::Crashed);
+        // The hub-side gate answers without touching the dead actor.
+        assert!(matches!(hub.ask(doomed, 1), Err(Error::Crashed(_))));
+        assert!(matches!(hub.snapshot(doomed), Err(Error::Crashed(_))));
+        assert_eq!(hub.crashed_studies(), vec!["doomed".to_string()]);
+
+        // A sibling study on the same hub is untouched.
+        let s = hub.ask(healthy, 1).unwrap().remove(0);
+        hub.tell(healthy, s.trial_id, sphere(&s.x)).unwrap();
+        assert_eq!(hub.study_status(healthy).unwrap(), StudyStatus::Running);
+
+        // Satellite: shutdown must surface the crash, not swallow it.
+        let e = hub.shutdown().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("crashed studies"), "{msg}");
+        assert!(msg.contains("doomed"), "{msg}");
+        assert!(!msg.contains("healthy"), "{msg}");
     }
 }

@@ -95,11 +95,14 @@ impl AcqPool {
         let metrics = Arc::new(Metrics::new());
         let trips = Arc::new(AtomicU64::new(0));
         let handles = (0..n_workers)
-            .map(|_| {
+            .map(|w| {
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
                 let trips = Arc::clone(&trips);
-                std::thread::spawn(move || worker_loop(&rx, cfg, &metrics, &trips))
+                std::thread::Builder::new()
+                    .name(format!("hub-pool-{w}"))
+                    .spawn(move || worker_loop(&rx, cfg, &metrics, &trips))
+                    .expect("spawn pool worker")
             })
             .collect();
         Arc::new(AcqPool {
@@ -126,6 +129,7 @@ impl AcqPool {
         eval: Arc<dyn BatchAcqEvaluator + Send + Sync>,
         points: Vec<Vec<f64>>,
     ) -> Reply {
+        crate::testing::failpoint::fail_point("hub::pool::submit")?;
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = channel();
         {
@@ -216,7 +220,9 @@ fn worker_loop(
                 .flat_map(|&i| jobs[i].points.iter().cloned())
                 .collect();
             let t0 = Instant::now();
-            match jobs[idxs[0]].eval.eval_batch(&all_points) {
+            let result = crate::testing::failpoint::fail_point("hub::pool::oracle")
+                .and_then(|()| jobs[idxs[0]].eval.eval_batch(&all_points));
+            match result {
                 Ok((vals, grads)) => {
                     metrics.record_batch(all_points.len(), t0.elapsed());
                     let mut off = 0;
@@ -322,19 +328,24 @@ mod tests {
         for t in 0..6usize {
             let gp = Arc::clone(&gps[t % 2]);
             let pool = Arc::clone(&pool);
-            joins.push(std::thread::spawn(move || {
-                let pooled = PooledEvaluator::new(pool, Arc::clone(&gp));
-                let reference = NativeGpEvaluator::new(&gp);
-                let mut rng = Pcg64::seeded(100 + t as u64);
-                for _ in 0..20 {
-                    let qs: Vec<Vec<f64>> =
-                        (0..3).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
-                    let (v, g) = pooled.eval_batch(&qs).unwrap();
-                    let (vr, gr) = reference.eval_batch(&qs).unwrap();
-                    assert_eq!(v, vr, "tenant {t} got another tenant's answers");
-                    assert_eq!(g, gr);
-                }
-            }));
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("test-tenant-{t}"))
+                    .spawn(move || {
+                        let pooled = PooledEvaluator::new(pool, Arc::clone(&gp));
+                        let reference = NativeGpEvaluator::new(&gp);
+                        let mut rng = Pcg64::seeded(100 + t as u64);
+                        for _ in 0..20 {
+                            let qs: Vec<Vec<f64>> =
+                                (0..3).map(|_| rng.uniform_vec(2, 0.0, 1.0)).collect();
+                            let (v, g) = pooled.eval_batch(&qs).unwrap();
+                            let (vr, gr) = reference.eval_batch(&qs).unwrap();
+                            assert_eq!(v, vr, "tenant {t} got another tenant's answers");
+                            assert_eq!(g, gr);
+                        }
+                    })
+                    .unwrap(),
+            );
         }
         for j in joins {
             j.join().unwrap();
@@ -364,9 +375,14 @@ mod tests {
         for t in 0..2 {
             let pool = Arc::clone(&pool);
             let eval = Arc::clone(&eval);
-            joins.push(std::thread::spawn(move || {
-                pool.submit(eval, vec![vec![0.1 + 0.2 * t as f64, 0.5]]).unwrap()
-            }));
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("test-submit-{t}"))
+                    .spawn(move || {
+                        pool.submit(eval, vec![vec![0.1 + 0.2 * t as f64, 0.5]]).unwrap()
+                    })
+                    .unwrap(),
+            );
         }
         for j in joins {
             j.join().unwrap();

@@ -59,6 +59,12 @@ pub enum ErrorCode {
     Busy,
     /// The hub is still replaying its journal; retry shortly.
     Starting,
+    /// The study panicked and was restarted by replaying its journal
+    /// segment; snapshot to resync pending trials, then retry.
+    Restarting,
+    /// The study panicked past its restart budget — terminal for that
+    /// study; do not retry.
+    Crashed,
     /// The server is draining after `shutdown` and accepts no new work.
     ShuttingDown,
     /// Unexpected server-side failure.
@@ -75,6 +81,8 @@ impl ErrorCode {
             ErrorCode::UnknownTrial => "unknown_trial",
             ErrorCode::Busy => "busy",
             ErrorCode::Starting => "starting",
+            ErrorCode::Restarting => "restarting",
+            ErrorCode::Crashed => "crashed",
             ErrorCode::ShuttingDown => "shutting_down",
             ErrorCode::Internal => "internal",
         }
@@ -89,10 +97,20 @@ impl ErrorCode {
             "unknown_trial" => ErrorCode::UnknownTrial,
             "busy" => ErrorCode::Busy,
             "starting" => ErrorCode::Starting,
+            "restarting" => ErrorCode::Restarting,
+            "crashed" => ErrorCode::Crashed,
             "shutting_down" => ErrorCode::ShuttingDown,
             "internal" => ErrorCode::Internal,
             _ => return None,
         })
+    }
+
+    /// Whether a client may retry the same request after seeing this
+    /// code. `busy` / `starting` retry as-is; `restarting` should
+    /// snapshot first to resync pending trials. Everything else is
+    /// terminal for the request (and `crashed` for the whole study).
+    pub fn retryable(self) -> bool {
+        matches!(self, ErrorCode::Busy | ErrorCode::Starting | ErrorCode::Restarting)
     }
 }
 
@@ -352,6 +370,8 @@ pub fn snapshot_to_json(s: &StudySnapshot) -> Json {
 pub fn error_code_for(op: &Request, e: &Error) -> ErrorCode {
     match e {
         Error::Busy(_) => ErrorCode::Busy,
+        Error::Crashed(_) => ErrorCode::Crashed,
+        Error::Restarting(_) => ErrorCode::Restarting,
         Error::Config(_) => ErrorCode::BadRequest,
         Error::Hub(_) => match op {
             Request::Create(_) => ErrorCode::BadRequest,
@@ -502,11 +522,42 @@ mod tests {
             ErrorCode::UnknownTrial,
             ErrorCode::Busy,
             ErrorCode::Starting,
+            ErrorCode::Restarting,
+            ErrorCode::Crashed,
             ErrorCode::ShuttingDown,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.token()), Some(code));
         }
         assert_eq!(ErrorCode::parse("nope"), None);
+    }
+
+    #[test]
+    fn retryable_codes_are_exactly_the_transient_ones() {
+        for code in [ErrorCode::Busy, ErrorCode::Starting, ErrorCode::Restarting] {
+            assert!(code.retryable(), "{} should be retryable", code.token());
+        }
+        for code in [
+            ErrorCode::Malformed,
+            ErrorCode::Oversized,
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownStudy,
+            ErrorCode::UnknownTrial,
+            ErrorCode::Crashed,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+        ] {
+            assert!(!code.retryable(), "{} should be terminal", code.token());
+        }
+        // Supervision errors pick their dedicated codes on any op.
+        let op = Request::Ask { study: "s".into(), q: 1 };
+        assert_eq!(
+            error_code_for(&op, &Error::Crashed("x".into())),
+            ErrorCode::Crashed
+        );
+        assert_eq!(
+            error_code_for(&op, &Error::Restarting("x".into())),
+            ErrorCode::Restarting
+        );
     }
 }

@@ -19,9 +19,17 @@
 //!   [`Error::Busy`](crate::error::Error::Busy) which maps to a `busy`
 //!   frame; the request was never enqueued, the client retries.
 //! * **Drain**: a `shutdown` frame (or [`Server::shutdown`]) stops
-//!   accepting, answers requests already in flight, then answers every
-//!   later request with `shutting_down` and closes. The journal needs
-//!   no extra flush — every append was flushed before its reply.
+//!   accepting, answers complete frames already in flight, then answers
+//!   every later request with `shutting_down` and closes. A client
+//!   stalled mid-frame does **not** hold the drain hostage: its torn
+//!   tail is dropped, exactly as the journal drops a torn final line.
+//!   The journal needs no extra flush — every append was made as
+//!   durable as its [`SyncPolicy`](super::SyncPolicy) demands before
+//!   its reply.
+//! * **Supervision**: a panicking study answers `restarting` (retry
+//!   after a snapshot resync) or, past its restart budget, `crashed`
+//!   (terminal) — see the [`super`] module docs. Both are typed frames;
+//!   a study crash never tears down the server or the connection.
 //!
 //! Request counts and a power-of-two latency histogram sit next to the
 //! pool's coalescing metrics in the `metrics` op.
@@ -384,9 +392,12 @@ fn serve_conn(mut stream: TcpStream, shared: &Shared) {
             Err(e)
                 if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
             {
-                // Idle tick: a draining server hangs up once nothing is
-                // buffered; in-flight bytes still get answered above.
-                if shared.draining.load(Ordering::Acquire) && buf.is_empty() {
+                // Idle tick while draining: hang up even if a partial
+                // frame is buffered. The client stalled mid-line — only
+                // complete (answered above) frames count as in-flight
+                // work, and waiting for a newline that may never come
+                // would wedge the drain on this worker forever.
+                if shared.draining.load(Ordering::Acquire) {
                     return;
                 }
             }
@@ -556,8 +567,8 @@ fn metrics_json(shared: &Shared) -> Json {
         .read()
         .unwrap_or_else(std::sync::PoisonError::into_inner)
         .clone();
-    let (ready, pool, journal_events, studies) = match hub {
-        None => (false, Json::Null, 0, Vec::new()),
+    let (ready, pool, journal_events, studies, restarts, crashed) = match hub {
+        None => (false, Json::Null, 0, Vec::new(), 0, Vec::new()),
         Some(h) => {
             let pool = match h.pool_metrics() {
                 None => Json::Null,
@@ -572,7 +583,14 @@ fn metrics_json(shared: &Shared) -> Json {
                     ),
                 ]),
             };
-            (true, pool, h.journal_events(), h.study_names())
+            (
+                true,
+                pool,
+                h.journal_events(),
+                h.study_names(),
+                h.total_restarts(),
+                h.crashed_studies(),
+            )
         }
     };
     Json::Obj(vec![
@@ -583,6 +601,11 @@ fn metrics_json(shared: &Shared) -> Json {
         (
             "studies".into(),
             Json::Arr(studies.into_iter().map(Json::Str).collect()),
+        ),
+        ("restarts".into(), Json::usize(restarts)),
+        (
+            "crashed".into(),
+            Json::Arr(crashed.into_iter().map(Json::Str).collect()),
         ),
     ])
 }

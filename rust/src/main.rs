@@ -16,7 +16,9 @@ use dbe_bo::bo::{Study, StudyConfig};
 use dbe_bo::cli::Args;
 use dbe_bo::config::BenchProtocol;
 use dbe_bo::coordinator::{BatchService, Router, ServiceConfig};
-use dbe_bo::hub::{parse_script, HubConfig, Liar, ScriptStudy, StudyHub, StudySpec};
+use dbe_bo::hub::{
+    parse_script, HubConfig, Liar, ScriptStudy, StudyHub, StudySpec, SyncPolicy,
+};
 use dbe_bo::optim::lbfgsb::LbfgsbOptions;
 use dbe_bo::optim::mso::{run_mso_shared, MsoConfig, MsoStrategy, ParDbe};
 use dbe_bo::repro::{fig_convergence, fig_hessian, table_bench, Solver};
@@ -64,8 +66,10 @@ fn print_usage() {
            dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe|par_dbe] [--par-workers K]\n\
            dbe-bo hub   [--script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
                         [--workers W] [--journal PATH] [--resume] [--liar best|worst|mean]\n\
+                        [--sync os|data|every:N] [--restart-budget R]\n\
            dbe-bo serve [--addr HOST:PORT] [--workers K] [--pool-workers W] [--mailbox-cap C]\n\
                         [--max-frame BYTES] [--journal PATH] [--resume]\n\
+                        [--sync os|data|every:N] [--restart-budget R]\n\
            dbe-bo client [--addr HOST:PORT] [--shutdown | --metrics |\n\
                         --script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
            dbe-bo demo-coordinator --objective NAME --dim D [--workers K] [--studies M]\n\
@@ -425,6 +429,8 @@ fn cmd_hub(args: &Args) -> Result<()> {
             max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 200)?),
         },
         mailbox_cap: args.get_usize("mailbox-cap", 0)?,
+        sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
+        restart_budget: args.get_usize("restart-budget", 3)?,
     };
     println!(
         "hub: {} studies, pool workers {}, journal {}",
@@ -530,6 +536,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // typed `busy` frames instead of absorbing every client's
         // backlog.
         mailbox_cap: args.get_usize("mailbox-cap", 64)?,
+        sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
+        restart_budget: args.get_usize("restart-budget", 3)?,
     };
     let serve_cfg = ServeConfig {
         addr: args.get_str("addr", "127.0.0.1:7341"),
@@ -565,11 +573,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Retry a wire call through `busy` backpressure frames.
+/// Retry a wire call through transient frames: `busy` (backpressure)
+/// and `restarting` (a supervised study is rebuilding from its journal
+/// segment). `crashed` is terminal and passes through.
 fn retry_busy<T>(mut f: impl FnMut() -> Result<T>) -> Result<T> {
     loop {
         match f() {
-            Err(Error::Busy(_)) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            Err(Error::Busy(_)) | Err(Error::Restarting(_)) => {
+                std::thread::sleep(std::time::Duration::from_millis(2))
+            }
             other => return other,
         }
     }

@@ -1,0 +1,324 @@
+//! Deterministic fault injection (zero-dep `failpoints` stand-in).
+//!
+//! A global registry of named *failpoints* compiled into the hub's
+//! I/O and actor paths. Unarmed (the production state) a site costs
+//! one relaxed atomic load; armed, each hit consults a per-point
+//! [`Trigger`] and either passes, returns a typed injected
+//! [`Error::Hub`], or panics (to exercise the actor supervisor).
+//! Probability triggers draw from a per-point [`Pcg64`] seeded at
+//! [`configure`] time, so chaos schedules are reproducible from a
+//! seed.
+//!
+//! ## Instrumented sites
+//!
+//! | name | where | actions that make sense |
+//! |---|---|---|
+//! | `hub::journal::append` | before any journal write | `Error` |
+//! | `hub::journal::torn`   | mid-write: half the line lands, then an error | `Error` (implied) |
+//! | `hub::actor::ask`      | ask handler entry, before any effect | `Error`, `Panic` |
+//! | `hub::actor::tell`     | tell handler entry, before any effect | `Error`, `Panic` |
+//! | `hub::actor::ask::commit`  | after the journal append, before state mutation | `Panic` only |
+//! | `hub::actor::tell::commit` | after the journal append, before state mutation | `Panic` only |
+//! | `hub::pool::submit`    | pool submit entry | `Error` |
+//! | `hub::pool::oracle`    | in place of the batched oracle call | `Error` |
+//!
+//! The `::commit` sites sit in the window where the journal already
+//! holds the event but in-memory state does not. Only `Panic` is
+//! sound there: a panic routes through the supervisor, which rebuilds
+//! the study *from the journal* and so re-applies the event. An
+//! `Error` return would leave the running actor disagreeing with its
+//! own journal.
+//!
+//! The registry is process-global: tests that arm failpoints must
+//! serialize on a shared mutex and [`clear`] when done.
+
+use crate::error::{Error, Result};
+use crate::rng::Pcg64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+/// What an armed failpoint does when its trigger fires.
+#[derive(Clone, Debug)]
+pub enum FailAction {
+    /// Return `Err(Error::Hub("injected failure at <name>: <msg>"))`.
+    Error(String),
+    /// `panic!("injected panic at <name>: <msg>")` — caught by the
+    /// actor supervisor when injected inside a study actor.
+    Panic(String),
+}
+
+/// When an armed failpoint fires, counted in *hits* of that point.
+#[derive(Clone, Copy, Debug)]
+pub enum Trigger {
+    /// Fire on every hit.
+    Always,
+    /// Fire on exactly the n-th hit (1-based), once.
+    Nth(u64),
+    /// Fire on every n-th hit (hits n, 2n, 3n, …).
+    EveryNth(u64),
+    /// Fire with probability `p` per hit, drawn from the point's
+    /// seeded [`Pcg64`] stream.
+    Prob(f64),
+}
+
+/// Full specification of one armed failpoint.
+#[derive(Clone, Debug)]
+pub struct FailSpec {
+    pub trigger: Trigger,
+    pub action: FailAction,
+    /// Stop firing after this many fires (`None` = unbounded).
+    pub max_fires: Option<u64>,
+    /// Seed for the point's RNG (only [`Trigger::Prob`] draws from it).
+    pub seed: u64,
+}
+
+impl FailSpec {
+    /// An unbounded spec with the default seed.
+    pub fn new(trigger: Trigger, action: FailAction) -> Self {
+        FailSpec { trigger, action, max_fires: None, seed: 0 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_max_fires(mut self, n: u64) -> Self {
+        self.max_fires = Some(n);
+        self
+    }
+}
+
+struct PointState {
+    spec: FailSpec,
+    rng: Pcg64,
+    hits: u64,
+    fires: u64,
+}
+
+struct Registry {
+    points: Mutex<HashMap<String, PointState>>,
+    /// Number of armed points — the unarmed fast path is one relaxed
+    /// load of this counter.
+    armed: AtomicUsize,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        points: Mutex::new(HashMap::new()),
+        armed: AtomicUsize::new(0),
+    })
+}
+
+fn lock_points(
+    reg: &'static Registry,
+) -> std::sync::MutexGuard<'static, HashMap<String, PointState>> {
+    // A panicking failpoint (its purpose) must not poison the registry.
+    reg.points.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Arm (or re-arm, resetting counters) the named failpoint.
+pub fn configure(name: &str, spec: FailSpec) {
+    let reg = registry();
+    let mut points = lock_points(reg);
+    let rng = Pcg64::new(spec.seed, 0xFA11);
+    points.insert(name.to_string(), PointState { spec, rng, hits: 0, fires: 0 });
+    reg.armed.store(points.len(), Ordering::Release);
+}
+
+/// Disarm one failpoint (its counters are lost).
+pub fn remove(name: &str) {
+    let reg = registry();
+    let mut points = lock_points(reg);
+    points.remove(name);
+    reg.armed.store(points.len(), Ordering::Release);
+}
+
+/// Disarm everything. Tests call this on entry and exit.
+pub fn clear() {
+    let reg = registry();
+    let mut points = lock_points(reg);
+    points.clear();
+    reg.armed.store(0, Ordering::Release);
+}
+
+/// How many times the named point was evaluated (0 if unarmed).
+pub fn hits(name: &str) -> u64 {
+    lock_points(registry()).get(name).map_or(0, |p| p.hits)
+}
+
+/// How many times the named point actually fired (0 if unarmed).
+pub fn fires(name: &str) -> u64 {
+    lock_points(registry()).get(name).map_or(0, |p| p.fires)
+}
+
+/// Evaluate the named point: `Some(action)` if it fires on this hit.
+///
+/// Sites with custom failure shapes (e.g. the torn journal write)
+/// call this directly; everything else goes through [`fail_point`].
+pub fn triggered(name: &str) -> Option<FailAction> {
+    let reg = registry();
+    if reg.armed.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let mut points = lock_points(reg);
+    let point = points.get_mut(name)?;
+    point.hits += 1;
+    if let Some(max) = point.spec.max_fires {
+        if point.fires >= max {
+            return None;
+        }
+    }
+    let fire = match point.spec.trigger {
+        Trigger::Always => true,
+        Trigger::Nth(n) => point.hits == n,
+        Trigger::EveryNth(n) => n > 0 && point.hits % n == 0,
+        Trigger::Prob(p) => point.rng.uniform() < p,
+    };
+    if fire {
+        point.fires += 1;
+        Some(point.spec.action.clone())
+    } else {
+        None
+    }
+}
+
+/// The standard instrumentation call: no-op unless the named point is
+/// armed and its trigger fires, in which case it errors or panics per
+/// the configured [`FailAction`].
+pub fn fail_point(name: &str) -> Result<()> {
+    match triggered(name) {
+        None => Ok(()),
+        Some(FailAction::Error(m)) => {
+            Err(Error::Hub(format!("injected failure at {name}: {m}")))
+        }
+        Some(FailAction::Panic(m)) => panic!("injected panic at {name}: {m}"),
+    }
+}
+
+/// True if `e` is an injected [`FailAction::Error`] from any point.
+/// Chaos drivers use this to tell injected faults from real bugs. A
+/// `contains` match, not a prefix match: layers like the pool wrap the
+/// message (`Error::Hub(e.to_string())`) before it reaches the caller.
+pub fn is_injected(e: &Error) -> bool {
+    matches!(e, Error::Hub(m) if m.contains("injected failure at "))
+}
+
+/// Guard serializing tests that arm the (process-global) registry;
+/// clears all points on acquire *and* on drop.
+pub struct TestGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Take the process-wide failpoint test lock. Every test that arms a
+/// failpoint must hold this for its whole body: the registry is
+/// global, and a concurrent test's `clear()` would disarm it mid-run.
+pub fn exclusive() -> TestGuard {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(PoisonError::into_inner);
+    clear();
+    TestGuard(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serial() -> TestGuard {
+        exclusive()
+    }
+
+    #[test]
+    fn unarmed_points_pass() {
+        let _g = serial();
+        assert!(fail_point("tests::nope").is_ok());
+        assert_eq!(hits("tests::nope"), 0);
+        clear();
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = serial();
+        configure(
+            "tests::nth",
+            FailSpec::new(Trigger::Nth(3), FailAction::Error("boom".into())),
+        );
+        let results: Vec<bool> =
+            (0..6).map(|_| fail_point("tests::nth").is_err()).collect();
+        assert_eq!(results, vec![false, false, true, false, false, false]);
+        assert_eq!(hits("tests::nth"), 6);
+        assert_eq!(fires("tests::nth"), 1);
+        clear();
+    }
+
+    #[test]
+    fn every_nth_fires_periodically_and_max_fires_caps() {
+        let _g = serial();
+        configure(
+            "tests::every",
+            FailSpec::new(Trigger::EveryNth(2), FailAction::Error("e".into()))
+                .with_max_fires(2),
+        );
+        let fired: usize =
+            (0..10).filter(|_| fail_point("tests::every").is_err()).count();
+        assert_eq!(fired, 2, "max_fires stops the schedule");
+        assert_eq!(hits("tests::every"), 10);
+        clear();
+    }
+
+    #[test]
+    fn prob_schedule_is_reproducible_from_seed() {
+        let _g = serial();
+        let run = |seed: u64| -> Vec<bool> {
+            configure(
+                "tests::prob",
+                FailSpec::new(Trigger::Prob(0.5), FailAction::Error("p".into()))
+                    .with_seed(seed),
+            );
+            (0..32).map(|_| fail_point("tests::prob").is_err()).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, c, "different seed, different schedule");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f));
+        clear();
+    }
+
+    #[test]
+    fn injected_errors_are_typed_and_recognizable() {
+        let _g = serial();
+        configure(
+            "tests::typed",
+            FailSpec::new(Trigger::Always, FailAction::Error("disk on fire".into())),
+        );
+        let e = fail_point("tests::typed").unwrap_err();
+        assert!(is_injected(&e), "{e}");
+        assert!(e.to_string().contains("tests::typed"));
+        assert!(!is_injected(&Error::Hub("real corruption".into())));
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_with_marker() {
+        let _g = serial();
+        configure(
+            "tests::panic",
+            FailSpec::new(Trigger::Always, FailAction::Panic("kaboom".into())),
+        );
+        let r = std::panic::catch_unwind(|| {
+            let _ = fail_point("tests::panic");
+        });
+        clear();
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("injected panic at tests::panic"), "{msg}");
+    }
+}

@@ -4,7 +4,14 @@
 //! performs a simple halving shrink over the generator seed-space scale
 //! and reports the smallest failing case it found. Used by the
 //! coordinator/optimizer invariant tests.
+//!
+//! [`failpoint`] is the deterministic fault-injection registry the
+//! chaos battery (`tests/chaos.rs`) arms to drive the hub through
+//! seeded panic/I/O-fault schedules. It is compiled unconditionally
+//! (integration tests link the library from outside), but unarmed
+//! points cost one relaxed atomic load.
 
+pub mod failpoint;
 mod forall;
 
 pub use forall::{forall, Gen};

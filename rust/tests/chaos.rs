@@ -1,0 +1,549 @@
+//! Chaos battery for the crash-only StudyHub (ISSUE 7).
+//!
+//! Every test arms a seeded, deterministic fault schedule (panics at
+//! actor entry or in the journal-committed window, injected journal
+//! I/O errors, torn writes, pool oracle failures), drives a hub
+//! through it with a retrying client loop, and asserts the recovered
+//! hub is **bitwise equal** to a fault-free twin driven through the
+//! identical protocol: same trials, same pending set, same GP
+//! hyperparameters, same next suggestion. Faults must surface as
+//! typed errors or supervised restarts — never a hang, never an
+//! unhandled panic at the API boundary.
+//!
+//! The failpoint registry is process-global, so every test that arms
+//! it holds [`failpoint::exclusive`] for its whole body.
+
+use dbe_bo::bo::StudyConfig;
+use dbe_bo::hub::json::Json;
+use dbe_bo::hub::{
+    HubClient, HubConfig, Journal, ServeConfig, Server, StudyHub, StudyId,
+    StudySnapshot, StudySpec, SyncPolicy,
+};
+use dbe_bo::optim::mso::MsoStrategy;
+use dbe_bo::testing::failpoint::{
+    self, configure, fires, FailAction, FailSpec, Trigger,
+};
+use dbe_bo::Error;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn quick_cfg() -> StudyConfig {
+    StudyConfig {
+        dim: 2,
+        bounds: vec![(-5.0, 5.0); 2],
+        n_trials: 40,
+        n_startup: 4,
+        restarts: 3,
+        strategy: MsoStrategy::Dbe,
+        fit_every: 2,
+        ..StudyConfig::default()
+    }
+}
+
+fn bowl(x: &[f64]) -> f64 {
+    (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2)
+}
+
+/// A hub sized for chaos: the restart budget is generous because these
+/// tests assert recovery equivalence, not budget exhaustion (the
+/// budget path has its own tests in `hub::tests`).
+fn chaos_cfg(journal: Option<PathBuf>, pool_workers: usize) -> HubConfig {
+    HubConfig { journal, pool_workers, restart_budget: 100, ..HubConfig::default() }
+}
+
+fn temp_journal(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("dbe_bo_chaos_{tag}_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+/// Silence the default panic printer for *injected* panics (their
+/// whole purpose is to be thrown and supervised) while keeping real
+/// panics loud. Restores the default hook on drop.
+struct QuietPanics;
+
+impl QuietPanics {
+    fn install() -> QuietPanics {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .is_some_and(|m| m.contains("injected panic"));
+            if !injected {
+                prev(info);
+            }
+        }));
+        QuietPanics
+    }
+}
+
+impl Drop for QuietPanics {
+    fn drop(&mut self) {
+        let _ = std::panic::take_hook();
+    }
+}
+
+/// Errors a chaos client treats as transient: retry the same request.
+/// Everything else (including `Error::Crashed`) is a test failure.
+fn recoverable(e: &Error) -> bool {
+    matches!(e, Error::Busy(_) | Error::Restarting(_)) || failpoint::is_injected(e)
+}
+
+/// Drive one study to `n_trials` completed trials with ask(q)/tell,
+/// retrying through injected faults and supervised restarts. The
+/// *committed* operation sequence is identical with or without faults
+/// (failed requests commit nothing; a post-commit panic is replayed),
+/// which is what makes the fault-free twin comparison meaningful.
+fn drive(hub: &StudyHub, id: StudyId, n_trials: usize, q: usize) {
+    let mut attempts = 0usize;
+    loop {
+        attempts += 1;
+        assert!(attempts < 2000, "chaos driver did not converge in 2000 attempts");
+        let snap = match hub.snapshot(id) {
+            Ok(s) => s,
+            Err(e) if recoverable(&e) => continue,
+            Err(e) => panic!("snapshot must stay typed under chaos, got: {e}"),
+        };
+        if snap.trials.len() >= n_trials && snap.pending.is_empty() {
+            return;
+        }
+        if let Some((tid, x)) = snap.pending.first().cloned() {
+            match hub.tell(id, tid, bowl(&x)) {
+                Ok(()) => {}
+                Err(e) if recoverable(&e) => {}
+                // A panic *after* the journal commit means the tell
+                // landed; a raced retry then finds it already told.
+                Err(Error::Hub(m)) if m.contains("is not pending") => {}
+                Err(e) => panic!("tell must stay typed under chaos, got: {e}"),
+            }
+            continue;
+        }
+        let remaining = n_trials - snap.trials.len();
+        match hub.ask(id, q.min(remaining)) {
+            Ok(_) => {}
+            Err(e) if recoverable(&e) => {}
+            Err(e) => panic!("ask must stay typed under chaos, got: {e}"),
+        }
+    }
+}
+
+/// The bitwise-equivalence criterion. Deliberately excludes
+/// `StudyStats`: retried requests legitimately redo acquisition work
+/// (e.g. `fantasy_appends` counts attempts, not commits), and the
+/// crash-only contract is about *state*, not effort.
+fn assert_snapshots_bitwise_equal(tag: &str, a: &StudySnapshot, b: &StudySnapshot) {
+    assert_eq!(a.trials.len(), b.trials.len(), "{tag}: trial count");
+    for (i, (ta, tb)) in a.trials.iter().zip(&b.trials).enumerate() {
+        assert_eq!(ta.x, tb.x, "{tag}: trial {i} suggestion differs");
+        assert_eq!(
+            ta.value.to_bits(),
+            tb.value.to_bits(),
+            "{tag}: trial {i} value differs"
+        );
+    }
+    assert_eq!(a.pending, b.pending, "{tag}: pending set differs");
+    assert_eq!(a.next_trial_id, b.next_trial_id, "{tag}: next trial id differs");
+    assert_eq!(
+        a.gp_params.log_len.to_bits(),
+        b.gp_params.log_len.to_bits(),
+        "{tag}: gp log_len differs"
+    );
+    assert_eq!(
+        a.gp_params.log_sf2.to_bits(),
+        b.gp_params.log_sf2.to_bits(),
+        "{tag}: gp log_sf2 differs"
+    );
+    assert_eq!(
+        a.gp_params.log_noise.to_bits(),
+        b.gp_params.log_noise.to_bits(),
+        "{tag}: gp log_noise differs"
+    );
+    match (&a.best, &b.best) {
+        (None, None) => {}
+        (Some(ba), Some(bb)) => {
+            assert_eq!(ba.x, bb.x, "{tag}: best x differs");
+            assert_eq!(ba.value.to_bits(), bb.value.to_bits(), "{tag}: best value");
+            assert_eq!(ba.trial, bb.trial, "{tag}: best trial index");
+        }
+        _ => panic!("{tag}: one side has a best result, the other does not"),
+    }
+}
+
+/// After state equality, the forward-looking criterion: the next ask
+/// must be bitwise the suggestion the fault-free twin produces.
+fn assert_next_ask_bitwise_equal(
+    tag: &str,
+    hub: &StudyHub,
+    id: StudyId,
+    twin: &StudyHub,
+    twin_id: StudyId,
+) {
+    let a = hub.ask(id, 1).unwrap();
+    let b = twin.ask(twin_id, 1).unwrap();
+    assert_eq!(a[0].trial_id, b[0].trial_id, "{tag}: next trial id differs");
+    for (xa, xb) in a[0].x.iter().zip(&b[0].x) {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{tag}: next suggestion differs");
+    }
+}
+
+/// Panics at the ask and tell handlers on a seeded periodic schedule:
+/// every fault is supervised, every restart rebuilds from the actor's
+/// in-memory segment, and the recovered hub is bitwise the fault-free
+/// twin — including a second tenant sharing the hub.
+#[test]
+fn supervised_panic_storm_recovers_bitwise_to_fault_free_twin() {
+    let _guard = failpoint::exclusive();
+    let _quiet = QuietPanics::install();
+    let n = 8;
+
+    // Fault-free twin first (no points armed yet).
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_a = twin.create_study(StudySpec::new("a", quick_cfg(), 11)).unwrap();
+    let twin_b = twin.create_study(StudySpec::new("b", quick_cfg(), 22)).unwrap();
+    drive(&twin, twin_a, n, 2);
+    drive(&twin, twin_b, n, 2);
+
+    let hub = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let a = hub.create_study(StudySpec::new("a", quick_cfg(), 11)).unwrap();
+    let b = hub.create_study(StudySpec::new("b", quick_cfg(), 22)).unwrap();
+    configure(
+        "hub::actor::ask",
+        FailSpec::new(Trigger::EveryNth(3), FailAction::Panic("ask storm".into()))
+            .with_max_fires(2),
+    );
+    configure(
+        "hub::actor::tell",
+        FailSpec::new(Trigger::EveryNth(4), FailAction::Panic("tell storm".into()))
+            .with_max_fires(2),
+    );
+    drive(&hub, a, n, 2);
+    drive(&hub, b, n, 2);
+    failpoint::clear();
+
+    assert!(hub.total_restarts() >= 2, "the storm must actually have fired");
+    assert_eq!(hub.panic_log().len(), hub.total_restarts());
+    assert!(hub.crashed_studies().is_empty(), "generous budget: nobody crashes");
+    for (id, twin_id, tag) in [(a, twin_a, "a"), (b, twin_b, "b")] {
+        let snap = hub.snapshot(id).unwrap();
+        let twin_snap = twin.snapshot(twin_id).unwrap();
+        assert_snapshots_bitwise_equal(tag, &snap, &twin_snap);
+        assert_next_ask_bitwise_equal(tag, &hub, id, &twin, twin_id);
+    }
+}
+
+/// The hardest window: a panic *after* the journal append but *before*
+/// the in-memory mutation. The supervisor must rebuild from the
+/// journal (which already holds the event), not from stale memory —
+/// and a later process restart must agree bitwise.
+#[test]
+fn panic_in_committed_window_replays_from_journal_bitwise() {
+    let _guard = failpoint::exclusive();
+    let _quiet = QuietPanics::install();
+    let n = 8;
+    let path = temp_journal("commit_window");
+
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 42)).unwrap();
+    drive(&twin, twin_id, n, 2);
+
+    let hub = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+    let id = hub.create_study(StudySpec::new("s", quick_cfg(), 42)).unwrap();
+    configure(
+        "hub::actor::ask::commit",
+        FailSpec::new(Trigger::Nth(1), FailAction::Panic("post-commit".into())),
+    );
+    configure(
+        "hub::actor::tell::commit",
+        FailSpec::new(Trigger::Nth(1), FailAction::Panic("post-commit".into())),
+    );
+    drive(&hub, id, n, 2);
+    failpoint::clear();
+
+    assert!(hub.total_restarts() >= 2, "both commit-window panics fired");
+    let snap = hub.snapshot(id).unwrap();
+    let twin_snap = twin.snapshot(twin_id).unwrap();
+    assert_snapshots_bitwise_equal("commit-window", &snap, &twin_snap);
+    assert_next_ask_bitwise_equal("commit-window", &hub, id, &twin, twin_id);
+
+    // Process-level restart on top of the supervised restarts: the
+    // journal alone reconstructs the same state the twin reached.
+    drop(hub);
+    let reopened = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+    let rid = reopened.find_study("s").expect("replayed study");
+    let twin_now = twin.snapshot(twin_id).unwrap();
+    assert_snapshots_bitwise_equal("reopen", &reopened.snapshot(rid).unwrap(), &twin_now);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Injected journal append failures: the append is all-or-nothing, the
+/// caller sees a typed injected error, a retry commits the identical
+/// event, and both the live hub and a reopened one match the twin.
+#[test]
+fn journal_append_faults_are_typed_and_preserve_equivalence() {
+    let _guard = failpoint::exclusive();
+    let n = 8;
+    let path = temp_journal("append_fault");
+
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 7)).unwrap();
+    drive(&twin, twin_id, n, 2);
+
+    let hub = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+    let id = hub.create_study(StudySpec::new("s", quick_cfg(), 7)).unwrap();
+    configure(
+        "hub::journal::append",
+        FailSpec::new(Trigger::EveryNth(4), FailAction::Error("disk hiccup".into()))
+            .with_max_fires(3),
+    );
+    drive(&hub, id, n, 2);
+    let fired = fires("hub::journal::append");
+    failpoint::clear();
+
+    assert!(fired >= 1, "the append fault schedule must have fired");
+    assert_eq!(hub.total_restarts(), 0, "I/O errors are typed, not panics");
+    assert_snapshots_bitwise_equal(
+        "append-fault",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+    assert_next_ask_bitwise_equal("append-fault", &hub, id, &twin, twin_id);
+
+    drop(hub);
+    let reopened = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+    let rid = reopened.find_study("s").unwrap();
+    assert_snapshots_bitwise_equal(
+        "append-fault reopen",
+        &reopened.snapshot(rid).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A torn write — half the line reaches the file, then the error
+/// surfaces — must be clawed back by the journal so the on-disk prefix
+/// stays exactly the acknowledged events, and the retried append lands
+/// cleanly on the healed tail.
+#[test]
+fn torn_journal_write_truncates_back_and_heals() {
+    let _guard = failpoint::exclusive();
+    let n = 6;
+    let path = temp_journal("torn");
+
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 5)).unwrap();
+    drive(&twin, twin_id, n, 1);
+
+    let hub = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+    let id = hub.create_study(StudySpec::new("s", quick_cfg(), 5)).unwrap();
+    configure(
+        "hub::journal::torn",
+        FailSpec::new(Trigger::Nth(2), FailAction::Error("power blip".into())),
+    );
+    drive(&hub, id, n, 1);
+    let fired = fires("hub::journal::torn");
+    failpoint::clear();
+
+    assert_eq!(fired, 1, "exactly one torn write was injected");
+    assert_snapshots_bitwise_equal(
+        "torn",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+
+    // The file parses end to end: the torn half never survived.
+    drop(hub);
+    let (_, events) = Journal::open(&path, SyncPolicy::Os).unwrap();
+    assert_eq!(events.len(), 1 + n + n, "create + n asks + n tells, no debris");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Satellite 4 — the torn-tail property. Truncate a valid journal at
+/// *every* byte offset inside its final record: `Journal::open` must
+/// replay exactly the untorn prefix (never panic, never invent or
+/// drop acknowledged events). A corrupted *terminated* line, by
+/// contrast, is acknowledged state gone bad and must fail the open
+/// with a typed error.
+#[test]
+fn torn_tail_truncation_replays_prefix_at_every_offset() {
+    let _guard = failpoint::exclusive();
+    let n = 5;
+    let path = temp_journal("tail_prop");
+
+    {
+        let hub = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(), 3)).unwrap();
+        drive(&hub, id, n, 2);
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(bytes.last(), Some(&b'\n'), "a clean journal ends terminated");
+    let (_, full_events) = Journal::open(&path, SyncPolicy::Os).unwrap();
+    let full_dbg: Vec<String> =
+        full_events.iter().map(|e| format!("{e:?}")).collect();
+
+    // Byte offset where the final record starts.
+    let tail_start = bytes[..bytes.len() - 1]
+        .iter()
+        .rposition(|&b| b == b'\n')
+        .map_or(0, |p| p + 1);
+    assert!(bytes.len() - tail_start > 2, "final record is non-trivial");
+
+    let cut_path = temp_journal("tail_prop_cut");
+    for cut in tail_start..bytes.len() {
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        let (journal, events) = Journal::open(&cut_path, SyncPolicy::Os)
+            .unwrap_or_else(|e| panic!("cut at byte {cut}: open failed: {e}"));
+        assert_eq!(
+            events.len(),
+            full_dbg.len() - 1,
+            "cut at byte {cut}: exactly the torn tail is dropped"
+        );
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(
+                format!("{ev:?}"),
+                full_dbg[i],
+                "cut at byte {cut}: replayed event {i} diverged"
+            );
+        }
+        drop(journal);
+        // Open healed the file back to the terminated prefix.
+        assert_eq!(
+            std::fs::read(&cut_path).unwrap(),
+            &bytes[..tail_start],
+            "cut at byte {cut}: torn bytes must be truncated away"
+        );
+    }
+
+    // Corrupting a *terminated* line is not a torn tail: typed failure.
+    let mut corrupt = bytes.clone();
+    corrupt[tail_start] = b'#';
+    std::fs::write(&cut_path, &corrupt).unwrap();
+    match Journal::open(&cut_path, SyncPolicy::Os) {
+        Err(Error::Hub(m)) => assert!(m.contains("corrupt"), "typed corruption: {m}"),
+        Err(other) => panic!("expected typed Error::Hub corruption, got {other}"),
+        Ok(_) => panic!("a corrupt terminated line must fail the open"),
+    }
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&cut_path);
+}
+
+/// Faults inside the shared acquisition pool (submit rejection, oracle
+/// batch failure) surface to the asking client as typed injected
+/// errors before anything commits; retries converge to the fault-free
+/// numbers, pool on both sides.
+#[test]
+fn pool_faults_are_typed_and_preserve_equivalence() {
+    let _guard = failpoint::exclusive();
+    let n = 8;
+
+    let twin = StudyHub::open(chaos_cfg(None, 2)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 13)).unwrap();
+    drive(&twin, twin_id, n, 2);
+
+    let hub = StudyHub::open(chaos_cfg(None, 2)).unwrap();
+    let id = hub.create_study(StudySpec::new("s", quick_cfg(), 13)).unwrap();
+    configure(
+        "hub::pool::oracle",
+        FailSpec::new(Trigger::EveryNth(5), FailAction::Error("oracle down".into()))
+            .with_max_fires(2),
+    );
+    configure(
+        "hub::pool::submit",
+        FailSpec::new(Trigger::Nth(3), FailAction::Error("queue full".into())),
+    );
+    drive(&hub, id, n, 2);
+    let oracle_fired = fires("hub::pool::oracle");
+    failpoint::clear();
+
+    assert!(oracle_fired >= 1, "the oracle fault schedule must have fired");
+    let pool = hub.pool_metrics().expect("pool is on");
+    assert!(pool.failures >= 1, "worker-side failures are counted");
+    assert_snapshots_bitwise_equal(
+        "pool",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+    assert_next_ask_bitwise_equal("pool", &hub, id, &twin, twin_id);
+}
+
+/// The wire keeps its shape when a study dies: with a zero restart
+/// budget a supervised panic is terminal, the client reads typed
+/// `crashed` frames (never a hang, never a torn connection), and
+/// metrics keep answering with the crash visible to operators.
+#[test]
+fn wire_level_crash_answers_typed_frames_and_metrics_report_it() {
+    let _guard = failpoint::exclusive();
+    let _quiet = QuietPanics::install();
+
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let hub = Arc::new(
+        StudyHub::open(HubConfig { restart_budget: 0, ..HubConfig::default() })
+            .unwrap(),
+    );
+    server.install_hub(Arc::clone(&hub));
+    let mut client = HubClient::connect(&server.local_addr().to_string()).unwrap();
+    client.create(&StudySpec::new("w", quick_cfg(), 9)).unwrap();
+
+    configure(
+        "hub::actor::ask",
+        FailSpec::new(Trigger::Always, FailAction::Panic("terminal".into())),
+    );
+    let e = client.ask("w", 1).unwrap_err();
+    assert!(
+        matches!(e, Error::Crashed(_)),
+        "budget 0 makes the first panic terminal, got {e:?}"
+    );
+    failpoint::clear();
+
+    // The study stays down (typed, idempotent) but the server lives.
+    let e = client.ask("w", 1).unwrap_err();
+    assert!(matches!(e, Error::Crashed(_)), "crashed is sticky, got {e:?}");
+    let e = client.snapshot("w").unwrap_err();
+    assert!(matches!(e, Error::Crashed(_)), "snapshot gate too, got {e:?}");
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.field("restarts").unwrap().as_u64().unwrap(), 0);
+    let crashed = m.field("crashed").unwrap().as_arr().unwrap();
+    assert_eq!(crashed, &[Json::Str("w".into())], "operators see the casualty");
+    assert_eq!(hub.crashed_studies(), vec!["w".to_string()]);
+
+    client.shutdown().unwrap();
+    drop(client);
+    server.join();
+}
+
+/// Supervision lint (mirrors `no_dense_inverse_on_hot_paths`): every
+/// thread inside the hub must be spawned through a named
+/// `thread::Builder` so panics and joins are attributable. A bare
+/// `std::thread::spawn` would be an unsupervised, anonymous thread.
+/// CI's chaos-smoke job runs the same grep over `rust/src/hub/`.
+#[test]
+fn no_unsupervised_thread_spawn_in_hub_sources() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/hub");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(&dir).expect("rust/src/hub exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            !src.contains("std::thread::spawn"),
+            "{} uses bare std::thread::spawn — use a named thread::Builder \
+             so the supervisor can attribute panics",
+            path.display()
+        );
+        checked += 1;
+    }
+    assert!(checked >= 5, "the hub module tree moved; update this lint");
+}

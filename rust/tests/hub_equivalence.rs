@@ -66,6 +66,7 @@ fn hub_ask1_in_order_bitwise_reproduces_study_run() {
             pool_workers,
             service: ServiceConfig::default(),
             mailbox_cap: 0,
+            ..HubConfig::default()
         })
         .unwrap();
         let id = hub.create_study(StudySpec::new("s", cfg, 42)).unwrap();
@@ -157,6 +158,7 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
             pool_workers: 0,
             service: ServiceConfig::default(),
             mailbox_cap: 0,
+            ..HubConfig::default()
         })
         .unwrap();
         let id = hub.create_study(spec).unwrap();
@@ -178,6 +180,7 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
         pool_workers: 0,
         service: ServiceConfig::default(),
         mailbox_cap: 0,
+        ..HubConfig::default()
     })
     .unwrap();
     let id = hub.find_study("serving").expect("replayed study");
@@ -217,6 +220,7 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
         pool_workers: 0,
         service: ServiceConfig::default(),
         mailbox_cap: 0,
+        ..HubConfig::default()
     })
     .unwrap();
     let id = hub.find_study("serving").unwrap();
@@ -246,6 +250,7 @@ fn multi_study_journal_keeps_tenants_separate() {
             pool_workers: 0,
             service: ServiceConfig::default(),
             mailbox_cap: 0,
+            ..HubConfig::default()
         })
         .unwrap();
         let a = hub.create_study(StudySpec::new("a", quick_cfg(1), 1)).unwrap();
@@ -264,6 +269,7 @@ fn multi_study_journal_keeps_tenants_separate() {
         pool_workers: 0,
         service: ServiceConfig::default(),
         mailbox_cap: 0,
+        ..HubConfig::default()
     })
     .unwrap();
     assert_eq!(hub.n_studies(), 2);
@@ -289,6 +295,7 @@ fn multi_study_journal_keeps_tenants_separate() {
         pool_workers: 0,
         service: ServiceConfig::default(),
         mailbox_cap: 0,
+        ..HubConfig::default()
     })
     .unwrap();
     for (name, expected) in next_asks {
@@ -321,6 +328,7 @@ fn tcp_loopback_bitwise_reproduces_in_process_hub() {
             pool_workers: 2,
             service: ServiceConfig::default(),
             mailbox_cap: 0,
+            ..HubConfig::default()
         };
         let spec = StudySpec::new("eq", quick_cfg(2), 42);
 

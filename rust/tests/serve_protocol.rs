@@ -5,8 +5,9 @@
 //! (`{"id":…,"ok":false,"error":<code>,"message":…}`) and the
 //! connection keeps serving; only EOF, a transport error, or drain
 //! closes it. Covers the malformed corpus, oversized-frame resync,
-//! torn frames, pipelining, unknown study/trial, the journal-replay
-//! `starting` window, and shutdown drain.
+//! torn frames, byte-dribble slow clients, pipelining, unknown
+//! study/trial, the journal-replay `starting` window, shutdown drain,
+//! and a stalled half-frame that must not wedge that drain.
 
 use dbe_bo::bo::StudyConfig;
 use dbe_bo::coordinator::ServiceConfig;
@@ -279,6 +280,7 @@ fn client_during_journal_replay_gets_starting_then_replayed_state() {
         pool_workers: 0,
         service: ServiceConfig::default(),
         mailbox_cap: 0,
+        ..HubConfig::default()
     };
 
     // Session 1: journal a study with six completed trials.
@@ -352,4 +354,67 @@ fn shutdown_frame_drains_idempotently() {
     let m = server.join();
     assert!(m.shutdowns >= 1);
     assert_eq!(m.creates, 1);
+}
+
+/// A client slower than the worker's 25ms read timeout: one byte every
+/// ~10ms means several idle ticks land mid-frame. The worker must
+/// treat each timeout as a keep-alive tick, accumulate the partial
+/// line across ticks, and answer exactly one well-framed reply when
+/// the newline finally arrives.
+#[test]
+fn byte_dribble_across_read_timeouts_gets_a_well_framed_reply() {
+    let (server, addr) = start_server(1 << 20);
+    let mut raw = Raw::connect(&addr);
+
+    let line = b"{\"id\":21,\"op\":\"metrics\"}\n";
+    for &b in line.iter() {
+        raw.send_bytes(&[b]);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let frame = raw.recv();
+    assert_ok(&frame);
+    assert_eq!(frame.field("id").unwrap(), &Json::u64(21));
+
+    // The stream stayed in sync: a fast follow-up is served normally.
+    raw.send_line("{\"id\":22,\"op\":\"metrics\"}");
+    let frame = raw.recv();
+    assert_ok(&frame);
+    assert_eq!(frame.field("id").unwrap(), &Json::u64(22));
+
+    drop(raw);
+    server.shutdown();
+    let m = server.join();
+    assert_eq!(m.requests, 2, "the dribbled frame was counted exactly once");
+}
+
+/// A stalled half-frame must not wedge a drain: the client sends half
+/// a request and then goes silent — no newline, no EOF — while the
+/// operator requests shutdown. Only *complete* frames count as
+/// in-flight work, so the worker hangs up on its next idle tick
+/// instead of waiting forever for a newline that never comes.
+#[test]
+fn stalled_half_frame_does_not_wedge_drain() {
+    let (server, addr) = start_server(1 << 20);
+    let mut raw = Raw::connect(&addr);
+    raw.send_bytes(b"{\"id\":1,\"op\":\"met");
+
+    // Give the worker a tick to buffer the partial line, then drain.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    server.shutdown();
+    let waiter = std::thread::Builder::new()
+        .name("test-drain-waiter".into())
+        .spawn(move || server.join())
+        .unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while !waiter.is_finished() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "drain wedged behind a stalled half-frame"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let m = waiter.join().unwrap();
+    assert_eq!(m.requests, 0, "the stalled half-frame never became a request");
+    // The server hung up without answering the torn frame.
+    raw.expect_eof();
 }
