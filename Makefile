@@ -2,7 +2,7 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke artifacts
+.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke compact-smoke artifacts
 
 build:
 	cargo build --release
@@ -36,6 +36,7 @@ bench:
 	cargo bench --bench gp_fit
 	cargo bench --bench hub_throughput
 	cargo bench --bench serve_throughput
+	cargo bench --bench journal_replay
 
 # Tiny-budget pass over every bench target so bench code can't rot
 # (mirrors CI's bench-smoke job).
@@ -48,6 +49,7 @@ bench-smoke:
 	cargo bench --bench gp_fit -- --smoke
 	cargo bench --bench hub_throughput -- --smoke
 	cargo bench --bench serve_throughput -- --smoke
+	cargo bench --bench journal_replay -- --smoke
 
 # The end-to-end serving smoke: loopback clients drive `dbe-bo serve`
 # over real TCP and emit results/BENCH_serve.json (asks/sec, ask-RTT
@@ -55,6 +57,14 @@ bench-smoke:
 # quiet host for real numbers (EXPERIMENTS.md §E2E "Serve").
 serve-smoke:
 	cargo bench --bench serve_throughput -- --smoke
+
+# The snapshot/compaction smoke: the commit-point chaos test (a crash
+# mid-compaction must leave the old segments authoritative) plus the
+# tiny-budget replay bench that emits results/BENCH_journal.json.
+# Mirrors the compaction steps of CI's chaos-smoke and bench-smoke jobs.
+compact-smoke:
+	cargo test --release --test chaos mid_compaction
+	cargo bench --bench journal_replay -- --smoke
 
 # The fit-engine perf snapshot: emits results/BENCH_gp_fit.json
 # (EXPERIMENTS.md §Perf "GP fit"). Run this on a quiet host for real

@@ -1,0 +1,166 @@
+//! Bench: journal replay wall vs history length, snapshots on and off
+//! (ISSUE 8 acceptance).
+//!
+//! For each history size, drive a single-study hub to completion twice
+//! — once journaling raw events only (`snapshot_every = 0`), once with
+//! periodic snapshot records + segment rotation — then measure
+//! `StudyHub::open` on the resulting journal. Without snapshots the
+//! resume wall grows with the history (every replayed tell re-runs its
+//! GP fit); with snapshots it stays flat in history length, O(events
+//! since the last snapshot).
+//!
+//! Emits `results/BENCH_journal.json` (CI uploads the smoke-mode file
+//! to prove the plumbing; real numbers come from a quiet host).
+//!
+//! Run: `cargo bench --bench journal_replay [-- --smoke]
+//! [-- --snapshot-every N] [-- --out DIR]`.
+
+use dbe_bo::bo::StudyConfig;
+use dbe_bo::cli::Args;
+use dbe_bo::hub::{HubConfig, StudyHub, StudySpec};
+use dbe_bo::optim::lbfgsb::LbfgsbOptions;
+use dbe_bo::optim::mso::MsoStrategy;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Cheap per-trial work so the bench time is dominated by what replay
+/// actually redoes (GP fits), not by acquisition optimization.
+fn cheap_cfg(n_trials: usize) -> StudyConfig {
+    StudyConfig {
+        dim: 2,
+        bounds: vec![(-5.0, 5.0); 2],
+        n_trials,
+        n_startup: 4,
+        restarts: 2,
+        strategy: MsoStrategy::Dbe,
+        lbfgsb: LbfgsbOptions {
+            memory: 10,
+            pgtol: 1e-2,
+            ftol: 0.0,
+            max_iters: 30,
+            max_evals: 5_000,
+        },
+        fit_every: 8,
+        ..StudyConfig::default()
+    }
+}
+
+fn bowl(x: &[f64]) -> f64 {
+    (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2)
+}
+
+/// Remove the journal, its sealed segments, and any compaction debris.
+fn rm_journal(path: &Path) {
+    let name = path.file_name().unwrap().to_string_lossy().to_string();
+    if let Some(dir) = path.parent() {
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                if e.file_name().to_string_lossy().starts_with(&name) {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+    }
+}
+
+fn hub_cfg(path: &Path, snapshot_every: usize) -> HubConfig {
+    HubConfig {
+        journal: Some(path.to_path_buf()),
+        snapshot_every,
+        ..HubConfig::default()
+    }
+}
+
+/// Drive one study for `trials` ask(1)/tell rounds against a fresh
+/// journal; returns the build wall in seconds.
+fn build_journal(path: &Path, trials: usize, snapshot_every: usize) -> f64 {
+    rm_journal(path);
+    let t0 = Instant::now();
+    let hub = StudyHub::open(hub_cfg(path, snapshot_every)).unwrap();
+    let id = hub.create_study(StudySpec::new("s", cheap_cfg(trials), 42)).unwrap();
+    for _ in 0..trials {
+        let s = hub.ask(id, 1).unwrap().remove(0);
+        hub.tell(id, s.trial_id, bowl(&s.x)).unwrap();
+    }
+    drop(hub);
+    t0.elapsed().as_secs_f64()
+}
+
+/// Measure a cold `StudyHub::open` on the journal; returns
+/// (replay seconds, live events, snapshot records).
+fn measure_open(path: &Path, snapshot_every: usize) -> (f64, usize, usize) {
+    let t0 = Instant::now();
+    let hub = StudyHub::open(hub_cfg(path, snapshot_every)).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let events = hub.journal_events();
+    let snapshots = hub.journal_snapshots();
+    assert!(hub.find_study("s").is_some(), "replay must restore the study");
+    (wall, events, snapshots)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let smoke = args.has("smoke");
+    let snapshot_every = args.get_usize("snapshot-every", 8).expect("--snapshot-every");
+    let out_dir = args.get_str("out", "results");
+    // Sizes are target event counts; one trial journals one ask + one
+    // tell, so `trials = size / 2`.
+    let sizes: Vec<usize> = if smoke { vec![10, 40] } else { vec![10, 100, 1000] };
+
+    println!(
+        "# journal_replay — history sizes {sizes:?} events, snapshot_every {snapshot_every}{}",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+
+    let path = PathBuf::from(format!(
+        "{}/bench_journal_replay_{}.jsonl",
+        std::env::temp_dir().display(),
+        std::process::id()
+    ));
+    let mut entries = Vec::new();
+    for &size in &sizes {
+        let trials = (size / 2).max(2);
+        for &every in &[0usize, snapshot_every] {
+            let build_s = build_journal(&path, trials, every);
+            let (replay_s, events, snapshots) = measure_open(&path, every);
+            println!(
+                "events {events:>5} ({trials:>4} trials) snapshots {}: replay {replay_s:>9.4}s (build {build_s:>8.3}s, {snapshots} snapshot records)",
+                if every > 0 { "on " } else { "off" },
+            );
+            entries.push(format!(
+                concat!(
+                    "    {{\"target_events\": {size}, \"trials\": {trials}, ",
+                    "\"snapshot_every\": {every}, \"journal_events\": {events}, ",
+                    "\"snapshot_records\": {snapshots}, \"build_s\": {build:.6}, ",
+                    "\"replay_s\": {replay:.6}}}"
+                ),
+                size = size,
+                trials = trials,
+                every = every,
+                events = events,
+                snapshots = snapshots,
+                build = build_s,
+                replay = replay_s,
+            ));
+        }
+    }
+    rm_journal(&path);
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"journal_replay\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"snapshot_every\": {every},\n",
+            "  \"entries\": [\n{entries}\n  ]\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        every = snapshot_every,
+        entries = entries.join(",\n"),
+    );
+    std::fs::create_dir_all(&out_dir).expect("create out dir");
+    let path = format!("{out_dir}/BENCH_journal.json");
+    std::fs::write(&path, json).expect("write bench json");
+    println!("JSON written to {path}");
+}

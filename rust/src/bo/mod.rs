@@ -8,7 +8,7 @@
 
 mod study;
 
-pub use study::{Study, StudyConfig, StudyStats, Trial};
+pub use study::{Study, StudyConfig, StudyRestore, StudyStats, Trial};
 
 /// Result of an optimization run.
 #[derive(Clone, Debug)]

@@ -183,6 +183,29 @@ impl StudyStats {
 pub type EvalFactory =
     Box<dyn Fn(&GpRegressor) -> crate::Result<Box<dyn BatchAcqEvaluator>>>;
 
+/// The deterministic state a snapshot must capture to re-enter a study
+/// exactly where it left off — the input to [`Study::restore`]. The
+/// fit-schedule position (`last_full_fit_at`, fit counts) and the GP's
+/// training-set size pin the hyperparameter warm-start chain, so the
+/// restored study's next suggestion is bitwise-identical to the
+/// uninterrupted one's without re-running any acquisition optimization.
+#[derive(Clone, Debug)]
+pub struct StudyRestore {
+    /// Completed trials in observation order: `(x_raw, value)`.
+    pub trials: Vec<(Vec<f64>, f64)>,
+    /// Warm-started GP hyperparameters at snapshot time.
+    pub gp_params: GpParams,
+    /// History length at the last full hyperparameter fit.
+    pub last_full_fit_at: Option<usize>,
+    /// Fit counters at snapshot time (the schedule is count-keyed, and
+    /// the equivalence tests compare them).
+    pub fit_full: usize,
+    pub fit_incremental: usize,
+    /// Training-set size of the live GP at snapshot time (`None` when
+    /// no GP had been built yet).
+    pub gp_n_train: Option<usize>,
+}
+
 /// A Bayesian-optimization study over a box-bounded objective.
 pub struct Study {
     cfg: StudyConfig,
@@ -200,6 +223,14 @@ pub struct Study {
     /// q-batch ask (several suggestions at one history state) runs the
     /// boundary fit once, not once per candidate.
     last_full_fit_at: Option<usize>,
+    /// Deferred GP reconstruction from [`Study::restore`]: `(k, m)`
+    /// means "build from the first `k` trials with the snapshot's
+    /// hyperparameters, then absorb trials `k..m` incrementally" —
+    /// exactly the state the snapshotted GP was in (a full fit at `k`
+    /// plus appends to `m`), rebuilt lazily on the first model-based
+    /// call and *not* counted in the fit stats (the snapshot's counts
+    /// already include the original operations).
+    restore_gp: Option<(usize, usize)>,
     pub stats: StudyStats,
     /// Optional evaluator override (e.g. the PJRT artifact path, or the
     /// hub's pooled evaluator).
@@ -225,7 +256,66 @@ impl Study {
             gp_params: GpParams::default(),
             gp: None,
             last_full_fit_at: None,
+            restore_gp: None,
             stats: StudyStats::default(),
+            eval_factory: None,
+        })
+    }
+
+    /// Rebuild a study from snapshotted deterministic state, re-entering
+    /// the exact fit/warm-start position *without* re-running any
+    /// acquisition optimization. A restored study's next suggestion —
+    /// and its subsequent fit schedule and counters — is bitwise
+    /// identical to the uninterrupted study's (the journal-snapshot
+    /// equivalence test in `tests/hub_equivalence.rs` proves this end
+    /// to end).
+    ///
+    /// The GP itself is reconstructed lazily on the first model-based
+    /// call: a fixed-hyperparameter build over the first
+    /// `last_full_fit_at` trials (bitwise-equal to what the original
+    /// full fit produced — `GpRegressor::fit` ends in exactly such a
+    /// build) plus incremental appends up to `gp_n_train`. Neither step
+    /// touches the fit counters; the snapshot's counts already include
+    /// the original operations.
+    pub fn restore(cfg: StudyConfig, seed: u64, state: StudyRestore) -> Result<Self> {
+        cfg.validate()?;
+        let n = state.trials.len();
+        let restore_gp = match state.gp_n_train {
+            None => None,
+            Some(m) => {
+                let k = state.last_full_fit_at.ok_or_else(|| {
+                    Error::Config(
+                        "snapshot has a GP but no last_full_fit_at; a GP only \
+                         exists after a full fit"
+                            .into(),
+                    )
+                })?;
+                if k == 0 || k > m || m > n {
+                    return Err(Error::Config(format!(
+                        "snapshot GP state is inconsistent: last full fit at {k}, \
+                         gp_n_train {m}, {n} trials"
+                    )));
+                }
+                Some((k, m))
+            }
+        };
+        Ok(Study {
+            cfg,
+            seed,
+            trials: state
+                .trials
+                .into_iter()
+                .map(|(x, value)| Trial { x, value })
+                .collect(),
+            gp_params: state.gp_params,
+            gp: None,
+            last_full_fit_at: state.last_full_fit_at,
+            restore_gp,
+            stats: StudyStats {
+                fit_full: state.fit_full,
+                fit_incremental: state.fit_incremental,
+                ..StudyStats::default()
+            },
             eval_factory: None,
         })
     }
@@ -253,6 +343,22 @@ impl Study {
     /// equivalence tests can compare fit-engine state bitwise.
     pub fn gp_params(&self) -> GpParams {
         self.gp_params
+    }
+
+    /// History length at the last full hyperparameter fit — the fit
+    /// schedule position a snapshot must record.
+    pub fn last_full_fit_at(&self) -> Option<usize> {
+        self.last_full_fit_at
+    }
+
+    /// Training-set size of the live GP (`None` before any fit). For a
+    /// freshly restored study this reports the size the rebuilt GP
+    /// *will* have, so snapshotting a restored-but-idle study is exact.
+    pub fn gp_n_train(&self) -> Option<usize> {
+        if let Some((_, m)) = self.restore_gp {
+            return Some(m);
+        }
+        self.gp.as_ref().map(GpRegressor::n_train)
     }
 
     /// Best trial so far.
@@ -390,6 +496,25 @@ impl Study {
     /// no-op when the GP is already synced to the history.
     fn sync_gp(&mut self) -> Result<()> {
         let n = self.trials.len();
+        // Deferred snapshot restore: rebuild the GP to exactly its
+        // snapshotted state — a fixed-params build at the last full
+        // fit plus incremental appends — WITHOUT touching the fit
+        // counters (the snapshot's counts already cover these). The
+        // schedule logic below then treats it like any live GP: any
+        // trials observed since the snapshot are absorbed via the
+        // normal counted paths, matching an uninterrupted run.
+        if let Some((k, m)) = self.restore_gp.take() {
+            let xs_norm: Vec<Vec<f64>> = self.trials[..k]
+                .iter()
+                .map(|t| normalize(&t.x, &self.cfg.bounds))
+                .collect();
+            let ys: Vec<f64> = self.trials[..k].iter().map(|t| t.value).collect();
+            let mut gp = GpRegressor::with_params(xs_norm, &ys, self.gp_params)?;
+            for t in &self.trials[k..m] {
+                gp.refit_append(normalize(&t.x, &self.cfg.bounds), t.value)?;
+            }
+            self.gp = Some(gp);
+        }
         let t_fit = Instant::now();
         let boundary =
             (n.saturating_sub(self.cfg.n_startup)) % self.cfg.fit_every.max(1) == 0;
@@ -722,5 +847,89 @@ mod tests {
         assert_eq!(study.stats.fit_full, 1, "one boundary fit per history state");
         assert_eq!(study.stats.fit_incremental, 0);
         assert_eq!(study.stats.fantasy_appends, 3);
+    }
+
+    // --- snapshot restore ---------------------------------------------------
+
+    #[test]
+    fn restored_study_resumes_the_warm_start_chain_bitwise() {
+        // Snapshot a study mid-fit-interval (GP ahead of the last full
+        // fit via incremental appends), restore, and run both twins
+        // forward: every suggestion, the hyperparameter chain, and the
+        // fit counters must stay bitwise-identical — without the
+        // restore re-running any MSO or counting any fits.
+        let f = |x: &[f64]| (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2);
+        let cfg = StudyConfig { fit_every: 3, ..quick_cfg(2, MsoStrategy::Dbe) };
+        let mut live = Study::new(cfg.clone(), 37);
+        for _ in 0..8 {
+            let x = live.suggest().unwrap();
+            let y = f(&x);
+            live.observe(x, y);
+        }
+        assert!(
+            live.gp_n_train().unwrap() > live.last_full_fit_at().unwrap(),
+            "snapshot point must sit mid-interval to exercise the append replay"
+        );
+
+        let state = StudyRestore {
+            trials: live.trials().iter().map(|t| (t.x.clone(), t.value)).collect(),
+            gp_params: live.gp_params(),
+            last_full_fit_at: live.last_full_fit_at(),
+            fit_full: live.stats.fit_full,
+            fit_incremental: live.stats.fit_incremental,
+            gp_n_train: live.gp_n_train(),
+        };
+        let mut resumed = Study::restore(cfg, 37, state).unwrap();
+
+        for _ in 0..4 {
+            let a = live.suggest().unwrap();
+            let b = resumed.suggest().unwrap();
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "suggestions diverged");
+            }
+            let y = f(&a);
+            live.observe(a.clone(), y);
+            resumed.observe(a, y);
+        }
+        assert_eq!(live.stats.fit_full, resumed.stats.fit_full);
+        assert_eq!(live.stats.fit_incremental, resumed.stats.fit_incremental);
+        let (pa, pb) = (live.gp_params(), resumed.gp_params());
+        assert_eq!(pa.log_len.to_bits(), pb.log_len.to_bits());
+        assert_eq!(pa.log_sf2.to_bits(), pb.log_sf2.to_bits());
+        assert_eq!(pa.log_noise.to_bits(), pb.log_noise.to_bits());
+    }
+
+    #[test]
+    fn restore_rejects_inconsistent_gp_state() {
+        let cfg = quick_cfg(2, MsoStrategy::Dbe);
+        let base = StudyRestore {
+            trials: vec![(vec![0.0, 0.0], 1.0), (vec![1.0, 1.0], 2.0)],
+            gp_params: GpParams::default(),
+            last_full_fit_at: None,
+            fit_full: 0,
+            fit_incremental: 0,
+            gp_n_train: None,
+        };
+        assert!(Study::restore(cfg.clone(), 1, base.clone()).is_ok());
+
+        // A GP without a recorded full fit is impossible.
+        let no_fit = StudyRestore { gp_n_train: Some(2), ..base.clone() };
+        assert!(matches!(Study::restore(cfg.clone(), 1, no_fit), Err(Error::Config(_))));
+
+        // A GP trained past the history is impossible.
+        let too_big = StudyRestore {
+            last_full_fit_at: Some(2),
+            gp_n_train: Some(3),
+            ..base.clone()
+        };
+        assert!(matches!(Study::restore(cfg.clone(), 1, too_big), Err(Error::Config(_))));
+
+        // A GP smaller than its own full fit is impossible.
+        let shrunk = StudyRestore {
+            last_full_fit_at: Some(2),
+            gp_n_train: Some(1),
+            ..base
+        };
+        assert!(matches!(Study::restore(cfg, 1, shrunk), Err(Error::Config(_))));
     }
 }

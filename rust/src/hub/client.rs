@@ -100,6 +100,14 @@ impl HubClient {
         Ok(frame.field("snapshot")?.clone())
     }
 
+    /// Checkpoint every study and compact the server's journal; returns
+    /// the `compacted` stats object (`events_before`, `events_after`,
+    /// `segments_removed`).
+    pub fn compact(&mut self) -> Result<Json> {
+        let frame = self.call(&Request::Compact)?;
+        Ok(frame.field("compacted")?.clone())
+    }
+
     /// Fetch server + pool metrics.
     pub fn metrics(&mut self) -> Result<Json> {
         let frame = self.call(&Request::Metrics)?;

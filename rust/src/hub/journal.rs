@@ -1,10 +1,51 @@
-//! Append-only JSONL journal for the study hub.
+//! Append-only JSONL journal for the study hub, with snapshot records
+//! and segment compaction.
 //!
 //! Every state-changing hub operation (`create` / `ask` / `tell`)
 //! appends one self-contained JSON line. Replaying the lines in order
 //! through [`crate::hub::StudyHub`] reconstructs every study's
 //! history, pending trials, fit schedule, and (per-trial-derived) RNG
-//! stream exactly — see `rust/tests/hub_equivalence.rs`.
+//! stream exactly — see `rust/tests/hub_equivalence.rs`. A periodic
+//! `snapshot` line ([`SnapshotRecord`]) captures one study's complete
+//! deterministic state, so replay starts from the newest snapshot
+//! instead of event zero: resume cost is O(since-last-snapshot), not
+//! O(entire history).
+//!
+//! ## File layout: format header, active tail, sealed segments
+//!
+//! A journal is one **active** file (`journal.jsonl`) plus zero or
+//! more immutable **sealed segments** (`journal.jsonl.seg000001`,
+//! `.seg000002`, …). Files written by this version start with a
+//! format-version header line:
+//!
+//! ```text
+//! {"journal_format":2,"seg_floor":N}
+//! ```
+//!
+//! The header is written exactly once, as line 1 of every brand-new
+//! file (fresh create, rotation, compaction); a header anywhere else
+//! is corruption, and an unknown `journal_format` fails the open with
+//! a typed error (refuse-on-unknown). Headerless files are accepted as
+//! legacy format 1 (single file, no segments) and are never
+//! retro-headered. The active header's `seg_floor` governs segment
+//! liveness: segments with index ≤ floor are dead (ignored on open and
+//! lazily deleted); live segments are read in ascending index order,
+//! then the active tail.
+//!
+//! **Rotation** seals the active file (rename to the next segment
+//! index) and starts a fresh active file; it happens after each
+//! automatic snapshot (`HubConfig::snapshot_every`), so a segment ends
+//! with the snapshot that makes everything before it redundant.
+//!
+//! **Compaction** ([`Journal::compact`]) rewrites the journal to
+//! "every create + the latest snapshot per study + events since" and
+//! swaps it in atomically: write `journal.jsonl.compact.tmp`,
+//! `sync_data`, `rename` over the active path. The new header's
+//! `seg_floor` covers every pre-compaction segment, so the single
+//! rename is the commit point — a crash before it leaves the old
+//! segments authoritative (the `.compact.tmp` debris is ignored), a
+//! crash after it leaves the old segments dead (deleted lazily on the
+//! next open).
 //!
 //! ## Crash discipline and what "durable" actually means
 //!
@@ -28,24 +69,66 @@
 //!
 //! Because every append writes `line\n` as one buffer, an acknowledged
 //! event always ends with its newline — so an *unterminated* final
-//! line is the one legitimate crash artifact (detected on open,
-//! reported, truncated away), while ANY newline-terminated line that
-//! fails to parse — interior or final — is corruption of acknowledged
-//! state and fails the open with a typed [`Error::Hub`]. A *failed*
-//! append (I/O error or injected fault) truncates any partially
-//! written bytes back to the last valid record before surfacing the
-//! error; if even that truncation fails, the journal poisons itself
-//! and every later append fails typed rather than risk gluing a new
-//! line onto a torn tail.
+//! line of the **active** file is the one legitimate crash artifact
+//! (detected on open, reported, truncated away), while ANY
+//! newline-terminated line that fails to parse — interior or final,
+//! empty included — is corruption of acknowledged state and fails the
+//! open with a typed [`Error::Hub`]. Sealed segments are immutable and
+//! were terminated when sealed, so a torn tail *inside a segment* is
+//! also corruption. [`Journal::open`] and [`Journal::read_all`] (the
+//! supervisor's in-place restart path) share one strict decoder, so a
+//! process restart and a supervised restart can never disagree on
+//! whether the same bytes are valid.
+//!
+//! A *failed* append (I/O error or injected fault) truncates any
+//! partially written bytes back to the last valid record before
+//! surfacing the error, and — under any non-`Os` policy — syncs that
+//! truncation, so a power loss right after the claw-back cannot
+//! resurrect the torn bytes. If the restore itself fails, the journal
+//! poisons itself and every later append fails typed rather than risk
+//! gluing a new line onto a torn tail. The torn-tail truncation on
+//! open is synced the same way.
 
 use super::json::Json;
 use super::{Liar, StudySpec};
 use crate::bo::StudyConfig;
 use crate::error::{Error, Result};
+use crate::gp::GpParams;
 use crate::optim::lbfgsb::LbfgsbOptions;
 use crate::optim::mso::MsoStrategy;
 use std::io::{Seek, SeekFrom, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// The journal format this build writes, stamped in the header line of
+/// every new file. Format 1 is the legacy headerless single-file
+/// layout (read-compatible); anything newer than 2 fails the open.
+pub const JOURNAL_FORMAT: u64 = 2;
+
+/// One study's complete deterministic state at a journal position —
+/// everything replay needs to resume *without* re-driving the events
+/// before it. Mirrors [`super::StudySnapshot`] plus the fit-schedule
+/// position (`last_full_fit_at`, fit counts) and the GP's training-set
+/// size, which together pin the warm-start chain bitwise.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotRecord {
+    /// Completed trials in observation order: `(x_raw, value)`.
+    pub trials: Vec<(Vec<f64>, f64)>,
+    /// Pending (asked, untold) trials in id order.
+    pub pending: Vec<(u64, Vec<f64>)>,
+    pub next_trial_id: u64,
+    /// History length at the last full hyperparameter fit.
+    pub last_full_fit_at: Option<usize>,
+    /// Fit-schedule counters (replay reproduces these exactly).
+    pub fit_full: usize,
+    pub fit_incremental: usize,
+    /// Warm-started GP hyperparameters (bitwise).
+    pub gp_params: GpParams,
+    /// Training-set size of the live GP at snapshot time (`None` when
+    /// no GP had been built yet). Restoring to exactly this size —
+    /// not the full history — keeps the incremental-fit schedule and
+    /// its counters bitwise-identical to an uninterrupted run.
+    pub gp_n_train: Option<usize>,
+}
 
 /// One journaled hub operation.
 #[derive(Clone, Debug)]
@@ -56,6 +139,9 @@ pub enum JournalEvent {
     Ask { study: usize, trials: Vec<(u64, Vec<f64>)> },
     /// One tell: the observed value for a pending trial.
     Tell { study: usize, trial_id: u64, value: f64 },
+    /// A checkpoint of one study's complete deterministic state;
+    /// replay starts from the newest one per study.
+    Snapshot { study: usize, snap: SnapshotRecord },
 }
 
 /// Flat field encoding of a [`StudySpec`] — the single codec for specs,
@@ -140,6 +226,109 @@ pub fn spec_from_fields(j: &Json) -> Result<StudySpec> {
     })
 }
 
+/// Encode the trial-id/point pairs shared by `ask` and `snapshot`
+/// pending sets.
+fn pending_to_json(trials: &[(u64, Vec<f64>)]) -> Json {
+    Json::Arr(
+        trials
+            .iter()
+            .map(|(id, x)| {
+                Json::Obj(vec![
+                    ("id".into(), Json::u64(*id)),
+                    ("x".into(), Json::Arr(x.iter().map(|&v| Json::f64(v)).collect())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn pending_from_json(j: &Json) -> Result<Vec<(u64, Vec<f64>)>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            let x = t
+                .field("x")?
+                .as_arr()?
+                .iter()
+                .map(Json::as_f64)
+                .collect::<Result<Vec<_>>>()?;
+            Ok((t.field("id")?.as_u64()?, x))
+        })
+        .collect()
+}
+
+impl SnapshotRecord {
+    fn to_json(&self) -> Json {
+        let trials = Json::Arr(
+            self.trials
+                .iter()
+                .map(|(x, y)| {
+                    Json::Arr(vec![
+                        Json::Arr(x.iter().map(|&v| Json::f64(v)).collect()),
+                        Json::f64(*y),
+                    ])
+                })
+                .collect(),
+        );
+        let gp = Json::Obj(vec![
+            ("log_len".into(), Json::f64(self.gp_params.log_len)),
+            ("log_sf2".into(), Json::f64(self.gp_params.log_sf2)),
+            ("log_noise".into(), Json::f64(self.gp_params.log_noise)),
+        ]);
+        Json::Obj(vec![
+            ("trials".into(), trials),
+            ("pending".into(), pending_to_json(&self.pending)),
+            ("next".into(), Json::u64(self.next_trial_id)),
+            (
+                "last_full_fit_at".into(),
+                self.last_full_fit_at.map_or(Json::Null, Json::usize),
+            ),
+            ("fit_full".into(), Json::usize(self.fit_full)),
+            ("fit_incremental".into(), Json::usize(self.fit_incremental)),
+            ("gp".into(), gp),
+            ("gp_n".into(), self.gp_n_train.map_or(Json::Null, Json::usize)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SnapshotRecord> {
+        let trials = j
+            .field("trials")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                let pair = t.as_arr()?;
+                if pair.len() != 2 {
+                    return Err(Error::Hub("snapshot trial is not an (x, y) pair".into()));
+                }
+                let x =
+                    pair[0].as_arr()?.iter().map(Json::as_f64).collect::<Result<Vec<_>>>()?;
+                Ok((x, pair[1].as_f64()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opt_usize = |j: &Json| -> Result<Option<usize>> {
+            match j {
+                Json::Null => Ok(None),
+                other => Ok(Some(other.as_usize()?)),
+            }
+        };
+        let gp = j.field("gp")?;
+        Ok(SnapshotRecord {
+            trials,
+            pending: pending_from_json(j.field("pending")?)?,
+            next_trial_id: j.field("next")?.as_u64()?,
+            last_full_fit_at: opt_usize(j.field("last_full_fit_at")?)?,
+            fit_full: j.field("fit_full")?.as_usize()?,
+            fit_incremental: j.field("fit_incremental")?.as_usize()?,
+            gp_params: GpParams {
+                log_len: gp.field("log_len")?.as_f64()?,
+                log_sf2: gp.field("log_sf2")?.as_f64()?,
+                log_noise: gp.field("log_noise")?.as_f64()?,
+            },
+            gp_n_train: opt_usize(j.field("gp_n")?)?,
+        })
+    }
+}
+
 impl JournalEvent {
     /// Encode as one JSON object (the journal line, sans newline).
     pub fn encode(&self) -> Json {
@@ -152,33 +341,27 @@ impl JournalEvent {
                 fields.extend(spec_fields(spec));
                 Json::Obj(fields)
             }
-            JournalEvent::Ask { study, trials } => {
-                let trials = Json::Arr(
-                    trials
-                        .iter()
-                        .map(|(id, x)| {
-                            Json::Obj(vec![
-                                ("id".into(), Json::u64(*id)),
-                                (
-                                    "x".into(),
-                                    Json::Arr(x.iter().map(|&v| Json::f64(v)).collect()),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                );
-                Json::Obj(vec![
-                    ("ev".into(), Json::Str("ask".into())),
-                    ("study".into(), Json::usize(*study)),
-                    ("trials".into(), trials),
-                ])
-            }
+            JournalEvent::Ask { study, trials } => Json::Obj(vec![
+                ("ev".into(), Json::Str("ask".into())),
+                ("study".into(), Json::usize(*study)),
+                ("trials".into(), pending_to_json(trials)),
+            ]),
             JournalEvent::Tell { study, trial_id, value } => Json::Obj(vec![
                 ("ev".into(), Json::Str("tell".into())),
                 ("study".into(), Json::usize(*study)),
                 ("trial".into(), Json::u64(*trial_id)),
                 ("value".into(), Json::f64(*value)),
             ]),
+            JournalEvent::Snapshot { study, snap } => {
+                let mut fields = vec![
+                    ("ev".into(), Json::Str("snapshot".into())),
+                    ("study".into(), Json::usize(*study)),
+                ];
+                if let Json::Obj(body) = snap.to_json() {
+                    fields.extend(body);
+                }
+                Json::Obj(fields)
+            }
         }
     }
 
@@ -189,27 +372,18 @@ impl JournalEvent {
                 study: j.field("study")?.as_usize()?,
                 spec: spec_from_fields(j)?,
             }),
-            "ask" => {
-                let trials = j
-                    .field("trials")?
-                    .as_arr()?
-                    .iter()
-                    .map(|t| {
-                        let x = t
-                            .field("x")?
-                            .as_arr()?
-                            .iter()
-                            .map(Json::as_f64)
-                            .collect::<Result<Vec<_>>>()?;
-                        Ok((t.field("id")?.as_u64()?, x))
-                    })
-                    .collect::<Result<Vec<_>>>()?;
-                Ok(JournalEvent::Ask { study: j.field("study")?.as_usize()?, trials })
-            }
+            "ask" => Ok(JournalEvent::Ask {
+                study: j.field("study")?.as_usize()?,
+                trials: pending_from_json(j.field("trials")?)?,
+            }),
             "tell" => Ok(JournalEvent::Tell {
                 study: j.field("study")?.as_usize()?,
                 trial_id: j.field("trial")?.as_u64()?,
                 value: j.field("value")?.as_f64()?,
+            }),
+            "snapshot" => Ok(JournalEvent::Snapshot {
+                study: j.field("study")?.as_usize()?,
+                snap: SnapshotRecord::from_json(j)?,
             }),
             other => Err(Error::Hub(format!("unknown journal event '{other}'"))),
         }
@@ -258,68 +432,226 @@ impl SyncPolicy {
     }
 }
 
-/// The append-only journal file.
+/// What [`Journal::compact`] did, for operators and the wire reply.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactStats {
+    /// Live events before/after the rewrite.
+    pub events_before: usize,
+    pub events_after: usize,
+    /// Sealed segments invalidated by the swap.
+    pub segments_removed: usize,
+    /// On-disk bytes (all live files) before/after.
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+/// One strictly decoded journal byte stream (a segment or the active
+/// tail). This is THE decoder: [`Journal::open`] and
+/// [`Journal::read_all`] both route through it, so the two recovery
+/// paths give identical verdicts on identical bytes by construction.
+struct DecodedStream {
+    /// `seg_floor` from a line-1 format header, if one was present.
+    floor: Option<usize>,
+    events: Vec<JournalEvent>,
+    /// Byte length of the terminated, parseable prefix (header line
+    /// included).
+    valid_len: u64,
+    /// Whether an unterminated final chunk was dropped.
+    torn: bool,
+}
+
+/// Strictly decode one journal file's bytes. Terminated lines must
+/// parse — an empty or malformed terminated line is corruption, even
+/// at the tail. The one tolerated artifact is an *unterminated* final
+/// chunk (a torn write), which is dropped and flagged; the caller
+/// decides whether that is legal for this file (active tail: yes,
+/// sealed segment: no).
+fn decode_stream(raw: &str, origin: &str) -> Result<DecodedStream> {
+    let mut out =
+        DecodedStream { floor: None, events: Vec::new(), valid_len: 0, torn: false };
+    for (i, chunk) in raw.split_inclusive('\n').enumerate() {
+        if !chunk.ends_with('\n') {
+            // An acknowledged append always wrote `line\n`, so an
+            // unterminated line is a torn write — drop it even if it
+            // happens to parse, or the next append would glue onto it.
+            out.torn = true;
+            break;
+        }
+        let text = chunk.trim_end_matches(['\n', '\r']);
+        let parsed = Json::parse(text).and_then(|j| {
+            if let Json::Obj(_) = &j {
+                if j.field("journal_format").is_ok() {
+                    let v = j.field("journal_format")?.as_u64()?;
+                    if v != JOURNAL_FORMAT {
+                        return Err(Error::Hub(format!(
+                            "unsupported journal format {v} (this build reads \
+                             format {JOURNAL_FORMAT} and legacy headerless files)"
+                        )));
+                    }
+                    if i != 0 {
+                        return Err(Error::Hub(
+                            "format header appears after line 1".into(),
+                        ));
+                    }
+                    return Ok(Some(j.field("seg_floor")?.as_usize()?));
+                }
+            }
+            JournalEvent::decode(&j)?;
+            Ok(None)
+        });
+        match parsed {
+            Ok(Some(floor)) => {
+                out.floor = Some(floor);
+                out.valid_len += chunk.len() as u64;
+            }
+            Ok(None) => {
+                // Re-decode outside the closure to move the event out.
+                let j = Json::parse(text).expect("parsed above");
+                out.events.push(JournalEvent::decode(&j).expect("decoded above"));
+                out.valid_len += chunk.len() as u64;
+            }
+            Err(e) => {
+                // A newline-terminated line was fully written and
+                // acknowledged — failing to parse it means corrupted
+                // acknowledged state, even at the tail. Never silently
+                // drop it.
+                return Err(Error::Hub(format!(
+                    "{origin} corrupt at line {}: {e}",
+                    i + 1
+                )));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Path of sealed segment `idx` for the active file at `path`.
+fn seg_path(path: &Path, idx: usize) -> PathBuf {
+    PathBuf::from(format!("{}.seg{idx:06}", path.display()))
+}
+
+/// Scan `path`'s directory for this journal's sealed segments,
+/// returning their indexes sorted ascending.
+fn list_segments(path: &Path) -> Result<Vec<usize>> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let file_name = match path.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n.to_string(),
+        None => return Ok(Vec::new()),
+    };
+    let prefix = format!("{file_name}.seg");
+    let mut idxs = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        for entry in entries.flatten() {
+            if let Some(name) = entry.file_name().to_str() {
+                if let Some(digits) = name.strip_prefix(&prefix) {
+                    if digits.len() == 6 {
+                        if let Ok(idx) = digits.parse::<usize>() {
+                            idxs.push(idx);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    idxs.sort_unstable();
+    Ok(idxs)
+}
+
+/// The append-only journal: sealed segments plus the active tail.
 pub struct Journal {
     file: std::fs::File,
+    path: PathBuf,
+    /// Live events across all segments plus the active tail (replayed
+    /// on open + appended since; compaction resets it to what it kept).
     n_events: usize,
     sync: SyncPolicy,
-    /// Byte length of the terminated, parseable prefix. Invariant
-    /// between appends: the file's physical length equals this.
+    /// Byte length of the active file's terminated, parseable prefix.
+    /// Invariant between appends: the file's physical length equals
+    /// this.
     valid_len: u64,
     since_sync: usize,
     poisoned: bool,
+    /// Highest dead segment index (from the active header; 0 = none).
+    seg_floor: usize,
+    /// Live sealed segments, ascending.
+    live_segs: Vec<usize>,
+    /// Snapshot records live in the journal (replayed + appended).
+    n_snapshots: usize,
+    /// `sync_data` calls made over this handle's lifetime (appends,
+    /// truncation claw-backs, rotation, compaction) — observability
+    /// for the durability contract.
+    syncs: u64,
 }
 
 impl Journal {
     /// Open (or create) the journal at `path`, returning the handle
-    /// positioned for appending plus every event already recorded.
+    /// positioned for appending plus every live event already recorded
+    /// (sealed segments above the floor in ascending order, then the
+    /// active tail).
     ///
-    /// A torn final line is truncated away (with a note on stderr); a
-    /// malformed interior line fails the open.
+    /// A torn final line of the active file is truncated away (with a
+    /// note on stderr, synced under non-`Os` policies); a malformed
+    /// terminated line anywhere — or a torn tail inside a sealed
+    /// segment — fails the open.
     pub fn open(path: &Path, sync: SyncPolicy) -> Result<(Journal, Vec<JournalEvent>)> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        let mut events = Vec::new();
+        let existed = path.exists();
         let mut valid_len: u64 = 0;
-        if path.exists() {
+        let mut floor = 0usize;
+        let mut tail_events = Vec::new();
+        let mut shortened = false;
+        if existed {
             let raw = std::fs::read_to_string(path)?;
-            for (i, chunk) in raw.split_inclusive('\n').enumerate() {
-                if !chunk.ends_with('\n') {
-                    // Only the final chunk can lack its newline; an
-                    // acknowledged append always wrote `line\n`, so an
-                    // unterminated line is a torn write — drop it even
-                    // if it happens to parse, or the next append would
-                    // glue onto it.
-                    eprintln!(
-                        "hub journal {}: dropping unterminated final line",
-                        path.display()
-                    );
-                    break;
-                }
-                let text = chunk.trim_end_matches(['\n', '\r']);
-                let parsed = Json::parse(text).and_then(|j| JournalEvent::decode(&j));
-                match parsed {
-                    Ok(ev) => {
-                        events.push(ev);
-                        valid_len += chunk.len() as u64;
-                    }
-                    Err(e) => {
-                        // A newline-terminated line was fully written
-                        // and acknowledged — failing to parse it means
-                        // corrupted acknowledged state, even at the
-                        // tail. Never silently drop it.
-                        return Err(Error::Hub(format!(
-                            "journal {} corrupt at line {}: {e}",
-                            path.display(),
-                            i + 1
-                        )));
-                    }
-                }
+            let decoded =
+                decode_stream(&raw, &format!("journal {}", path.display()))?;
+            if decoded.torn {
+                eprintln!(
+                    "hub journal {}: dropping unterminated final line",
+                    path.display()
+                );
+                shortened = true;
             }
+            valid_len = decoded.valid_len;
+            floor = decoded.floor.unwrap_or(0);
+            tail_events = decoded.events;
         }
+
+        // Sealed segments: those above the floor are live and replayed
+        // first; those at or below it were invalidated by a compaction
+        // whose rename committed — delete them (best-effort; they are
+        // ignored either way).
+        let mut events = Vec::new();
+        let mut live_segs = Vec::new();
+        let mut max_seg = 0usize;
+        for idx in list_segments(path)? {
+            max_seg = max_seg.max(idx);
+            if idx <= floor {
+                let _ = std::fs::remove_file(seg_path(path, idx));
+                continue;
+            }
+            let sp = seg_path(path, idx);
+            let raw = std::fs::read_to_string(&sp)?;
+            let decoded =
+                decode_stream(&raw, &format!("journal segment {}", sp.display()))?;
+            if decoded.torn {
+                return Err(Error::Hub(format!(
+                    "journal segment {} ends in an unterminated line; sealed \
+                     segments are immutable, so this is corruption",
+                    sp.display()
+                )));
+            }
+            events.extend(decoded.events);
+            live_segs.push(idx);
+        }
+        events.extend(tail_events);
+
         let file = std::fs::OpenOptions::new()
             .create(true)
             .read(true)
@@ -329,22 +661,58 @@ impl Journal {
         let mut file = file;
         file.seek(SeekFrom::End(0))?;
         let n_events = events.len();
-        let journal = Journal {
+        let n_snapshots = events
+            .iter()
+            .filter(|e| matches!(e, JournalEvent::Snapshot { .. }))
+            .count();
+        let mut journal = Journal {
             file,
+            path: path.to_path_buf(),
             n_events,
             sync,
             valid_len,
             since_sync: 0,
             poisoned: false,
+            seg_floor: floor,
+            live_segs,
+            n_snapshots,
+            syncs: 0,
         };
+        if shortened && !matches!(sync, SyncPolicy::Os) {
+            // The heal must be as durable as the appends it protects:
+            // a power loss must not resurrect the torn bytes.
+            journal.sync_now()?;
+        }
+        if !existed {
+            journal.write_header(floor)?;
+        }
+        journal.seg_floor = journal.seg_floor.max(max_seg.min(floor));
         Ok((journal, events))
+    }
+
+    /// Write the format-version header as line 1 of a brand-new active
+    /// file.
+    fn write_header(&mut self, floor: usize) -> Result<()> {
+        let line = format!("{}\n", header_json(floor));
+        self.write_line(line.as_bytes())?;
+        self.valid_len += line.len() as u64;
+        Ok(())
+    }
+
+    /// `sync_data` with the bookkeeping the durability tests observe.
+    fn sync_now(&mut self) -> Result<()> {
+        self.file.sync_data()?;
+        self.syncs += 1;
+        self.since_sync = 0;
+        Ok(())
     }
 
     /// Append one event, making it as durable as the [`SyncPolicy`]
     /// demands before returning. On failure the on-disk prefix is
-    /// truncated back to the last acknowledged record, so a failed
-    /// append is as if it never started (or the journal poisons
-    /// itself if even that restore fails).
+    /// truncated back to the last acknowledged record and that
+    /// truncation is synced per policy, so a failed append is as if it
+    /// never started (or the journal poisons itself if even that
+    /// restore fails).
     pub fn append(&mut self, ev: &JournalEvent) -> Result<()> {
         if self.poisoned {
             return Err(Error::Hub(
@@ -359,13 +727,21 @@ impl Journal {
             Ok(()) => {
                 self.valid_len += line.len() as u64;
                 self.n_events += 1;
+                if matches!(ev, JournalEvent::Snapshot { .. }) {
+                    self.n_snapshots += 1;
+                }
                 Ok(())
             }
             Err(e) => {
                 // Claw back any torn bytes so the on-disk prefix stays
-                // exactly the acknowledged events.
-                let restored = self.file.set_len(self.valid_len).is_ok()
+                // exactly the acknowledged events — and make the
+                // truncation itself durable per policy, or a power
+                // loss could resurrect the torn tail.
+                let mut restored = self.file.set_len(self.valid_len).is_ok()
                     && self.file.seek(SeekFrom::End(0)).is_ok();
+                if restored && !matches!(self.sync, SyncPolicy::Os) {
+                    restored = self.sync_now().is_ok();
+                }
                 if !restored {
                     self.poisoned = true;
                 }
@@ -391,53 +767,203 @@ impl Journal {
         self.file.flush()?;
         match self.sync {
             SyncPolicy::Os => {}
-            SyncPolicy::Data => self.file.sync_data()?,
+            SyncPolicy::Data => self.sync_now()?,
             SyncPolicy::EveryN(n) => {
                 self.since_sync += 1;
                 if self.since_sync >= n.max(1) {
-                    self.file.sync_data()?;
-                    self.since_sync = 0;
+                    self.sync_now()?;
                 }
             }
         }
         Ok(())
     }
 
-    /// Re-read every acknowledged event from the start of the file
-    /// (the valid prefix), leaving the handle positioned for
-    /// appending. The actor supervisor replays this to rebuild a
-    /// crashed study without reopening the hub.
+    /// Seal the active file as the next segment and start a fresh
+    /// active file (same floor). Called after each automatic snapshot
+    /// so every sealed segment ends with the snapshot that supersedes
+    /// it.
+    pub fn rotate(&mut self) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::Hub("journal is poisoned; cannot rotate".into()));
+        }
+        // The sealed bytes must be at least as durable as the appends
+        // claimed to be before the rename makes them immutable.
+        if !matches!(self.sync, SyncPolicy::Os) {
+            self.sync_now()?;
+        }
+        let next = self.live_segs.last().copied().unwrap_or(0).max(self.seg_floor) + 1;
+        let sp = seg_path(&self.path, next);
+        std::fs::rename(&self.path, &sp)?;
+        let file = std::fs::OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(&self.path)?;
+        self.file = file;
+        self.valid_len = 0;
+        self.live_segs.push(next);
+        self.write_header(self.seg_floor)?;
+        Ok(())
+    }
+
+    /// Rewrite the journal to "every create + the latest snapshot per
+    /// study + events since that snapshot" and atomically swap it in:
+    /// write `<path>.compact.tmp`, `sync_data`, `rename` onto the
+    /// active path. The new header's `seg_floor` covers every current
+    /// segment, so the rename is the single commit point — a crash
+    /// before it leaves the old files authoritative, a crash after it
+    /// leaves them dead (deleted here best-effort, or lazily on the
+    /// next open).
+    pub fn compact(&mut self) -> Result<CompactStats> {
+        if self.poisoned {
+            return Err(Error::Hub("journal is poisoned; cannot compact".into()));
+        }
+        let events = self.read_all()?;
+        let bytes_before = self.live_bytes();
+
+        // Latest snapshot index per study.
+        let mut latest: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        for (i, ev) in events.iter().enumerate() {
+            if let JournalEvent::Snapshot { study, .. } = ev {
+                latest.insert(*study, i);
+            }
+        }
+        let kept: Vec<&JournalEvent> = events
+            .iter()
+            .enumerate()
+            .filter(|(i, ev)| match ev {
+                JournalEvent::Create { .. } => true,
+                JournalEvent::Snapshot { study, .. } => latest[study] == *i,
+                JournalEvent::Ask { study, .. } | JournalEvent::Tell { study, .. } => {
+                    latest.get(study).map_or(true, |&s| *i > s)
+                }
+            })
+            .map(|(_, ev)| ev)
+            .collect();
+
+        // Write the replacement, fully durable before the swap.
+        let new_floor = self.live_segs.last().copied().unwrap_or(0).max(self.seg_floor);
+        let tmp = PathBuf::from(format!("{}.compact.tmp", self.path.display()));
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", header_json(new_floor)));
+        for ev in &kept {
+            out.push_str(&format!("{}\n", ev.encode()));
+        }
+        {
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(true)
+                .open(&tmp)?;
+            f.write_all(out.as_bytes())?;
+            f.flush()?;
+            f.sync_data()?;
+            self.syncs += 1;
+        }
+        crate::testing::failpoint::fail_point("hub::journal::compact")?;
+        // The commit point. Until this rename succeeds the old
+        // segments + active file win; after it the new floor kills
+        // them.
+        std::fs::rename(&tmp, &self.path)?;
+
+        let mut file = std::fs::OpenOptions::new().read(true).write(true).open(&self.path)?;
+        file.seek(SeekFrom::End(0))?;
+        self.file = file;
+        self.valid_len = out.len() as u64;
+        self.since_sync = 0;
+        let dead = std::mem::take(&mut self.live_segs);
+        let segments_removed = dead.len();
+        for idx in dead {
+            let _ = std::fs::remove_file(seg_path(&self.path, idx));
+        }
+        self.seg_floor = new_floor;
+        let events_after = kept.len();
+        self.n_events = events_after;
+        self.n_snapshots =
+            kept.iter().filter(|e| matches!(e, JournalEvent::Snapshot { .. })).count();
+        Ok(CompactStats {
+            events_before: events.len(),
+            events_after,
+            segments_removed,
+            bytes_before,
+            bytes_after: out.len() as u64,
+        })
+    }
+
+    /// Total on-disk bytes across the live segments + active tail.
+    fn live_bytes(&self) -> u64 {
+        let segs: u64 = self
+            .live_segs
+            .iter()
+            .filter_map(|&i| std::fs::metadata(seg_path(&self.path, i)).ok())
+            .map(|m| m.len())
+            .sum();
+        segs + self.valid_len
+    }
+
+    /// Re-read every acknowledged event (live segments in order, then
+    /// the active file's valid prefix), leaving the handle positioned
+    /// for appending. The actor supervisor replays this to rebuild a
+    /// crashed study without reopening the hub; it shares
+    /// [`decode_stream`] with [`Journal::open`], so both recovery
+    /// paths accept and reject exactly the same bytes.
     pub fn read_all(&mut self) -> Result<Vec<JournalEvent>> {
         use std::io::Read;
+        let mut events = Vec::new();
+        for &idx in &self.live_segs {
+            let sp = seg_path(&self.path, idx);
+            let raw = std::fs::read_to_string(&sp)?;
+            let decoded =
+                decode_stream(&raw, &format!("journal segment {}", sp.display()))?;
+            if decoded.torn {
+                return Err(Error::Hub(format!(
+                    "journal segment {} ends in an unterminated line; sealed \
+                     segments are immutable, so this is corruption",
+                    sp.display()
+                )));
+            }
+            events.extend(decoded.events);
+        }
         self.file.seek(SeekFrom::Start(0))?;
         let mut raw = String::new();
         self.file.by_ref().take(self.valid_len).read_to_string(&mut raw)?;
         self.file.seek(SeekFrom::End(0))?;
-        let mut events = Vec::new();
-        for (i, chunk) in raw.split_inclusive('\n').enumerate() {
-            let text = chunk.trim_end_matches(['\n', '\r']);
-            if text.is_empty() {
-                continue;
-            }
-            let ev = Json::parse(text)
-                .and_then(|j| JournalEvent::decode(&j))
-                .map_err(|e| {
-                    Error::Hub(format!("journal corrupt at line {}: {e}", i + 1))
-                })?;
-            events.push(ev);
-        }
+        // By the valid_len invariant the tail below is never torn for a
+        // live handle; if the underlying file was swapped externally,
+        // the shared decoder drops a torn tail exactly as `open` would.
+        let decoded = decode_stream(&raw, "journal")?;
+        events.extend(decoded.events);
         Ok(events)
     }
 
-    /// Events recorded over this journal's lifetime (replayed + appended).
+    /// Live events in the journal (replayed on open + appended since;
+    /// compaction resets this to what it kept).
     pub fn n_events(&self) -> usize {
         self.n_events
+    }
+
+    /// Snapshot records currently live in the journal.
+    pub fn n_snapshots(&self) -> usize {
+        self.n_snapshots
+    }
+
+    /// `sync_data` calls made over this handle's lifetime.
+    pub fn n_syncs(&self) -> u64 {
+        self.syncs
     }
 
     /// The durability policy this journal was opened with.
     pub fn sync_policy(&self) -> SyncPolicy {
         self.sync
     }
+}
+
+fn header_json(floor: usize) -> Json {
+    Json::Obj(vec![
+        ("journal_format".into(), Json::u64(JOURNAL_FORMAT)),
+        ("seg_floor".into(), Json::usize(floor)),
+    ])
 }
 
 impl Drop for Journal {
@@ -475,6 +1001,31 @@ mod tests {
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("dbe_bo_journal_{}_{name}", std::process::id()))
+    }
+
+    fn rm(path: &Path) {
+        let _ = std::fs::remove_file(path);
+        for idx in list_segments(path).unwrap() {
+            let _ = std::fs::remove_file(seg_path(path, idx));
+        }
+        let _ = std::fs::remove_file(format!("{}.compact.tmp", path.display()));
+    }
+
+    fn sample_snapshot() -> SnapshotRecord {
+        SnapshotRecord {
+            trials: vec![(vec![0.25, -3.5], 1.75), (vec![-1.0, 2.0], -0.5e-3)],
+            pending: vec![(2, vec![4.0, 4.5])],
+            next_trial_id: 3,
+            last_full_fit_at: Some(2),
+            fit_full: 1,
+            fit_incremental: 0,
+            gp_params: GpParams {
+                log_len: -1.2039728043259361,
+                log_sf2: 0.125,
+                log_noise: -9.2103403719761836,
+            },
+            gp_n_train: Some(2),
+        }
     }
 
     #[test]
@@ -527,9 +1078,35 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_record_round_trips_bitwise() {
+        let snap = sample_snapshot();
+        let ev = JournalEvent::Snapshot { study: 3, snap: snap.clone() };
+        let line = ev.encode().to_string();
+        let back = JournalEvent::decode(&Json::parse(&line).unwrap()).unwrap();
+        let JournalEvent::Snapshot { study, snap: b } = back else {
+            panic!("event kind changed in round trip");
+        };
+        assert_eq!(study, 3);
+        assert_eq!(b.trials.len(), snap.trials.len());
+        for ((xa, ya), (xb, yb)) in snap.trials.iter().zip(&b.trials) {
+            assert_eq!(xa, xb);
+            assert_eq!(ya.to_bits(), yb.to_bits());
+        }
+        assert_eq!(b.pending, snap.pending);
+        assert_eq!(b.next_trial_id, snap.next_trial_id);
+        assert_eq!(b.last_full_fit_at, snap.last_full_fit_at);
+        assert_eq!(b.fit_full, snap.fit_full);
+        assert_eq!(b.fit_incremental, snap.fit_incremental);
+        assert_eq!(b.gp_params.log_len.to_bits(), snap.gp_params.log_len.to_bits());
+        assert_eq!(b.gp_params.log_sf2.to_bits(), snap.gp_params.log_sf2.to_bits());
+        assert_eq!(b.gp_params.log_noise.to_bits(), snap.gp_params.log_noise.to_bits());
+        assert_eq!(b.gp_n_train, snap.gp_n_train);
+    }
+
+    #[test]
     fn journal_file_round_trip_and_reopen() {
         let path = tmp("roundtrip");
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
         {
             let (mut j, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
             assert!(replayed.is_empty());
@@ -543,13 +1120,68 @@ mod tests {
         j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 7.0 }).unwrap();
         let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(replayed.len(), 3);
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
+    }
+
+    #[test]
+    fn fresh_journal_starts_with_a_format_header_legacy_files_are_accepted() {
+        let path = tmp("header");
+        rm(&path);
+        {
+            let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
+        }
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let first = raw.lines().next().unwrap();
+        assert!(
+            first.contains("\"journal_format\""),
+            "line 1 must be the format header, got {first}"
+        );
+
+        // Legacy (headerless) file: accepted, never retro-headered.
+        let legacy = tmp("header_legacy");
+        rm(&legacy);
+        let ev_line = raw.lines().nth(1).unwrap();
+        std::fs::write(&legacy, format!("{ev_line}\n")).unwrap();
+        {
+            let (mut j, replayed) = Journal::open(&legacy, SyncPolicy::Os).unwrap();
+            assert_eq!(replayed.len(), 1);
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 }).unwrap();
+        }
+        let raw2 = std::fs::read_to_string(&legacy).unwrap();
+        assert!(
+            !raw2.contains("journal_format"),
+            "legacy files must not gain a header mid-file"
+        );
+        let (_, replayed) = Journal::open(&legacy, SyncPolicy::Os).unwrap();
+        assert_eq!(replayed.len(), 2);
+
+        // Unknown future format: refuse with a typed error.
+        let future = tmp("header_future");
+        rm(&future);
+        std::fs::write(&future, "{\"journal_format\":99,\"seg_floor\":0}\n").unwrap();
+        match Journal::open(&future, SyncPolicy::Os) {
+            Err(Error::Hub(m)) => {
+                assert!(m.contains("unsupported journal format 99"), "{m}")
+            }
+            other => panic!("unknown format must fail typed, got {other:?}"),
+        }
+        // A header after line 1 is corruption.
+        std::fs::write(
+            &future,
+            format!("{ev_line}\n{{\"journal_format\":2,\"seg_floor\":0}}\n"),
+        )
+        .unwrap();
+        assert!(matches!(Journal::open(&future, SyncPolicy::Os), Err(Error::Hub(_))));
+        rm(&path);
+        rm(&legacy);
+        rm(&future);
     }
 
     #[test]
     fn torn_final_line_is_truncated_interior_corruption_fails() {
         let path = tmp("torn");
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
         {
             let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
             j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 }).unwrap();
@@ -568,7 +1200,7 @@ mod tests {
 
         // Interior corruption is a hard error...
         let good = std::fs::read_to_string(&path).unwrap();
-        let corrupted = format!("not json at all\n{good}");
+        let corrupted = good.replacen("{\"ev\"", "not json {\"ev\"", 1);
         std::fs::write(&path, corrupted).unwrap();
         assert!(matches!(Journal::open(&path, SyncPolicy::Os), Err(Error::Hub(_))));
 
@@ -577,7 +1209,85 @@ mod tests {
         // acknowledgment), so it must never be silently dropped.
         std::fs::write(&path, format!("{good}not json either\n")).unwrap();
         assert!(matches!(Journal::open(&path, SyncPolicy::Os), Err(Error::Hub(_))));
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
+    }
+
+    /// Satellite 1 regression: an EMPTY terminated line is corruption
+    /// in BOTH recovery paths. Before the shared decoder, `read_all`
+    /// silently skipped it while `open` hard-errored — a supervised
+    /// restart and a process restart disagreed on the same bytes.
+    #[test]
+    fn open_and_read_all_agree_that_empty_terminated_lines_are_corrupt() {
+        let path = tmp("empty_line");
+        rm(&path);
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
+        let tell_line = format!(
+            "{}\n",
+            JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 }.encode()
+        );
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 }).unwrap();
+        assert_eq!(j.read_all().unwrap().len(), 2);
+
+        // Overwrite the second event line with same-length newlines —
+        // valid_len is unchanged, so `read_all` sees the same bytes a
+        // fresh `open` would.
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let blank = "\n".repeat(tell_line.len());
+        let mangled = raw.replacen(&tell_line, &blank, 1);
+        assert_ne!(mangled, raw, "the tell line must be present to mangle");
+        std::fs::write(&path, &mangled).unwrap();
+
+        let live = j.read_all();
+        let reopened = Journal::open(&path, SyncPolicy::Os).map(|_| ());
+        assert!(
+            matches!(live, Err(Error::Hub(ref m)) if m.contains("corrupt")),
+            "read_all must reject the empty terminated line, got {live:?}"
+        );
+        assert!(
+            matches!(reopened, Err(Error::Hub(ref m)) if m.contains("corrupt")),
+            "open must agree with read_all"
+        );
+        rm(&path);
+    }
+
+    /// Satellite 2 regression: truncation claw-backs are synced under
+    /// non-`Os` policies — both the failed-append claw-back and the
+    /// torn-tail heal on open.
+    #[test]
+    fn truncations_are_synced_per_policy() {
+        use crate::testing::failpoint::{self, FailAction, FailSpec, Trigger};
+        let _guard = failpoint::exclusive();
+        let path = tmp("sync_truncate");
+        rm(&path);
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Data).unwrap();
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
+        let before = j.n_syncs();
+
+        failpoint::configure(
+            "hub::journal::torn",
+            FailSpec::new(Trigger::Nth(1), FailAction::Error("power cut".into())),
+        );
+        let e = j.append(&JournalEvent::Tell { study: 0, trial_id: 1, value: 2.0 });
+        assert!(e.is_err());
+        failpoint::clear();
+        assert!(
+            j.n_syncs() > before,
+            "the failed-append claw-back must sync its truncation under Data \
+             ({} syncs before, {} after)",
+            before,
+            j.n_syncs()
+        );
+        drop(j);
+
+        // Torn-tail heal on open syncs too.
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        raw.push_str("{\"ev\":\"tell\",\"stu");
+        std::fs::write(&path, &raw).unwrap();
+        let (j, replayed) = Journal::open(&path, SyncPolicy::Data).unwrap();
+        assert_eq!(replayed.len(), 1);
+        assert!(j.n_syncs() >= 1, "the torn-tail heal must sync under Data");
+        rm(&path);
     }
 
     #[test]
@@ -597,7 +1307,7 @@ mod tests {
             [("data", SyncPolicy::Data), ("every2", SyncPolicy::EveryN(2))]
         {
             let path = tmp(&format!("sync_{label}"));
-            let _ = std::fs::remove_file(&path);
+            rm(&path);
             {
                 let (mut j, _) = Journal::open(&path, policy).unwrap();
                 assert_eq!(j.sync_policy(), policy);
@@ -608,14 +1318,14 @@ mod tests {
             } // drop syncs the EveryN residue
             let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
             assert_eq!(replayed.len(), 3, "policy {label} lost events");
-            let _ = std::fs::remove_file(&path);
+            rm(&path);
         }
     }
 
     #[test]
     fn read_all_returns_the_acknowledged_prefix_and_appends_still_work() {
         let path = tmp("read_all");
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
         let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
         for t in 0..4u64 {
             j.append(&JournalEvent::Tell { study: 1, trial_id: t, value: -(t as f64) })
@@ -636,7 +1346,106 @@ mod tests {
         // The handle is back at the end: appends keep working.
         j.append(&JournalEvent::Tell { study: 1, trial_id: 9, value: 9.0 }).unwrap();
         assert_eq!(j.read_all().unwrap().len(), 5);
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
+    }
+
+    #[test]
+    fn rotation_seals_segments_and_replay_spans_them() {
+        let path = tmp("rotate");
+        rm(&path);
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        for t in 0..3u64 {
+            j.append(&JournalEvent::Tell { study: 0, trial_id: t, value: t as f64 })
+                .unwrap();
+        }
+        j.rotate().unwrap();
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 3, value: 3.0 }).unwrap();
+        j.rotate().unwrap();
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 4, value: 4.0 }).unwrap();
+        assert_eq!(j.read_all().unwrap().len(), 5, "read_all spans segments");
+        assert!(seg_path(&path, 1).exists() && seg_path(&path, 2).exists());
+        drop(j);
+        let (mut j, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(replayed.len(), 5, "open spans segments in order");
+        for (t, ev) in replayed.iter().enumerate() {
+            match ev {
+                JournalEvent::Tell { trial_id, .. } => assert_eq!(*trial_id, t as u64),
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        // Rotation indexes continue past existing segments on reopen.
+        j.rotate().unwrap();
+        assert!(seg_path(&path, 3).exists());
+        rm(&path);
+    }
+
+    #[test]
+    fn compaction_keeps_latest_snapshot_plus_suffix_and_drops_segments() {
+        let path = tmp("compact");
+        rm(&path);
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        j.append(&JournalEvent::Create { study: 0, spec: spec(2) }).unwrap();
+        for t in 0..4u64 {
+            j.append(&JournalEvent::Ask { study: 0, trials: vec![(t, vec![0.0, 0.0])] })
+                .unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: t, value: t as f64 })
+                .unwrap();
+        }
+        j.append(&JournalEvent::Snapshot { study: 0, snap: sample_snapshot() }).unwrap();
+        j.rotate().unwrap();
+        j.append(&JournalEvent::Ask { study: 0, trials: vec![(4, vec![1.0, 1.0])] })
+            .unwrap();
+        let before = j.n_events();
+        assert_eq!(before, 1 + 8 + 1 + 1);
+        assert_eq!(j.n_snapshots(), 1);
+
+        let stats = j.compact().unwrap();
+        assert_eq!(stats.events_before, before);
+        // create + latest snapshot + the post-snapshot ask.
+        assert_eq!(stats.events_after, 3);
+        assert_eq!(stats.segments_removed, 1);
+        assert!(stats.bytes_after < stats.bytes_before);
+        assert_eq!(j.n_events(), 3);
+        assert!(!seg_path(&path, 1).exists(), "dead segment deleted");
+
+        // Appends keep working and the compacted journal reopens.
+        j.append(&JournalEvent::Tell { study: 0, trial_id: 4, value: 4.0 }).unwrap();
+        assert_eq!(j.read_all().unwrap().len(), 4);
+        drop(j);
+        let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(replayed.len(), 4);
+        assert!(matches!(replayed[1], JournalEvent::Snapshot { .. }));
+        rm(&path);
+    }
+
+    #[test]
+    fn stale_compact_tmp_and_dead_segments_are_ignored_on_open() {
+        let path = tmp("compact_debris");
+        rm(&path);
+        {
+            let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
+        }
+        // A crash mid-compaction (before the rename) leaves tmp debris:
+        // it must not affect replay.
+        std::fs::write(format!("{}.compact.tmp", path.display()), "garbage").unwrap();
+        let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(replayed.len(), 1);
+
+        // A crash after the rename but before segment deletion leaves
+        // dead segments (index ≤ floor): ignored and lazily deleted,
+        // even if their content is garbage.
+        let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        j.append(&JournalEvent::Snapshot { study: 0, snap: sample_snapshot() }).unwrap();
+        j.rotate().unwrap();
+        let stats = j.compact().unwrap();
+        assert_eq!(stats.segments_removed, 1);
+        drop(j);
+        std::fs::write(seg_path(&path, 1), "torn garbage with no newline").unwrap();
+        let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
+        assert_eq!(replayed.len(), stats.events_after, "dead segment must be ignored");
+        assert!(!seg_path(&path, 1).exists(), "dead segment lazily deleted");
+        rm(&path);
     }
 
     #[test]
@@ -644,7 +1453,7 @@ mod tests {
         use crate::testing::failpoint::{self, FailAction, FailSpec, Trigger};
         let _guard = failpoint::exclusive();
         let path = tmp("inject");
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
         let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
         j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
 
@@ -671,6 +1480,6 @@ mod tests {
         drop(j);
         let (_, replayed) = Journal::open(&path, SyncPolicy::Os).unwrap();
         assert_eq!(replayed.len(), 2, "only acknowledged events survive");
-        let _ = std::fs::remove_file(&path);
+        rm(&path);
     }
 }

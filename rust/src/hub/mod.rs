@@ -36,6 +36,16 @@
 //! the un-crashed hub would have produced
 //! (`rust/tests/hub_equivalence.rs`).
 //!
+//! With [`HubConfig::snapshot_every`] set, every Nth committed
+//! operation also appends a [`SnapshotRecord`] — one study's complete
+//! deterministic state — and rotates the journal segment. Replay (both
+//! [`StudyHub::open`] and the supervisor's in-place rebuild) starts
+//! from each study's newest snapshot instead of event zero, making
+//! resume O(since-last-snapshot); [`StudyHub::compact`] rewrites the
+//! journal down to "latest snapshot per study + events since" with an
+//! atomic swap. The bitwise contract is unchanged: snapshot-resume ≡
+//! full-replay ≡ uninterrupted twin, including the next ask.
+//!
 //! ## Serving: the wire
 //!
 //! [`serve`] exposes the whole hub over JSONL-over-TCP ([`proto`] is
@@ -71,12 +81,12 @@ pub mod script;
 pub mod serve;
 
 pub use client::HubClient;
-pub use journal::{Journal, JournalEvent, SyncPolicy};
+pub use journal::{CompactStats, Journal, JournalEvent, SnapshotRecord, SyncPolicy};
 pub use pool::{AcqPool, OwnedGpEvaluator, PooledEvaluator};
 pub use script::{parse_script, ScriptStudy};
 pub use serve::{ServeConfig, ServeMetricsSnapshot, Server};
 
-use crate::bo::{BestResult, Study, StudyConfig, StudyStats, Trial};
+use crate::bo::{BestResult, Study, StudyConfig, StudyRestore, StudyStats, Trial};
 use crate::coordinator::{MetricsSnapshot, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::gp::GpParams;
@@ -232,6 +242,12 @@ pub struct HubConfig {
     /// [`StudyStatus::Crashed`] for good. Each supervised panic
     /// consumes one restart.
     pub restart_budget: usize,
+    /// Append a [`SnapshotRecord`] (and rotate the journal segment)
+    /// after every N committed asks/tells per study, so replay starts
+    /// from the newest snapshot instead of event zero. `0` disables
+    /// periodic snapshots (the default); ignored without a journal.
+    /// [`StudyHub::checkpoint`] takes one on demand regardless.
+    pub snapshot_every: usize,
 }
 
 impl Default for HubConfig {
@@ -243,6 +259,7 @@ impl Default for HubConfig {
             mailbox_cap: 0,
             sync: SyncPolicy::Os,
             restart_budget: 3,
+            snapshot_every: 0,
         }
     }
 }
@@ -288,6 +305,8 @@ enum Msg {
     Tell { trial_id: u64, value: f64, reply: Sender<Result<()>> },
     ReplayAsk { trials: Vec<(u64, Vec<f64>)>, reply: Sender<Result<()>> },
     ReplayTell { trial_id: u64, value: f64, reply: Sender<Result<()>> },
+    ReplaySnapshot { snap: SnapshotRecord, reply: Sender<Result<()>> },
+    Checkpoint { reply: Sender<Result<()>> },
     Snapshot { reply: Sender<Result<StudySnapshot>> },
 }
 
@@ -332,6 +351,19 @@ impl Drop for MailboxPermit {
     }
 }
 
+/// Index of each study's newest snapshot event, by event position.
+fn latest_snapshot_index(
+    events: &[JournalEvent],
+) -> std::collections::HashMap<usize, usize> {
+    let mut latest = std::collections::HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        if let JournalEvent::Snapshot { study, .. } = ev {
+            latest.insert(*study, i);
+        }
+    }
+    latest
+}
+
 /// The hub. `&self` methods are safe to call from many threads.
 pub struct StudyHub {
     actors: Mutex<Vec<Actor>>,
@@ -339,6 +371,7 @@ pub struct StudyHub {
     pool: Option<Arc<AcqPool>>,
     mailbox_cap: usize,
     restart_budget: usize,
+    snapshot_every: usize,
     panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
@@ -364,9 +397,16 @@ impl StudyHub {
             pool,
             mailbox_cap: cfg.mailbox_cap,
             restart_budget: cfg.restart_budget,
+            snapshot_every: cfg.snapshot_every,
             panic_log: Arc::new(Mutex::new(Vec::new())),
         };
-        for ev in events {
+        // Replay from each study's NEWEST snapshot: earlier asks/tells
+        // (and superseded snapshots) for that study are skipped, so
+        // resume cost is O(events since the last snapshot), not
+        // O(entire history). Creates always install — they carry the
+        // spec, and the index-order check guards journal integrity.
+        let latest_snap = latest_snapshot_index(&events);
+        for (i, ev) in events.into_iter().enumerate() {
             match ev {
                 JournalEvent::Create { study, spec } => {
                     let id = hub.install_study(spec, false)?;
@@ -376,18 +416,29 @@ impl StudyHub {
                         )));
                     }
                 }
+                JournalEvent::Snapshot { study, snap } => {
+                    if latest_snap.get(&study) == Some(&i) {
+                        hub.study_request(StudyId(study), |reply| {
+                            Msg::ReplaySnapshot { snap, reply }
+                        })??;
+                    }
+                }
                 JournalEvent::Ask { study, trials } => {
-                    hub.study_request(StudyId(study), |reply| Msg::ReplayAsk {
-                        trials,
-                        reply,
-                    })??;
+                    if latest_snap.get(&study).map_or(true, |&s| i > s) {
+                        hub.study_request(StudyId(study), |reply| Msg::ReplayAsk {
+                            trials,
+                            reply,
+                        })??;
+                    }
                 }
                 JournalEvent::Tell { study, trial_id, value } => {
-                    hub.study_request(StudyId(study), |reply| Msg::ReplayTell {
-                        trial_id,
-                        value,
-                        reply,
-                    })??;
+                    if latest_snap.get(&study).map_or(true, |&s| i > s) {
+                        hub.study_request(StudyId(study), |reply| Msg::ReplayTell {
+                            trial_id,
+                            value,
+                            reply,
+                        })??;
+                    }
                 }
             }
         }
@@ -432,6 +483,7 @@ impl StudyHub {
             status: Arc::clone(&status),
             restarts: Arc::clone(&restarts),
             budget: self.restart_budget,
+            snapshot_every: self.snapshot_every,
             panic_log: Arc::clone(&self.panic_log),
         };
         let handle = std::thread::Builder::new()
@@ -489,6 +541,35 @@ impl StudyHub {
         self.study_request(id, |reply| Msg::Snapshot { reply })?
     }
 
+    /// Append a [`SnapshotRecord`] for one study to the journal now,
+    /// so subsequent replays of this study start here. Errors without
+    /// a journal. (Unlike the periodic `snapshot_every` snapshots,
+    /// an on-demand checkpoint does not rotate the segment.)
+    pub fn checkpoint(&self, id: StudyId) -> Result<()> {
+        self.study_request(id, |reply| Msg::Checkpoint { reply })?
+    }
+
+    /// Rewrite the journal down to "latest snapshot per study + events
+    /// since", swapped in atomically (see [`Journal::compact`]). Takes
+    /// a fresh checkpoint of every serving study first, so the rewrite
+    /// can drop each one's full prefix; studies that are mid-restart or
+    /// crashed keep their raw events (still replayable, just not
+    /// compacted). Errors without a journal.
+    pub fn compact(&self) -> Result<CompactStats> {
+        let journal = self
+            .journal
+            .as_ref()
+            .ok_or_else(|| Error::Hub("hub has no journal to compact".into()))?;
+        for idx in 0..self.n_studies() {
+            match self.checkpoint(StudyId(idx)) {
+                Ok(()) => {}
+                Err(Error::Crashed(_)) | Err(Error::Restarting(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        journal.lock().unwrap_or_else(std::sync::PoisonError::into_inner).compact()
+    }
+
     /// Supervision status of one study.
     pub fn study_status(&self, id: StudyId) -> Result<StudyStatus> {
         let actors =
@@ -538,6 +619,16 @@ impl StudyHub {
             .as_ref()
             .map(|j| {
                 j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).n_events()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Snapshot records live in the journal; 0 without a journal.
+    pub fn journal_snapshots(&self) -> usize {
+        self.journal
+            .as_ref()
+            .map(|j| {
+                j.lock().unwrap_or_else(std::sync::PoisonError::into_inner).n_snapshots()
             })
             .unwrap_or(0)
     }
@@ -655,6 +746,7 @@ struct ActorContext {
     status: Arc<AtomicU8>,
     restarts: Arc<AtomicUsize>,
     budget: usize,
+    snapshot_every: usize,
     panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
@@ -667,13 +759,31 @@ fn build_study(
     pool: &Option<Arc<AcqPool>>,
 ) -> Result<Study> {
     let mut study = Study::try_new(config.clone(), seed)?;
+    wire_pool(&mut study, pool);
+    Ok(study)
+}
+
+/// [`build_study`]'s snapshot-resume twin: rebuild the study from a
+/// journaled [`SnapshotRecord`]'s deterministic state instead of from
+/// scratch (see [`Study::restore`]), with the same pool wiring.
+fn restore_study(
+    config: &StudyConfig,
+    seed: u64,
+    state: StudyRestore,
+    pool: &Option<Arc<AcqPool>>,
+) -> Result<Study> {
+    let mut study = Study::restore(config.clone(), seed, state)?;
+    wire_pool(&mut study, pool);
+    Ok(study)
+}
+
+fn wire_pool(study: &mut Study, pool: &Option<Arc<AcqPool>>) {
     if let Some(pool) = pool {
         let pool = Arc::clone(pool);
         study.set_eval_factory(Box::new(move |gp| {
             Ok(Box::new(PooledEvaluator::new(Arc::clone(&pool), Arc::new(gp.clone()))))
         }));
     }
-    Ok(study)
 }
 
 /// Stringify a caught panic payload for the log and error messages.
@@ -710,12 +820,26 @@ struct ActorState {
     status: Arc<AtomicU8>,
     restarts: Arc<AtomicUsize>,
     budget: usize,
+    /// Take a snapshot + rotate the segment after this many committed
+    /// asks/tells (0 = never).
+    snapshot_every: usize,
+    /// Committed asks/tells since the last periodic snapshot.
+    since_snapshot: usize,
     panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
 fn actor_loop(ctx: ActorContext, rx: Receiver<Msg>) {
-    let ActorContext { idx, spec, pool, journal, status, restarts, budget, panic_log } =
-        ctx;
+    let ActorContext {
+        idx,
+        spec,
+        pool,
+        journal,
+        status,
+        restarts,
+        budget,
+        snapshot_every,
+        panic_log,
+    } = ctx;
     let StudySpec { name, seed, liar, tag, config } = spec;
     let study = match build_study(&config, seed, &pool) {
         Ok(s) => s,
@@ -737,6 +861,8 @@ fn actor_loop(ctx: ActorContext, rx: Receiver<Msg>) {
         status,
         restarts,
         budget,
+        snapshot_every,
+        since_snapshot: 0,
         panic_log,
     };
     while let Ok(msg) = rx.recv() {
@@ -758,6 +884,8 @@ impl ActorState {
                 Msg::Tell { reply, .. } => drop(reply.send(Err(e))),
                 Msg::ReplayAsk { reply, .. } => drop(reply.send(Err(e))),
                 Msg::ReplayTell { reply, .. } => drop(reply.send(Err(e))),
+                Msg::ReplaySnapshot { reply, .. } => drop(reply.send(Err(e))),
+                Msg::Checkpoint { reply } => drop(reply.send(Err(e))),
                 Msg::Snapshot { reply } => drop(reply.send(Err(e))),
             }
             return;
@@ -781,6 +909,16 @@ impl ActorState {
             Msg::ReplayTell { trial_id, value, reply } => {
                 let r =
                     catch_unwind(AssertUnwindSafe(|| self.do_replay_tell(trial_id, value)));
+                let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
+                let _ = reply.send(out);
+            }
+            Msg::ReplaySnapshot { snap, reply } => {
+                let r = catch_unwind(AssertUnwindSafe(|| self.do_replay_snapshot(snap)));
+                let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
+                let _ = reply.send(out);
+            }
+            Msg::Checkpoint { reply } => {
+                let r = catch_unwind(AssertUnwindSafe(|| self.do_checkpoint()));
                 let out = r.unwrap_or_else(|p| Err(self.supervise(p)));
                 let _ = reply.send(out);
             }
@@ -838,6 +976,7 @@ impl ActorState {
             self.pending.insert(s.trial_id, s.x.clone());
         }
         self.next_id += q as u64;
+        self.maybe_snapshot();
         Ok(out)
     }
 
@@ -855,6 +994,7 @@ impl ActorState {
         self.record(ev);
         let x = self.pending.remove(&trial_id).expect("checked above");
         self.study.observe(x, value);
+        self.maybe_snapshot();
         Ok(())
     }
 
@@ -871,6 +1011,25 @@ impl ActorState {
                     self.study.config().dim
                 )));
             }
+            // A live ask issues ids monotonically from next_id, so a
+            // replayed ask can never legitimately re-issue one. A
+            // duplicate of a *pending* id would silently overwrite its
+            // point; a duplicate of a *told* id would double-observe
+            // the trial on the next tell. Both are acknowledged-state
+            // corruption: fail the replay.
+            if self.pending.contains_key(&trial_id) {
+                return Err(Error::Hub(format!(
+                    "journal replays duplicate ask for trial {trial_id}, which is \
+                     already pending"
+                )));
+            }
+            if trial_id < self.next_id {
+                return Err(Error::Hub(format!(
+                    "journal replays ask re-issuing trial {trial_id} (next trial \
+                     id is already {})",
+                    self.next_id
+                )));
+            }
             self.pending.insert(trial_id, x);
             self.next_id = self.next_id.max(trial_id + 1);
         }
@@ -878,11 +1037,115 @@ impl ActorState {
     }
 
     fn do_replay_tell(&mut self, trial_id: u64, value: f64) -> Result<()> {
+        // A live tell can only land on an id some ask issued; an id at
+        // or past next_id never existed, so accepting it would invent
+        // acknowledged state.
+        if trial_id >= self.next_id {
+            return Err(Error::Hub(format!(
+                "journal tells trial {trial_id} before any ask issued it (next \
+                 trial id is {})",
+                self.next_id
+            )));
+        }
         let x = self.pending.remove(&trial_id).ok_or_else(|| {
             Error::Hub(format!("journal tells trial {trial_id} that was never asked"))
         })?;
         self.study.observe(x, value);
         Ok(())
+    }
+
+    /// Restore this actor from a journaled snapshot: the pending set
+    /// and trial-id counter directly, the study (history + exact
+    /// fit/warm-start position) via [`Study::restore`]. Events after
+    /// the snapshot then replay through the normal replay handlers.
+    fn do_replay_snapshot(&mut self, snap: SnapshotRecord) -> Result<()> {
+        let dim = self.config.dim;
+        for (trial_id, x) in &snap.pending {
+            if x.len() != dim {
+                return Err(Error::Hub(format!(
+                    "journal snapshot pending trial {trial_id} has dim {} != {dim}",
+                    x.len()
+                )));
+            }
+            if *trial_id >= snap.next_trial_id {
+                return Err(Error::Hub(format!(
+                    "journal snapshot pends trial {trial_id} at or past its own \
+                     next trial id {}",
+                    snap.next_trial_id
+                )));
+            }
+        }
+        if snap.trials.iter().any(|(x, _)| x.len() != dim) {
+            return Err(Error::Hub(format!(
+                "journal snapshot has a trial of the wrong dim (expected {dim})"
+            )));
+        }
+        let state = StudyRestore {
+            trials: snap.trials,
+            gp_params: snap.gp_params,
+            last_full_fit_at: snap.last_full_fit_at,
+            fit_full: snap.fit_full,
+            fit_incremental: snap.fit_incremental,
+            gp_n_train: snap.gp_n_train,
+        };
+        self.study = restore_study(&self.config, self.seed, state, &self.pool)?;
+        self.pending = snap.pending.into_iter().collect();
+        self.next_id = snap.next_trial_id;
+        Ok(())
+    }
+
+    /// Capture this study's complete deterministic state as a
+    /// [`SnapshotRecord`] and append it to the journal.
+    fn do_checkpoint(&mut self) -> Result<()> {
+        if self.journal.is_none() {
+            return Err(Error::Hub(format!(
+                "study '{}' has no journal to checkpoint to",
+                self.name
+            )));
+        }
+        let snap = SnapshotRecord {
+            trials: self
+                .study
+                .trials()
+                .iter()
+                .map(|t| (t.x.clone(), t.value))
+                .collect(),
+            pending: self.pending.iter().map(|(&k, v)| (k, v.clone())).collect(),
+            next_trial_id: self.next_id,
+            last_full_fit_at: self.study.last_full_fit_at(),
+            fit_full: self.study.stats.fit_full,
+            fit_incremental: self.study.stats.fit_incremental,
+            gp_params: self.study.gp_params(),
+            gp_n_train: self.study.gp_n_train(),
+        };
+        self.journal_append(&JournalEvent::Snapshot { study: self.idx, snap })
+    }
+
+    /// The periodic-snapshot hook, run after each committed ask/tell:
+    /// every `snapshot_every` commits, checkpoint this study and rotate
+    /// the journal segment (so each sealed segment ends with the
+    /// snapshot superseding it). Best-effort — the triggering operation
+    /// already committed, so a failed snapshot costs replay time, never
+    /// correctness.
+    fn maybe_snapshot(&mut self) {
+        if self.snapshot_every == 0 || self.journal.is_none() {
+            return;
+        }
+        self.since_snapshot += 1;
+        if self.since_snapshot < self.snapshot_every {
+            return;
+        }
+        self.since_snapshot = 0;
+        if let Err(e) = self.do_checkpoint() {
+            eprintln!("study '{}': periodic snapshot failed: {e}", self.name);
+            return;
+        }
+        if let Some(j) = &self.journal {
+            let mut j = j.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Err(e) = j.rotate() {
+                eprintln!("study '{}': segment rotation failed: {e}", self.name);
+            }
+        }
     }
 
     fn make_snapshot(&mut self) -> StudySnapshot {
@@ -980,10 +1243,11 @@ impl ActorState {
         }
     }
 
-    /// Rebuild the study from scratch and replay its acknowledged
-    /// events. Suggestions are pure functions of (seed, trial id,
-    /// history), so the rebuilt state is bitwise identical to one
-    /// that never crashed.
+    /// Rebuild the study and replay its acknowledged events — from its
+    /// newest journaled snapshot when one exists (O(since-snapshot)),
+    /// from scratch otherwise. Suggestions are pure functions of (seed,
+    /// trial id, history), so the rebuilt state is bitwise identical to
+    /// one that never crashed.
     fn rebuild(&mut self) -> Result<()> {
         self.study = build_study(&self.config, self.seed, &self.pool)?;
         self.pending.clear();
@@ -995,7 +1259,19 @@ impl ActorState {
                 .read_all()?,
             None => self.segment.clone(),
         };
-        for ev in events {
+        let latest = events.iter().rposition(
+            |ev| matches!(ev, JournalEvent::Snapshot { study, .. } if *study == self.idx),
+        );
+        let start = match latest {
+            Some(i) => {
+                if let JournalEvent::Snapshot { snap, .. } = events[i].clone() {
+                    self.do_replay_snapshot(snap)?;
+                }
+                i + 1
+            }
+            None => 0,
+        };
+        for ev in events.into_iter().skip(start) {
             match ev {
                 JournalEvent::Ask { study, trials } if study == self.idx => {
                     self.do_replay_ask(trials)?;
@@ -1319,5 +1595,173 @@ mod tests {
         assert!(msg.contains("crashed studies"), "{msg}");
         assert!(msg.contains("doomed"), "{msg}");
         assert!(!msg.contains("healthy"), "{msg}");
+    }
+
+    fn temp_journal(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dbe_bo_hub_{}_{tag}.jsonl", std::process::id()))
+    }
+
+    fn rm_journal(path: &std::path::Path) {
+        let _ = std::fs::remove_file(path);
+        if let (Some(dir), Some(name)) =
+            (path.parent(), path.file_name().and_then(|n| n.to_str()))
+        {
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    if let Some(n) = e.file_name().to_str() {
+                        if n.starts_with(name) {
+                            let _ = std::fs::remove_file(e.path());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Satellite 3 regression: a journal that re-issues a trial id in
+    /// a later ask must fail replay with a typed error. The old replay
+    /// silently absorbed it — the second ask re-pended the told trial
+    /// and its tell double-observed it (3 trials from 2 real tells).
+    #[test]
+    fn replay_rejects_reissued_ask_ids() {
+        let path = temp_journal("replay_guard");
+        rm_journal(&path);
+        {
+            let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+            let spec = StudySpec::new("s", quick_cfg(2), 1);
+            j.append(&JournalEvent::Create { study: 0, spec }).unwrap();
+            j.append(&JournalEvent::Ask { study: 0, trials: vec![(0, vec![0.5, 0.5])] })
+                .unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 }).unwrap();
+            j.append(&JournalEvent::Ask {
+                study: 0,
+                trials: vec![(0, vec![-0.5, -0.5])],
+            })
+            .unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 2.0 }).unwrap();
+        }
+        let cfg = HubConfig { journal: Some(path.clone()), ..HubConfig::default() };
+        match StudyHub::open(cfg) {
+            Err(Error::Hub(m)) => assert!(m.contains("re-issuing trial 0"), "{m}"),
+            other => panic!("reissued ask id must fail replay, got {other:?}"),
+        }
+        rm_journal(&path);
+    }
+
+    /// Satellite 3 regression: a journal telling a trial id no ask
+    /// ever issued must fail replay (the old code only caught ids that
+    /// were never *pending*, which this also is — pin the id ≥ next_id
+    /// case with its own typed message).
+    #[test]
+    fn replay_rejects_tells_for_never_issued_ids() {
+        let path = temp_journal("replay_tell_guard");
+        rm_journal(&path);
+        {
+            let (mut j, _) = Journal::open(&path, SyncPolicy::Os).unwrap();
+            let spec = StudySpec::new("s", quick_cfg(2), 1);
+            j.append(&JournalEvent::Create { study: 0, spec }).unwrap();
+            j.append(&JournalEvent::Ask { study: 0, trials: vec![(0, vec![0.5, 0.5])] })
+                .unwrap();
+            j.append(&JournalEvent::Tell { study: 0, trial_id: 7, value: 1.0 }).unwrap();
+        }
+        let cfg = HubConfig { journal: Some(path.clone()), ..HubConfig::default() };
+        match StudyHub::open(cfg) {
+            Err(Error::Hub(m)) => {
+                assert!(m.contains("before any ask issued it"), "{m}")
+            }
+            other => panic!("never-issued tell must fail replay, got {other:?}"),
+        }
+        rm_journal(&path);
+    }
+
+    #[test]
+    fn checkpoint_and_compact_shrink_the_journal_and_preserve_state() {
+        let path = temp_journal("compact");
+        rm_journal(&path);
+        let cfg = HubConfig { journal: Some(path.clone()), ..HubConfig::default() };
+        let hub = StudyHub::open(cfg.clone()).unwrap();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 3)).unwrap();
+        for _ in 0..6 {
+            let s = hub.ask(id, 1).unwrap().remove(0);
+            hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        }
+        // One pending ask so compaction must preserve the pending set.
+        let open_ask = hub.ask(id, 1).unwrap().remove(0);
+        let before = hub.snapshot(id).unwrap();
+        assert_eq!(hub.journal_snapshots(), 0);
+
+        let stats = hub.compact().unwrap();
+        assert!(
+            stats.events_after < stats.events_before,
+            "compaction must shrink: {stats:?}"
+        );
+        assert_eq!(hub.journal_snapshots(), 1);
+        // create + snapshot: every pre-snapshot ask/tell is gone.
+        assert_eq!(hub.journal_events(), 2);
+        drop(hub);
+
+        // The compacted journal resumes to the identical state.
+        let hub = StudyHub::open(cfg).unwrap();
+        let id = hub.find_study("s").unwrap();
+        let after = hub.snapshot(id).unwrap();
+        assert_eq!(after.trials.len(), before.trials.len());
+        for (a, b) in after.trials.iter().zip(before.trials.iter()) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        assert_eq!(after.pending, before.pending);
+        assert_eq!(after.next_trial_id, before.next_trial_id);
+        hub.tell(id, open_ask.trial_id, sphere(&open_ask.x)).unwrap();
+        hub.shutdown().unwrap();
+        rm_journal(&path);
+    }
+
+    #[test]
+    fn checkpoint_requires_a_journal() {
+        let hub = StudyHub::in_memory();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 3)).unwrap();
+        assert!(matches!(hub.checkpoint(id), Err(Error::Hub(_))));
+        let e = hub.compact().unwrap_err();
+        assert!(e.to_string().contains("no journal"), "{e}");
+    }
+
+    #[test]
+    fn periodic_snapshots_rotate_segments_and_resume_bitwise() {
+        let path = temp_journal("periodic");
+        rm_journal(&path);
+        let cfg = HubConfig {
+            journal: Some(path.clone()),
+            snapshot_every: 4,
+            ..HubConfig::default()
+        };
+        let hub = StudyHub::open(cfg.clone()).unwrap();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(2), 3)).unwrap();
+        for _ in 0..6 {
+            let s = hub.ask(id, 1).unwrap().remove(0);
+            hub.tell(id, s.trial_id, sphere(&s.x)).unwrap();
+        }
+        // 12 committed ops at snapshot_every=4 → 3 snapshots, each
+        // sealing a segment.
+        assert_eq!(hub.journal_snapshots(), 3);
+        let before = hub.snapshot(id).unwrap();
+        drop(hub);
+
+        let hub = StudyHub::open(cfg).unwrap();
+        let id = hub.find_study("s").unwrap();
+        let after = hub.snapshot(id).unwrap();
+        assert_eq!(after.trials.len(), before.trials.len());
+        for (a, b) in after.trials.iter().zip(before.trials.iter()) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+        assert_eq!(after.next_trial_id, before.next_trial_id);
+        assert_eq!(after.stats.fit_full, before.stats.fit_full);
+        assert_eq!(after.stats.fit_incremental, before.stats.fit_incremental);
+        let (pa, pb) = (after.gp_params, before.gp_params);
+        assert_eq!(pa.log_len.to_bits(), pb.log_len.to_bits());
+        assert_eq!(pa.log_sf2.to_bits(), pb.log_sf2.to_bits());
+        assert_eq!(pa.log_noise.to_bits(), pb.log_noise.to_bits());
+        hub.shutdown().unwrap();
+        rm_journal(&path);
     }
 }

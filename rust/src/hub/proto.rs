@@ -20,6 +20,7 @@
 //! | `ask`      | `study` (name), `q` (optional, ≥1, default 1) | `suggestions`: `[{"id":u64,"x":[f64…]}…]` |
 //! | `tell`     | `study`, `trial` (u64), `value` (finite f64) | — |
 //! | `snapshot` | `study`                                 | `snapshot` object  |
+//! | `compact`  | —                                       | `compacted` object (`events_before`, `events_after`, `segments_removed`) |
 //! | `metrics`  | —                                       | `metrics` object   |
 //! | `shutdown` | —                                       | `draining`: true   |
 //!
@@ -122,6 +123,7 @@ pub enum Request {
     Ask { study: String, q: usize },
     Tell { study: String, trial_id: u64, value: f64 },
     Snapshot { study: String },
+    Compact,
     Metrics,
     Shutdown,
 }
@@ -215,6 +217,7 @@ pub fn decode_request(text: &str) -> std::result::Result<RequestFrame, ProtoErro
             Request::Tell { study: study(&j)?, trial_id, value }
         }
         "snapshot" => Request::Snapshot { study: study(&j)? },
+        "compact" => Request::Compact,
         "metrics" => Request::Metrics,
         "shutdown" => Request::Shutdown,
         other => return Err(bad(format!("unknown op '{other}'"))),
@@ -245,6 +248,7 @@ pub fn encode_request(id: u64, req: &Request) -> Json {
             fields.push(("op".into(), Json::Str("snapshot".into())));
             fields.push(("study".into(), Json::Str(study.clone())));
         }
+        Request::Compact => fields.push(("op".into(), Json::Str("compact".into()))),
         Request::Metrics => fields.push(("op".into(), Json::Str("metrics".into()))),
         Request::Shutdown => fields.push(("op".into(), Json::Str("shutdown".into()))),
     }
@@ -376,6 +380,7 @@ pub fn error_code_for(op: &Request, e: &Error) -> ErrorCode {
         Error::Hub(_) => match op {
             Request::Create(_) => ErrorCode::BadRequest,
             Request::Tell { .. } => ErrorCode::UnknownTrial,
+            Request::Compact => ErrorCode::BadRequest,
             _ => ErrorCode::Internal,
         },
         _ => ErrorCode::Internal,
@@ -429,6 +434,7 @@ mod tests {
             Request::Ask { study: "s".into(), q: 4 },
             Request::Tell { study: "s".into(), trial_id: u64::MAX, value: -0.1 },
             Request::Snapshot { study: "s".into() },
+            Request::Compact,
             Request::Metrics,
             Request::Shutdown,
         ];
@@ -448,6 +454,7 @@ mod tests {
                 (Request::Snapshot { study: a }, Request::Snapshot { study: b }) => {
                     assert_eq!(a, b);
                 }
+                (Request::Compact, Request::Compact) => {}
                 (Request::Metrics, Request::Metrics) => {}
                 (Request::Shutdown, Request::Shutdown) => {}
                 (want, got) => panic!("{want:?} decoded as {got:?}"),

@@ -114,6 +114,7 @@ struct ServeMetrics {
     asks: AtomicU64,
     tells: AtomicU64,
     snapshots: AtomicU64,
+    compacts: AtomicU64,
     metrics_calls: AtomicU64,
     shutdowns: AtomicU64,
     latency: LatencyHist,
@@ -129,6 +130,7 @@ impl ServeMetrics {
             asks: AtomicU64::new(0),
             tells: AtomicU64::new(0),
             snapshots: AtomicU64::new(0),
+            compacts: AtomicU64::new(0),
             metrics_calls: AtomicU64::new(0),
             shutdowns: AtomicU64::new(0),
             latency: LatencyHist::new(),
@@ -144,6 +146,7 @@ impl ServeMetrics {
             asks: self.asks.load(Ordering::Relaxed),
             tells: self.tells.load(Ordering::Relaxed),
             snapshots: self.snapshots.load(Ordering::Relaxed),
+            compacts: self.compacts.load(Ordering::Relaxed),
             metrics_calls: self.metrics_calls.load(Ordering::Relaxed),
             shutdowns: self.shutdowns.load(Ordering::Relaxed),
             p50_ns: self.latency.quantile(0.50),
@@ -163,6 +166,7 @@ pub struct ServeMetricsSnapshot {
     pub asks: u64,
     pub tells: u64,
     pub snapshots: u64,
+    pub compacts: u64,
     pub metrics_calls: u64,
     pub shutdowns: u64,
     /// Approximate request-handling latency quantiles (nanoseconds).
@@ -542,6 +546,26 @@ fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
                 },
             }
         }
+        Request::Compact => {
+            m.compacts.fetch_add(1, Ordering::Relaxed);
+            match hub.compact() {
+                Ok(stats) => ok_response(
+                    id,
+                    vec![(
+                        "compacted".into(),
+                        Json::Obj(vec![
+                            ("events_before".into(), Json::usize(stats.events_before)),
+                            ("events_after".into(), Json::usize(stats.events_after)),
+                            (
+                                "segments_removed".into(),
+                                Json::usize(stats.segments_removed),
+                            ),
+                        ]),
+                    )],
+                ),
+                Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
+            }
+        }
         Request::Metrics | Request::Shutdown => unreachable!("handled above"),
     }
 }
@@ -559,6 +583,7 @@ fn metrics_json(shared: &Shared) -> Json {
         ("asks".into(), Json::u64(s.asks)),
         ("tells".into(), Json::u64(s.tells)),
         ("snapshots".into(), Json::u64(s.snapshots)),
+        ("compacts".into(), Json::u64(s.compacts)),
         ("p50_ns".into(), Json::u64(s.p50_ns)),
         ("p99_ns".into(), Json::u64(s.p99_ns)),
     ]);
@@ -567,37 +592,40 @@ fn metrics_json(shared: &Shared) -> Json {
         .read()
         .unwrap_or_else(std::sync::PoisonError::into_inner)
         .clone();
-    let (ready, pool, journal_events, studies, restarts, crashed) = match hub {
-        None => (false, Json::Null, 0, Vec::new(), 0, Vec::new()),
-        Some(h) => {
-            let pool = match h.pool_metrics() {
-                None => Json::Null,
-                Some(p) => Json::Obj(vec![
-                    ("requests".into(), Json::u64(p.requests)),
-                    ("batches".into(), Json::u64(p.batches)),
-                    ("points".into(), Json::u64(p.points)),
-                    ("failures".into(), Json::u64(p.failures)),
-                    (
-                        "oracle_us".into(),
-                        Json::u64(p.oracle.as_micros().min(u64::MAX as u128) as u64),
-                    ),
-                ]),
-            };
-            (
-                true,
-                pool,
-                h.journal_events(),
-                h.study_names(),
-                h.total_restarts(),
-                h.crashed_studies(),
-            )
-        }
-    };
+    let (ready, pool, journal_events, journal_snapshots, studies, restarts, crashed) =
+        match hub {
+            None => (false, Json::Null, 0, 0, Vec::new(), 0, Vec::new()),
+            Some(h) => {
+                let pool = match h.pool_metrics() {
+                    None => Json::Null,
+                    Some(p) => Json::Obj(vec![
+                        ("requests".into(), Json::u64(p.requests)),
+                        ("batches".into(), Json::u64(p.batches)),
+                        ("points".into(), Json::u64(p.points)),
+                        ("failures".into(), Json::u64(p.failures)),
+                        (
+                            "oracle_us".into(),
+                            Json::u64(p.oracle.as_micros().min(u64::MAX as u128) as u64),
+                        ),
+                    ]),
+                };
+                (
+                    true,
+                    pool,
+                    h.journal_events(),
+                    h.journal_snapshots(),
+                    h.study_names(),
+                    h.total_restarts(),
+                    h.crashed_studies(),
+                )
+            }
+        };
     Json::Obj(vec![
         ("ready".into(), Json::Bool(ready)),
         ("serve".into(), serve),
         ("pool".into(), pool),
         ("journal_events".into(), Json::usize(journal_events)),
+        ("journal_snapshots".into(), Json::usize(journal_snapshots)),
         (
             "studies".into(),
             Json::Arr(studies.into_iter().map(Json::Str).collect()),

@@ -66,11 +66,12 @@ fn print_usage() {
            dbe-bo mso   --objective NAME --dim D [--restarts B] [--strategy all|seq|cbe|dbe|par_dbe] [--par-workers K]\n\
            dbe-bo hub   [--script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
                         [--workers W] [--journal PATH] [--resume] [--liar best|worst|mean]\n\
-                        [--sync os|data|every:N] [--restart-budget R]\n\
+                        [--sync os|data|every:N] [--restart-budget R] [--snapshot-every N]\n\
+                        [--compact  (with --journal: compact it and exit)]\n\
            dbe-bo serve [--addr HOST:PORT] [--workers K] [--pool-workers W] [--mailbox-cap C]\n\
                         [--max-frame BYTES] [--journal PATH] [--resume]\n\
-                        [--sync os|data|every:N] [--restart-budget R]\n\
-           dbe-bo client [--addr HOST:PORT] [--shutdown | --metrics |\n\
+                        [--sync os|data|every:N] [--restart-budget R] [--snapshot-every N]\n\
+           dbe-bo client [--addr HOST:PORT] [--shutdown | --metrics | --compact |\n\
                         --script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
            dbe-bo demo-coordinator --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo info\n\
@@ -419,6 +420,41 @@ fn journal_from_args(args: &Args) -> Result<Option<std::path::PathBuf>> {
 fn cmd_hub(args: &Args) -> Result<()> {
     use std::sync::Arc;
 
+    // Offline maintenance mode: `dbe-bo hub --journal PATH --compact`
+    // replays the journal, checkpoints every study, rewrites the file
+    // down to "latest snapshot per study + events since", and exits.
+    // The exists/--resume guard doesn't apply — compaction *only*
+    // makes sense on an existing journal.
+    if args.has("compact") {
+        if !args.has("journal") {
+            return Err(Error::Config("--compact needs --journal PATH".into()));
+        }
+        let path = std::path::PathBuf::from(args.get_str("journal", "results/hub.jsonl"));
+        if !path.exists() {
+            return Err(Error::Config(format!(
+                "journal {} does not exist — nothing to compact",
+                path.display()
+            )));
+        }
+        let hub = StudyHub::open(HubConfig {
+            journal: Some(path.clone()),
+            sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
+            ..HubConfig::default()
+        })?;
+        let stats = hub.compact()?;
+        hub.shutdown()?;
+        println!(
+            "compacted {}: {} events -> {} | {} bytes -> {} | {} dead segments removed",
+            path.display(),
+            stats.events_before,
+            stats.events_after,
+            stats.bytes_before,
+            stats.bytes_after,
+            stats.segments_removed,
+        );
+        return Ok(());
+    }
+
     let studies = workload_from_args(args, 4, 30)?;
     let journal = journal_from_args(args)?;
     let hub_cfg = HubConfig {
@@ -431,6 +467,7 @@ fn cmd_hub(args: &Args) -> Result<()> {
         mailbox_cap: args.get_usize("mailbox-cap", 0)?,
         sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
         restart_budget: args.get_usize("restart-budget", 3)?,
+        snapshot_every: args.get_usize("snapshot-every", 0)?,
     };
     println!(
         "hub: {} studies, pool workers {}, journal {}",
@@ -538,6 +575,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mailbox_cap: args.get_usize("mailbox-cap", 64)?,
         sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
         restart_budget: args.get_usize("restart-budget", 3)?,
+        snapshot_every: args.get_usize("snapshot-every", 0)?,
     };
     let serve_cfg = ServeConfig {
         addr: args.get_str("addr", "127.0.0.1:7341"),
@@ -603,6 +641,10 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     if args.has("metrics") {
         println!("{}", HubClient::connect(&addr)?.metrics()?);
+        return Ok(());
+    }
+    if args.has("compact") {
+        println!("{}", HubClient::connect(&addr)?.compact()?);
         return Ok(());
     }
 

@@ -432,6 +432,161 @@ fn torn_tail_truncation_replays_prefix_at_every_offset() {
     let _ = std::fs::remove_file(&cut_path);
 }
 
+/// Satellite 4, extended to snapshot records (ISSUE 8): tear the tail
+/// of a journal whose final record is a *snapshot*, at every byte
+/// offset. The torn snapshot must be dropped exactly like any torn
+/// line — never half-applied — and the healed journal must rebuild the
+/// study bitwise from the raw events the snapshot would have
+/// superseded.
+#[test]
+fn torn_snapshot_tail_truncation_replays_prefix_at_every_offset() {
+    let _guard = failpoint::exclusive();
+    let n = 6;
+    let path = temp_journal("snap_tail_prop");
+
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 17)).unwrap();
+    drive(&twin, twin_id, n, 2);
+
+    {
+        let hub = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(), 17)).unwrap();
+        drive(&hub, id, n, 2);
+        // An on-demand checkpoint does not rotate the segment, so the
+        // snapshot is the final record of a single-file journal.
+        hub.checkpoint(id).unwrap();
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(bytes.last(), Some(&b'\n'), "a clean journal ends terminated");
+    let tail_start = bytes[..bytes.len() - 1]
+        .iter()
+        .rposition(|&b| b == b'\n')
+        .map_or(0, |p| p + 1);
+    let tail = std::str::from_utf8(&bytes[tail_start..]).unwrap();
+    assert!(tail.contains("\"ev\":\"snapshot\""), "final record is the snapshot");
+    let (_, full_events) = Journal::open(&path, SyncPolicy::Os).unwrap();
+    let full_dbg: Vec<String> =
+        full_events.iter().map(|e| format!("{e:?}")).collect();
+
+    let cut_path = temp_journal("snap_tail_prop_cut");
+    for cut in tail_start..bytes.len() {
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        let (journal, events) = Journal::open(&cut_path, SyncPolicy::Os)
+            .unwrap_or_else(|e| panic!("cut at byte {cut}: open failed: {e}"));
+        assert_eq!(
+            events.len(),
+            full_dbg.len() - 1,
+            "cut at byte {cut}: exactly the torn snapshot is dropped"
+        );
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(
+                format!("{ev:?}"),
+                full_dbg[i],
+                "cut at byte {cut}: replayed event {i} diverged"
+            );
+        }
+        drop(journal);
+        assert_eq!(
+            std::fs::read(&cut_path).unwrap(),
+            &bytes[..tail_start],
+            "cut at byte {cut}: torn snapshot bytes must be truncated away"
+        );
+    }
+
+    // Full-stack check at one representative cut: the hub that lost its
+    // snapshot mid-write rebuilds from raw events, bitwise the twin —
+    // including the next ask.
+    let cut = tail_start + (bytes.len() - tail_start) / 2;
+    std::fs::write(&path, &bytes[..cut]).unwrap();
+    let hub = StudyHub::open(chaos_cfg(Some(path.clone()), 0)).unwrap();
+    let id = hub.find_study("s").expect("replayed study");
+    assert_snapshots_bitwise_equal(
+        "torn snapshot",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+    assert_next_ask_bitwise_equal("torn snapshot", &hub, id, &twin, twin_id);
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&cut_path);
+}
+
+/// Satellite 4 — the compaction commit point. A crash after the
+/// replacement file is written but *before* the rename must leave the
+/// old segments authoritative (the `.compact.tmp` debris is ignored);
+/// after a completed compaction, dead segments at or below the new
+/// floor are ignored even when their content is garbage. CI's
+/// chaos-smoke job runs this test by name.
+#[test]
+fn mid_compaction_crash_keeps_old_segments_authoritative() {
+    let _guard = failpoint::exclusive();
+    let n = 6;
+    let path = temp_journal("mid_compaction");
+    // Periodic snapshots so the journal really has sealed segments.
+    let cfg = || HubConfig {
+        journal: Some(path.clone()),
+        snapshot_every: 3,
+        restart_budget: 100,
+        ..HubConfig::default()
+    };
+
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 21)).unwrap();
+    drive(&twin, twin_id, n, 2);
+
+    {
+        let hub = StudyHub::open(cfg()).unwrap();
+        let id = hub.create_study(StudySpec::new("s", quick_cfg(), 21)).unwrap();
+        drive(&hub, id, n, 2);
+        assert!(hub.journal_snapshots() > 0, "rotation must have happened");
+
+        // Power cut after the replacement file is durable but before
+        // the rename: the commit point is never reached.
+        configure(
+            "hub::journal::compact",
+            FailSpec::new(Trigger::Nth(1), FailAction::Error("power cut".into())),
+        );
+        let e = hub.compact().unwrap_err();
+        assert!(failpoint::is_injected(&e), "typed injected failure, got {e}");
+        failpoint::clear();
+    }
+    let tmp = PathBuf::from(format!("{}.compact.tmp", path.display()));
+    assert!(tmp.exists(), "the crash left the replacement file behind");
+
+    // Old segments + active file win; the debris is ignored.
+    let hub = StudyHub::open(cfg()).unwrap();
+    let id = hub.find_study("s").expect("replayed study");
+    assert_snapshots_bitwise_equal(
+        "mid-compaction crash",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+
+    // Now let compaction commit, crash-free, and scribble over a dead
+    // segment: at or below the floor it must be ignored on reopen.
+    let stats = hub.compact().unwrap();
+    assert!(stats.segments_removed >= 1, "sealed segments became dead");
+    assert!(stats.events_after <= stats.events_before);
+    drop(hub);
+    std::fs::write(
+        format!("{}.seg{:06}", path.display(), 1),
+        "garbage from a dead compaction epoch",
+    )
+    .unwrap();
+
+    let hub = StudyHub::open(cfg()).unwrap();
+    let id = hub.find_study("s").expect("replayed study after compaction");
+    assert_snapshots_bitwise_equal(
+        "post-compaction reopen",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+    assert_next_ask_bitwise_equal("post-compaction", &hub, id, &twin, twin_id);
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&tmp);
+}
+
 /// Faults inside the shared acquisition pool (submit rejection, oracle
 /// batch failure) surface to the asking client as typed injected
 /// errors before anything commits; retries converge to the fault-free

@@ -13,6 +13,10 @@
 //!    driven through `Server` + `HubClient` over real loopback sockets
 //!    bitwise-reproduces an in-process twin — suggestions, snapshot
 //!    wire form, and journal bytes.
+//! 4. (ISSUE 8) Snapshot records change only where replay *starts*,
+//!    never where it lands: a hub resumed from its newest snapshot, a
+//!    hub resumed by full event replay, and an uninterrupted twin agree
+//!    bitwise, including the next ask after resume.
 
 use dbe_bo::bo::{Study, StudyConfig};
 use dbe_bo::coordinator::ServiceConfig;
@@ -236,6 +240,129 @@ fn journal_replay_bitwise_resumes_after_simulated_crash() {
     );
 
     let _ = std::fs::remove_file(&path);
+}
+
+/// ISSUE 8 acceptance: three-way equivalence. A hub resumed from its
+/// newest snapshot record, a hub resumed by full event replay, and an
+/// uninterrupted twin must agree bitwise — trials, pending set,
+/// next_trial_id, fit split, warm-started GP hyperparameters — and the
+/// next ask after resume must be bitwise identical across all three.
+#[test]
+fn snapshot_resume_equals_full_replay_equals_uninterrupted_twin() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let path_full = dir.join(format!("dbe_bo_snapeq_full_{pid}.jsonl"));
+    let path_snap = dir.join(format!("dbe_bo_snapeq_snap_{pid}.jsonl"));
+    // Periodic snapshots rotate segments, so clean everything that
+    // shares the journal's file-name prefix (sealed segments included).
+    let rm_all = |path: &std::path::Path| {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if let Ok(entries) = std::fs::read_dir(path.parent().unwrap()) {
+            for e in entries.flatten() {
+                if e.file_name().to_string_lossy().starts_with(&name) {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+    };
+    rm_all(&path_full);
+    rm_all(&path_snap);
+
+    let spec = StudySpec::new("s", quick_cfg(2), 9);
+    let hub_cfg = |path: &std::path::Path, snapshot_every: usize| HubConfig {
+        journal: Some(path.to_path_buf()),
+        snapshot_every,
+        ..HubConfig::default()
+    };
+
+    // The uninterrupted reference.
+    let twin = StudyHub::in_memory();
+    let twin_id = twin.create_study(spec.clone()).unwrap();
+
+    // Drive both journaled hubs in lockstep with the twin, then "crash"
+    // (drop) with one ask still pending.
+    let pending;
+    {
+        let full = StudyHub::open(hub_cfg(&path_full, 0)).unwrap();
+        let snap = StudyHub::open(hub_cfg(&path_snap, 4)).unwrap();
+        let full_id = full.create_study(spec.clone()).unwrap();
+        let snap_id = snap.create_study(spec.clone()).unwrap();
+        for &q in &[1usize, 1, 1, 1, 2, 1, 2] {
+            let a = twin.ask(twin_id, q).unwrap();
+            let b = full.ask(full_id, q).unwrap();
+            let c = snap.ask(snap_id, q).unwrap();
+            for ((sa, sb), sc) in a.iter().zip(&b).zip(&c) {
+                assert_eq!(sa.trial_id, sb.trial_id);
+                assert_eq!(sa.trial_id, sc.trial_id);
+                assert_eq!(sa.x, sb.x);
+                assert_eq!(sa.x, sc.x, "snapshotting hub diverged before the crash");
+            }
+            for s in a {
+                let y = bowl(&s.x);
+                twin.tell(twin_id, s.trial_id, y).unwrap();
+                full.tell(full_id, s.trial_id, y).unwrap();
+                snap.tell(snap_id, s.trial_id, y).unwrap();
+            }
+        }
+        assert!(snap.journal_snapshots() > 0, "periodic snapshots must have fired");
+        let a = twin.ask(twin_id, 1).unwrap();
+        let b = full.ask(full_id, 1).unwrap();
+        let c = snap.ask(snap_id, 1).unwrap();
+        assert_eq!(a[0].x, b[0].x);
+        assert_eq!(a[0].x, c[0].x);
+        pending = (a[0].trial_id, a[0].x.clone());
+    }
+
+    // Reopen: one hub replays every event, the other resumes from its
+    // newest snapshot record.
+    let full = StudyHub::open(hub_cfg(&path_full, 0)).unwrap();
+    let snap = StudyHub::open(hub_cfg(&path_snap, 4)).unwrap();
+    assert!(snap.journal_snapshots() > 0, "reopen must see the snapshot records");
+    let full_id = full.find_study("s").expect("full-replay hub lost the study");
+    let snap_id = snap.find_study("s").expect("snapshot-resume hub lost the study");
+    let t = twin.snapshot(twin_id).unwrap();
+    for (label, s) in [
+        ("full-replay", full.snapshot(full_id).unwrap()),
+        ("snapshot-resume", snap.snapshot(snap_id).unwrap()),
+    ] {
+        assert_eq!(s.trials.len(), t.trials.len(), "{label}: trial count");
+        for (a, b) in s.trials.iter().zip(&t.trials) {
+            assert_eq!(a.x, b.x, "{label}: trial suggestion");
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "{label}: trial value");
+        }
+        assert_eq!(s.pending, t.pending, "{label}: pending set");
+        assert_eq!(s.pending, vec![pending.clone()], "{label}: crashed pending trial");
+        assert_eq!(s.next_trial_id, t.next_trial_id, "{label}: next_trial_id");
+        assert_eq!(s.stats.fit_full, t.stats.fit_full, "{label}: full-fit count");
+        assert_eq!(
+            s.stats.fit_incremental,
+            t.stats.fit_incremental,
+            "{label}: incremental-fit count"
+        );
+        assert_gp_params_bitwise(&s, &t);
+    }
+
+    // Resolve the pending trial on all three, then the acceptance
+    // criterion: the next ask after resume is bitwise identical.
+    let (tid, x) = pending;
+    let y = bowl(&x);
+    twin.tell(twin_id, tid, y).unwrap();
+    full.tell(full_id, tid, y).unwrap();
+    snap.tell(snap_id, tid, y).unwrap();
+    let a = twin.ask(twin_id, 2).unwrap();
+    let b = full.ask(full_id, 2).unwrap();
+    let c = snap.ask(snap_id, 2).unwrap();
+    for ((sa, sb), sc) in a.iter().zip(&b).zip(&c) {
+        assert_eq!(sa.trial_id, sb.trial_id);
+        assert_eq!(sa.trial_id, sc.trial_id);
+        for ((xa, xb), xc) in sa.x.iter().zip(&sb.x).zip(&sc.x) {
+            assert_eq!(xa.to_bits(), xb.to_bits(), "full-replay next ask diverged");
+            assert_eq!(xa.to_bits(), xc.to_bits(), "snapshot-resume next ask diverged");
+        }
+    }
+
+    rm_all(&path_full);
+    rm_all(&path_snap);
 }
 
 #[test]

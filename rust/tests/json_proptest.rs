@@ -11,8 +11,16 @@
 //!
 //! Random trees come from the in-crate `forall` runner (seeded Pcg64,
 //! scale-shrinking), so failures replay exactly.
+//!
+//! The battery also covers the journal built on this codec (ISSUE 8
+//! satellite): `Journal::open` and `Journal::read_all` share one strict
+//! decoder, so over mutated journal byte streams the two recovery paths
+//! must reach the same verdict.
 
+use dbe_bo::bo::StudyConfig;
 use dbe_bo::hub::json::{Json, MAX_DEPTH};
+use dbe_bo::hub::{HubConfig, Journal, JournalEvent, StudyHub, StudySpec, SyncPolicy};
+use dbe_bo::optim::mso::MsoStrategy;
 use dbe_bo::testing::{forall, Gen};
 
 /// Characters that exercise every escape path in the emitter: quoting,
@@ -196,6 +204,123 @@ fn deep_nesting_bomb_errors_fast_instead_of_overflowing() {
     assert!(Json::parse(&bomb).is_err());
     let obj_bomb = "{\"k\":".repeat(100_000);
     assert!(Json::parse(&obj_bomb).is_err());
+}
+
+/// Satellite bugfix (ISSUE 8): `Journal::open` and `Journal::read_all`
+/// route through one shared strict decoder, so over arbitrarily
+/// mutated journal byte streams the two recovery paths must reach the
+/// same verdict — both replay the identical event list, or both reject
+/// the stream. (The historical bug: `read_all` silently skipped empty
+/// terminated lines that `open` hard-errors on, so a supervisor
+/// rebuild could diverge from a process restart on the same file.)
+#[test]
+fn journal_open_and_read_all_verdicts_agree_on_mutated_streams() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let base_path = dir.join(format!("dbe_bo_jprop_base_{pid}.jsonl"));
+    let open_path = dir.join(format!("dbe_bo_jprop_open_{pid}.jsonl"));
+    let ra_path = dir.join(format!("dbe_bo_jprop_ra_{pid}.jsonl"));
+    for p in [&base_path, &open_path, &ra_path] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    // A realistic base stream — format header, create, asks/tells, one
+    // snapshot record — produced by the real hub, not handcrafted.
+    {
+        let hub = StudyHub::open(HubConfig {
+            journal: Some(base_path.clone()),
+            ..HubConfig::default()
+        })
+        .unwrap();
+        let cfg = StudyConfig {
+            dim: 2,
+            bounds: vec![(-5.0, 5.0); 2],
+            n_trials: 40,
+            n_startup: 4,
+            restarts: 3,
+            strategy: MsoStrategy::Dbe,
+            fit_every: 2,
+            ..StudyConfig::default()
+        };
+        let id = hub.create_study(StudySpec::new("s", cfg, 5)).unwrap();
+        for _ in 0..5 {
+            let s = hub.ask(id, 1).unwrap().remove(0);
+            let y = (s.x[0] - 0.5).powi(2) + (s.x[1] + 1.0).powi(2);
+            hub.tell(id, s.trial_id, y).unwrap();
+        }
+        hub.checkpoint(id).unwrap();
+    }
+    let base = std::fs::read(&base_path).unwrap();
+    assert!(base.is_ascii(), "journal lines are ASCII, so mutations stay UTF-8-safe");
+
+    // A live handle whose recorded valid prefix outsizes every mutant:
+    // swapping the file's bytes underneath it makes `read_all` decode
+    // exactly the mutant (its `take(valid_len)` caps at EOF), the same
+    // bytes `open` sees from a cold start.
+    let (mut padded, _) = Journal::open(&ra_path, SyncPolicy::Os).unwrap();
+    while std::fs::metadata(&ra_path).unwrap().len() <= (base.len() + 64) as u64 {
+        padded
+            .append(&JournalEvent::Tell { study: 0, trial_id: 0, value: 1.0 })
+            .unwrap();
+    }
+
+    forall("open ≡ read_all over mutated journal streams", 200, |g| {
+        let mut bytes = base.clone();
+        for _ in 0..=g.rng.below(3) {
+            if bytes.is_empty() {
+                break;
+            }
+            let at = g.rng.below(bytes.len());
+            match g.rng.below(5) {
+                0 => bytes[at] = (32 + g.rng.below(95)) as u8,
+                1 => {
+                    bytes.remove(at);
+                }
+                2 => bytes.insert(at, b"{}[]\",:\n "[g.rng.below(9)]),
+                3 => bytes.truncate(at),
+                _ => {
+                    // Blank the line containing `at`, keeping its
+                    // terminator — the empty-terminated-line shape the
+                    // historical read_all skipped and open rejected.
+                    let start = bytes[..at]
+                        .iter()
+                        .rposition(|&b| b == b'\n')
+                        .map_or(0, |p| p + 1);
+                    let end = bytes[at..]
+                        .iter()
+                        .position(|&b| b == b'\n')
+                        .map_or(bytes.len(), |p| at + p);
+                    bytes.drain(start..end);
+                }
+            }
+        }
+
+        std::fs::write(&open_path, &bytes).map_err(|e| e.to_string())?;
+        let open_verdict = match Journal::open(&open_path, SyncPolicy::Os) {
+            Ok((_, evs)) => Ok(evs.iter().map(|e| format!("{e:?}")).collect::<Vec<_>>()),
+            Err(_) => Err(()),
+        };
+        std::fs::write(&ra_path, &bytes).map_err(|e| e.to_string())?;
+        let ra_verdict = match padded.read_all() {
+            Ok(evs) => Ok(evs.iter().map(|e| format!("{e:?}")).collect::<Vec<_>>()),
+            Err(_) => Err(()),
+        };
+        if open_verdict == ra_verdict {
+            Ok(())
+        } else {
+            Err(format!(
+                "recovery paths diverged (open {:?} vs read_all {:?}) on stream {:?}",
+                open_verdict.as_ref().map(Vec::len),
+                ra_verdict.as_ref().map(Vec::len),
+                String::from_utf8_lossy(&bytes),
+            ))
+        }
+    });
+
+    drop(padded);
+    for p in [&base_path, &open_path, &ra_path] {
+        let _ = std::fs::remove_file(p);
+    }
 }
 
 /// Random mutations of valid emissions: flip/delete/insert one byte and
