@@ -2,7 +2,7 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke compact-smoke artifacts
+.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke compact-smoke obs-smoke artifacts
 
 build:
 	cargo build --release
@@ -50,6 +50,7 @@ bench-smoke:
 	cargo bench --bench hub_throughput -- --smoke
 	cargo bench --bench serve_throughput -- --smoke
 	cargo bench --bench journal_replay -- --smoke
+	cargo bench --bench obs_overhead -- --smoke
 
 # The end-to-end serving smoke: loopback clients drive `dbe-bo serve`
 # over real TCP and emit results/BENCH_serve.json (asks/sec, ask-RTT
@@ -65,6 +66,16 @@ serve-smoke:
 compact-smoke:
 	cargo test --release --test chaos mid_compaction
 	cargo bench --bench journal_replay -- --smoke
+
+# The observability smoke (ISSUE 9): the flight-recorder/trace
+# integration battery plus the overhead bench, which ASSERTS the
+# disarmed recorder costs ≤1% of an ask and that arming it never
+# changes results. Emits results/BENCH_obs.json; mirrors CI's
+# obs-smoke job.
+obs-smoke:
+	cargo test --release --test obs_trace
+	cargo test --release --test chaos armed_flight_recorder
+	cargo bench --bench obs_overhead -- --smoke
 
 # The fit-engine perf snapshot: emits results/BENCH_gp_fit.json
 # (EXPERIMENTS.md §Perf "GP fit"). Run this on a quiet host for real

@@ -1,0 +1,218 @@
+//! Bench: flight-recorder overhead (ISSUE 9, EXPERIMENTS.md
+//! §Observability).
+//!
+//! Two questions, answered on the same hub workload as
+//! `hub_throughput`:
+//!
+//! 1. **Disarmed cost** — a disarmed probe is one relaxed atomic load.
+//!    Measured directly (ns per disarmed `instant()` call), then
+//!    projected onto the ask path: `probe_ns × events_per_ask ÷
+//!    ask_ns` must stay ≤ 1% — this is the CI-asserted bound, chosen
+//!    over a wall-clock A/B diff because the projection is immune to
+//!    scheduler noise on shared runners.
+//! 2. **Armed cost** — the same workload with the recorder armed,
+//!    reported as a ratio (informational; armed runs are opt-in).
+//!
+//! The armed run must also produce bitwise the same best values as the
+//! disarmed run — the recorder is a pure observer even under load.
+//!
+//! Emits `results/BENCH_obs.json`. Run:
+//! `cargo bench --bench obs_overhead [-- --smoke]`.
+
+use dbe_bo::bbob::{self, Objective};
+use dbe_bo::bo::StudyConfig;
+use dbe_bo::cli::Args;
+use dbe_bo::config::BenchProtocol;
+use dbe_bo::hub::{HubConfig, StudyHub, StudySpec};
+use dbe_bo::obs::{self, recorder};
+use dbe_bo::optim::mso::MsoStrategy;
+use std::sync::Arc;
+use std::time::Instant;
+
+const STUDIES: usize = 4;
+
+fn study_cfg(dim: usize, bounds: Vec<(f64, f64)>, p: &BenchProtocol) -> StudyConfig {
+    StudyConfig {
+        dim,
+        bounds,
+        n_trials: p.trials,
+        n_startup: p.startup.min(p.trials),
+        restarts: p.restarts,
+        strategy: MsoStrategy::Dbe,
+        lbfgsb: p.lbfgsb,
+        fit_every: p.fit_every,
+        ..StudyConfig::default()
+    }
+}
+
+/// ns per disarmed probe: the single relaxed load every instrumented
+/// site pays when tracing is off.
+fn probe_disarmed_ns(iters: u64) -> f64 {
+    assert!(!obs::armed(), "probe must run disarmed");
+    let t0 = Instant::now();
+    for i in 0..iters {
+        // The arg slice is built only if armed; disarmed this is the
+        // gate plus a branch. `i` keeps the loop from folding away.
+        obs::instant("bench", "probe", (i & 1) as u32, &[]);
+    }
+    let wall = t0.elapsed();
+    assert_eq!(recorder::emitted(), 0, "disarmed probes must emit nothing");
+    wall.as_nanos() as f64 / iters as f64
+}
+
+/// Returns (wall seconds, total asks, best values).
+fn run_hub(p: &BenchProtocol, dim: usize, objective: &str, q: usize) -> (f64, u64, Vec<f64>) {
+    let hub = Arc::new(
+        StudyHub::open(HubConfig {
+            pool_workers: p.hub_workers.max(1),
+            ..HubConfig::default()
+        })
+        .unwrap(),
+    );
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for s in 0..STUDIES {
+        let hub = Arc::clone(&hub);
+        let objective = objective.to_string();
+        let p = p.clone();
+        joins.push(std::thread::spawn(move || {
+            let f = bbob::by_name(&objective, dim, 1000 + dim as u64).unwrap();
+            let spec = StudySpec::new(
+                format!("s{s}"),
+                study_cfg(dim, f.bounds(), &p),
+                500 + s as u64,
+            );
+            let n_trials = spec.config.n_trials;
+            let id = hub.create_study(spec).unwrap();
+            let mut done = 0;
+            let mut asks = 0u64;
+            while done < n_trials {
+                let batch = hub.ask(id, q.min(n_trials - done)).unwrap();
+                asks += 1;
+                for sug in batch {
+                    hub.tell(id, sug.trial_id, f.value(&sug.x)).unwrap();
+                    done += 1;
+                }
+            }
+            (asks, hub.snapshot(id).unwrap().best.unwrap().value)
+        }));
+    }
+    let per: Vec<(u64, f64)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let asks = per.iter().map(|(a, _)| a).sum();
+    let bests = per.iter().map(|(_, b)| *b).collect();
+    (wall, asks, bests)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let smoke = args.has("smoke");
+    let mut p = BenchProtocol::from_args(&args).expect("bench flags");
+    if smoke {
+        p.trials = 10;
+        p.startup = 4;
+        p.restarts = 3;
+        p.dims = vec![2];
+    } else if !args.has("trials") {
+        p.trials = 25;
+    }
+    if !args.has("q") {
+        p.q = 2;
+    }
+    if p.hub_workers == 0 {
+        p.hub_workers = 2;
+    }
+    let dim = p.dims.first().copied().unwrap_or(2);
+    let objective = p
+        .objectives
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "rastrigin".to_string());
+    let probe_iters: u64 = if smoke { 2_000_000 } else { 20_000_000 };
+
+    println!(
+        "# obs_overhead — {STUDIES} studies on {objective} D={dim}, {} trials, q={}{}",
+        p.trials,
+        p.q,
+        if smoke { " [SMOKE]" } else { "" }
+    );
+
+    // 1. The disarmed probe, measured in isolation.
+    let probe_ns = probe_disarmed_ns(probe_iters);
+    println!("disarmed probe  : {probe_ns:.3} ns/call ({probe_iters} calls)");
+
+    // 2. The workload with the recorder off (warm-up discarded).
+    let _ = run_hub(&p, dim, &objective, p.q);
+    let (off_s, asks, off_bests) = run_hub(&p, dim, &objective, p.q);
+    println!("recorder off    : {off_s:>8.3}s  ({asks} asks)  bests {off_bests:?}");
+
+    // 3. The same workload armed; count what the ask path emits.
+    recorder::reset();
+    recorder::arm();
+    let (armed_s, armed_asks, armed_bests) = run_hub(&p, dim, &objective, p.q);
+    let events = recorder::emitted();
+    recorder::disarm();
+    recorder::reset();
+    println!("recorder armed  : {armed_s:>8.3}s  ({events} events)  bests {armed_bests:?}");
+
+    // The recorder must be a pure observer: identical trajectories.
+    assert_eq!(off_bests, armed_bests, "arming the recorder changed the results");
+    assert!(events > 0, "armed workload must record events");
+
+    // The asserted bound: projected disarmed overhead per ask.
+    let events_per_ask = events as f64 / armed_asks as f64;
+    let ask_ns = off_s * 1e9 / asks as f64;
+    let disarmed_frac = probe_ns * events_per_ask / ask_ns;
+    let armed_ratio = armed_s / off_s;
+    println!(
+        "-> {events_per_ask:.1} events/ask, ask {:.1}µs: disarmed overhead {:.5}% (bound 1%), armed ratio {armed_ratio:.3}x",
+        ask_ns / 1e3,
+        disarmed_frac * 100.0
+    );
+    assert!(
+        disarmed_frac <= 0.01,
+        "disarmed recorder overhead {:.4}% exceeds the 1% budget \
+         ({probe_ns:.2} ns/probe × {events_per_ask:.1} events/ask on a {:.1} µs ask)",
+        disarmed_frac * 100.0,
+        ask_ns / 1e3,
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"obs_overhead\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"studies\": {studies},\n",
+            "  \"objective\": \"{objective}\",\n",
+            "  \"dim\": {dim},\n",
+            "  \"trials\": {trials},\n",
+            "  \"q\": {q},\n",
+            "  \"probe_disarmed_ns\": {probe:.4},\n",
+            "  \"events_per_ask\": {epa:.2},\n",
+            "  \"ask_us_off\": {askus:.3},\n",
+            "  \"wall_off_s\": {off:.6},\n",
+            "  \"wall_armed_s\": {armed:.6},\n",
+            "  \"armed_ratio\": {ratio:.4},\n",
+            "  \"disarmed_overhead_frac\": {frac:.8},\n",
+            "  \"bound_frac\": 0.01\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        studies = STUDIES,
+        objective = objective,
+        dim = dim,
+        trials = p.trials,
+        q = p.q,
+        probe = probe_ns,
+        epa = events_per_ask,
+        askus = ask_ns / 1e3,
+        off = off_s,
+        armed = armed_s,
+        ratio = armed_ratio,
+        frac = disarmed_frac,
+    );
+    std::fs::create_dir_all(&p.out_dir).expect("create out dir");
+    let path = format!("{}/BENCH_obs.json", p.out_dir);
+    std::fs::write(&path, json).expect("write bench json");
+    println!("JSON written to {path}");
+}

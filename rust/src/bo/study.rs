@@ -450,6 +450,15 @@ impl Study {
         };
 
         let t_acq = Instant::now();
+        let _span = crate::obs::span_args(
+            "mso",
+            "suggest",
+            crate::obs::NO_STUDY,
+            &[
+                ("restarts", crate::obs::ArgV::U(x0s.len() as u64)),
+                ("strategy", crate::obs::ArgV::S(self.cfg.strategy.token())),
+            ],
+        );
         let res = match &self.eval_factory {
             Some(factory) => {
                 // Factory evaluators (e.g. the PJRT artifact) are
@@ -520,6 +529,12 @@ impl Study {
             (n.saturating_sub(self.cfg.n_startup)) % self.cfg.fit_every.max(1) == 0;
         let stale = self.gp.as_ref().map_or(true, |gp| gp.n_train() > n);
         if stale || (boundary && self.last_full_fit_at != Some(n)) {
+            let _span = crate::obs::span_args(
+                "gp",
+                "fit_full",
+                crate::obs::NO_STUDY,
+                &[("n", crate::obs::ArgV::U(n as u64))],
+            );
             let xs_norm: Vec<Vec<f64>> =
                 self.trials.iter().map(|t| normalize(&t.x, &self.cfg.bounds)).collect();
             let ys: Vec<f64> = self.trials.iter().map(|t| t.value).collect();
@@ -531,7 +546,14 @@ impl Study {
             self.stats.fit_full += 1;
             self.stats.fit_full_wall += dt;
             self.stats.fit_wall += dt;
+            crate::obs::registry::hist("gp.fit_full_ns").record(dt);
         } else if self.gp.as_ref().map_or(0, |gp| gp.n_train()) < n {
+            let _span = crate::obs::span_args(
+                "gp",
+                "refit_append",
+                crate::obs::NO_STUDY,
+                &[("n", crate::obs::ArgV::U(n as u64))],
+            );
             let gp = self.gp.as_mut().expect("non-stale GP exists");
             for i in gp.n_train()..n {
                 let xn = normalize(&self.trials[i].x, &self.cfg.bounds);
@@ -541,6 +563,7 @@ impl Study {
             self.stats.fit_incremental += 1;
             self.stats.fit_incremental_wall += dt;
             self.stats.fit_wall += dt;
+            crate::obs::registry::hist("gp.refit_append_ns").record(dt);
         }
         Ok(())
     }

@@ -35,6 +35,11 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.points.fetch_add(points as u64, Ordering::Relaxed);
         self.oracle_nanos.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+        // Mirror into the unified registry: instances come and go (one
+        // Metrics per service/pool), the process-wide totals persist.
+        crate::obs::registry::counter("coordinator.batches").inc();
+        crate::obs::registry::counter("coordinator.points").add(points as u64);
+        crate::obs::registry::hist("coordinator.oracle_ns").record(wall);
     }
 
     /// Mean points per oracle batch — the batching-efficiency headline.

@@ -108,10 +108,30 @@ impl HubClient {
         Ok(frame.field("compacted")?.clone())
     }
 
-    /// Fetch server + pool metrics.
+    /// Fetch server + pool + registry metrics as JSON.
     pub fn metrics(&mut self) -> Result<Json> {
-        let frame = self.call(&Request::Metrics)?;
+        let frame = self.call(&Request::Metrics { prom: false })?;
         Ok(frame.field("metrics")?.clone())
+    }
+
+    /// Fetch the same metrics in Prometheus text exposition format.
+    pub fn metrics_prom(&mut self) -> Result<String> {
+        let frame = self.call(&Request::Metrics { prom: true })?;
+        Ok(frame.field("metrics")?.as_str()?.to_string())
+    }
+
+    /// Arm (`true`) or disarm (`false`) the server's flight recorder.
+    /// Returns the total events emitted so far.
+    pub fn trace_arm(&mut self, arm: bool) -> Result<u64> {
+        let frame = self.call(&Request::Trace { arm: Some(arm) })?;
+        frame.field("events")?.as_u64()
+    }
+
+    /// Dump the server's flight recorder as Chrome trace-event JSON
+    /// (load the result in Perfetto / `chrome://tracing`).
+    pub fn trace_dump(&mut self) -> Result<Json> {
+        let frame = self.call(&Request::Trace { arm: None })?;
+        Ok(frame.field("trace")?.clone())
     }
 
     /// Ask the server to drain. Idempotent; the server answers this

@@ -584,6 +584,10 @@ pub struct Journal {
     /// truncation claw-backs, rotation, compaction) — observability
     /// for the durability contract.
     syncs: u64,
+    /// Cached unified-registry handles (one atomic op per use).
+    fsync_hist: &'static crate::obs::Hist,
+    compact_hist: &'static crate::obs::Hist,
+    clawbacks: &'static crate::obs::Counter,
 }
 
 impl Journal {
@@ -677,6 +681,9 @@ impl Journal {
             live_segs,
             n_snapshots,
             syncs: 0,
+            fsync_hist: crate::obs::registry::hist("hub.journal.fsync_ns"),
+            compact_hist: crate::obs::registry::hist("hub.journal.compact_ns"),
+            clawbacks: crate::obs::registry::counter("hub.journal.clawbacks"),
         };
         if shortened && !matches!(sync, SyncPolicy::Os) {
             // The heal must be as durable as the appends it protects:
@@ -701,7 +708,9 @@ impl Journal {
 
     /// `sync_data` with the bookkeeping the durability tests observe.
     fn sync_now(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
         self.file.sync_data()?;
+        self.fsync_hist.record(t0.elapsed());
         self.syncs += 1;
         self.since_sync = 0;
         Ok(())
@@ -730,9 +739,30 @@ impl Journal {
                 if matches!(ev, JournalEvent::Snapshot { .. }) {
                     self.n_snapshots += 1;
                 }
+                if crate::obs::armed() {
+                    let (tok, study) = match ev {
+                        JournalEvent::Create { study, .. } => ("create", *study),
+                        JournalEvent::Ask { study, .. } => ("ask", *study),
+                        JournalEvent::Tell { study, .. } => ("tell", *study),
+                        JournalEvent::Snapshot { study, .. } => ("snapshot", *study),
+                    };
+                    crate::obs::instant(
+                        "journal",
+                        "append",
+                        study as u32,
+                        &[("ev", crate::obs::ArgV::S(tok))],
+                    );
+                }
                 Ok(())
             }
             Err(e) => {
+                self.clawbacks.inc();
+                crate::obs::instant(
+                    "journal",
+                    "clawback",
+                    crate::obs::NO_STUDY,
+                    &[],
+                );
                 // Claw back any torn bytes so the on-disk prefix stays
                 // exactly the acknowledged events — and make the
                 // truncation itself durable per policy, or a power
@@ -818,6 +848,8 @@ impl Journal {
         if self.poisoned {
             return Err(Error::Hub("journal is poisoned; cannot compact".into()));
         }
+        let t_compact = std::time::Instant::now();
+        let _span = crate::obs::span("journal", "compact", crate::obs::NO_STUDY);
         let events = self.read_all()?;
         let bytes_before = self.live_bytes();
 
@@ -882,6 +914,7 @@ impl Journal {
         self.n_events = events_after;
         self.n_snapshots =
             kept.iter().filter(|e| matches!(e, JournalEvent::Snapshot { .. })).count();
+        self.compact_hist.record(t_compact.elapsed());
         Ok(CompactStats {
             events_before: events.len(),
             events_after,

@@ -298,6 +298,23 @@ pub struct PanicRecord {
     /// 1-based restart attempt this panic consumed; attempts past the
     /// budget mark the study crashed instead of restarting it.
     pub attempt: usize,
+    /// Black box: the crashed study's last flight-recorder events
+    /// (rendered), captured at supervision time. Empty when the
+    /// recorder was disarmed.
+    pub trail: Vec<String>,
+}
+
+/// Per-study supervision stats for the `metrics` wire op
+/// ([`StudyHub::study_stats`]).
+#[derive(Clone, Debug)]
+pub struct StudyStat {
+    pub name: String,
+    /// Status token: `running` / `restarting` / `crashed`.
+    pub status: &'static str,
+    /// Supervised restarts of this study so far.
+    pub restarts: usize,
+    /// Most recent supervised panic message, if any.
+    pub last_panic: Option<String>,
 }
 
 enum Msg {
@@ -601,6 +618,36 @@ impl StudyHub {
     /// Every supervised panic so far, oldest first.
     pub fn panic_log(&self) -> Vec<PanicRecord> {
         self.panic_log.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+    }
+
+    /// Per-study supervision stats (status token, restart count, most
+    /// recent panic message), in study-index order. This is what the
+    /// `metrics` wire op surfaces.
+    pub fn study_stats(&self) -> Vec<StudyStat> {
+        let panics = self
+            .panic_log
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone();
+        let actors =
+            self.actors.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        actors
+            .iter()
+            .map(|a| StudyStat {
+                name: a.name.clone(),
+                status: match status_from_u8(a.status.load(Ordering::Acquire)) {
+                    StudyStatus::Running => "running",
+                    StudyStatus::Restarting => "restarting",
+                    StudyStatus::Crashed => "crashed",
+                },
+                restarts: a.restarts.load(Ordering::Acquire),
+                last_panic: panics
+                    .iter()
+                    .rev()
+                    .find(|p| p.study == a.name)
+                    .map(|p| p.message.clone()),
+            })
+            .collect()
     }
 
     /// Shared-pool counters (None when the pool is disabled).
@@ -934,6 +981,12 @@ impl ActorState {
     }
 
     fn do_ask(&mut self, q: usize) -> Result<Vec<Suggestion>> {
+        let _span = crate::obs::span_args(
+            "hub",
+            "ask",
+            self.idx as u32,
+            &[("q", crate::obs::ArgV::U(q as u64))],
+        );
         crate::testing::failpoint::fail_point("hub::actor::ask")?;
         // Compute all q candidates first; commit pending + journal
         // only when the whole batch succeeded, so a failed ask leaves
@@ -981,6 +1034,7 @@ impl ActorState {
     }
 
     fn do_tell(&mut self, trial_id: u64, value: f64) -> Result<()> {
+        let _span = crate::obs::span("hub", "tell", self.idx as u32);
         crate::testing::failpoint::fail_point("hub::actor::tell")?;
         if !self.pending.contains_key(&trial_id) {
             return Err(Error::Hub(format!(
@@ -1103,6 +1157,8 @@ impl ActorState {
                 self.name
             )));
         }
+        let t0 = std::time::Instant::now();
+        let _span = crate::obs::span("journal", "snapshot", self.idx as u32);
         let snap = SnapshotRecord {
             trials: self
                 .study
@@ -1118,7 +1174,9 @@ impl ActorState {
             gp_params: self.study.gp_params(),
             gp_n_train: self.study.gp_n_train(),
         };
-        self.journal_append(&JournalEvent::Snapshot { study: self.idx, snap })
+        let out = self.journal_append(&JournalEvent::Snapshot { study: self.idx, snap });
+        crate::obs::registry::hist("hub.journal.snapshot_ns").record(t0.elapsed());
+        out
     }
 
     /// The periodic-snapshot hook, run after each committed ask/tell:
@@ -1187,13 +1245,27 @@ impl ActorState {
         ))
     }
 
+    /// Events of black box attached to each [`PanicRecord`].
+    const PANIC_TRAIL_LEN: usize = 16;
+
     fn log_panic(&self, cause: &str, attempt: usize) {
+        crate::obs::registry::counter("hub.supervisor.panics").inc();
+        // Black box: snapshot this study's last recorder events before
+        // the rebuild overwrites the ring with replay traffic.
+        let trail = crate::obs::recorder::recent_for_study(
+            self.idx as u32,
+            Self::PANIC_TRAIL_LEN,
+        )
+        .iter()
+        .map(|e| e.to_string())
+        .collect();
         let mut log =
             self.panic_log.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         log.push(PanicRecord {
             study: self.name.clone(),
             message: cause.to_string(),
             attempt,
+            trail,
         });
     }
 
@@ -1219,6 +1291,13 @@ impl ActorState {
             }
             self.status.store(STATUS_RESTARTING, Ordering::Release);
             self.restarts.fetch_add(1, Ordering::AcqRel);
+            crate::obs::registry::counter("hub.supervisor.restarts").inc();
+            let _span = crate::obs::span_args(
+                "hub",
+                "restart",
+                self.idx as u32,
+                &[("attempt", crate::obs::ArgV::U(attempt as u64))],
+            );
             match catch_unwind(AssertUnwindSafe(|| self.rebuild())) {
                 Ok(Ok(())) => {
                     self.status.store(STATUS_RUNNING, Ordering::Release);

@@ -175,6 +175,8 @@ fn worker_loop(
     metrics: &Metrics,
     trips: &AtomicU64,
 ) {
+    // Cached &'static handle: the per-drain cost is one atomic add.
+    let coalesce_wait = crate::obs::registry::hist("hub.pool.coalesce_wait_ns");
     loop {
         let jobs = {
             let rx = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -184,7 +186,8 @@ fn worker_loop(
             };
             let mut total = first.points.len();
             let mut jobs = vec![first];
-            let deadline = Instant::now() + cfg.max_wait;
+            let picked_up = Instant::now();
+            let deadline = picked_up + cfg.max_wait;
             while total < cfg.max_batch {
                 let now = Instant::now();
                 if now >= deadline {
@@ -199,9 +202,22 @@ fn worker_loop(
                     | Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
+            coalesce_wait.record(picked_up.elapsed());
             jobs
         };
         trips.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::armed() {
+            let points: usize = jobs.iter().map(|j| j.points.len()).sum();
+            crate::obs::instant(
+                "pool",
+                "coalesce",
+                crate::obs::NO_STUDY,
+                &[
+                    ("jobs", crate::obs::ArgV::U(jobs.len() as u64)),
+                    ("points", crate::obs::ArgV::U(points as u64)),
+                ],
+            );
+        }
 
         // Group the drained jobs by evaluator identity (tenant model).
         let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
@@ -220,8 +236,15 @@ fn worker_loop(
                 .flat_map(|&i| jobs[i].points.iter().cloned())
                 .collect();
             let t0 = Instant::now();
+            let _span = crate::obs::span_args(
+                "pool",
+                "oracle",
+                crate::obs::NO_STUDY,
+                &[("points", crate::obs::ArgV::U(all_points.len() as u64))],
+            );
             let result = crate::testing::failpoint::fail_point("hub::pool::oracle")
                 .and_then(|()| jobs[idxs[0]].eval.eval_batch(&all_points));
+            drop(_span);
             match result {
                 Ok((vals, grads)) => {
                     metrics.record_batch(all_points.len(), t0.elapsed());

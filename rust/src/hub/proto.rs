@@ -21,7 +21,8 @@
 //! | `tell`     | `study`, `trial` (u64), `value` (finite f64) | — |
 //! | `snapshot` | `study`                                 | `snapshot` object  |
 //! | `compact`  | —                                       | `compacted` object (`events_before`, `events_after`, `segments_removed`) |
-//! | `metrics`  | —                                       | `metrics` object   |
+//! | `metrics`  | `format` (optional: `"json"` default, `"prom"`) | `metrics` object, or a Prometheus text string when `format:"prom"` |
+//! | `trace`    | `arm` (optional bool: arm/disarm the flight recorder; absent = dump) | `armed`, `events`, and (on dump) `trace`: Chrome trace-event JSON |
 //! | `shutdown` | —                                       | `draining`: true   |
 //!
 //! Success: `{"id":…,"ok":true,…}`. Failure:
@@ -124,8 +125,28 @@ pub enum Request {
     Tell { study: String, trial_id: u64, value: f64 },
     Snapshot { study: String },
     Compact,
-    Metrics,
+    /// Fetch metrics; `prom` selects Prometheus text exposition.
+    Metrics { prom: bool },
+    /// Flight-recorder control: `arm: Some(b)` arms/disarms, `None`
+    /// dumps the ring as Chrome trace-event JSON.
+    Trace { arm: Option<bool> },
     Shutdown,
+}
+
+impl Request {
+    /// The wire `op` token for this request (also the serve span name).
+    pub fn op_token(&self) -> &'static str {
+        match self {
+            Request::Create(_) => "create",
+            Request::Ask { .. } => "ask",
+            Request::Tell { .. } => "tell",
+            Request::Snapshot { .. } => "snapshot",
+            Request::Compact => "compact",
+            Request::Metrics { .. } => "metrics",
+            Request::Trace { .. } => "trace",
+            Request::Shutdown => "shutdown",
+        }
+    }
 }
 
 /// A decoded request frame: the client's opaque `id` plus the body.
@@ -218,7 +239,29 @@ pub fn decode_request(text: &str) -> std::result::Result<RequestFrame, ProtoErro
         }
         "snapshot" => Request::Snapshot { study: study(&j)? },
         "compact" => Request::Compact,
-        "metrics" => Request::Metrics,
+        "metrics" => {
+            let prom = match j.get("format") {
+                None => false,
+                Some(Json::Str(s)) if s == "json" => false,
+                Some(Json::Str(s)) if s == "prom" => true,
+                Some(other) => {
+                    return Err(bad(format!(
+                        "metrics 'format' must be \"json\" or \"prom\", got {other}"
+                    )))
+                }
+            };
+            Request::Metrics { prom }
+        }
+        "trace" => {
+            let arm = match j.get("arm") {
+                None => None,
+                Some(Json::Bool(b)) => Some(*b),
+                Some(other) => {
+                    return Err(bad(format!("trace 'arm' must be a bool, got {other}")))
+                }
+            };
+            Request::Trace { arm }
+        }
         "shutdown" => Request::Shutdown,
         other => return Err(bad(format!("unknown op '{other}'"))),
     };
@@ -249,7 +292,18 @@ pub fn encode_request(id: u64, req: &Request) -> Json {
             fields.push(("study".into(), Json::Str(study.clone())));
         }
         Request::Compact => fields.push(("op".into(), Json::Str("compact".into()))),
-        Request::Metrics => fields.push(("op".into(), Json::Str("metrics".into()))),
+        Request::Metrics { prom } => {
+            fields.push(("op".into(), Json::Str("metrics".into())));
+            if *prom {
+                fields.push(("format".into(), Json::Str("prom".into())));
+            }
+        }
+        Request::Trace { arm } => {
+            fields.push(("op".into(), Json::Str("trace".into())));
+            if let Some(b) = arm {
+                fields.push(("arm".into(), Json::Bool(*b)));
+            }
+        }
         Request::Shutdown => fields.push(("op".into(), Json::Str("shutdown".into()))),
     }
     Json::Obj(fields)
@@ -435,7 +489,11 @@ mod tests {
             Request::Tell { study: "s".into(), trial_id: u64::MAX, value: -0.1 },
             Request::Snapshot { study: "s".into() },
             Request::Compact,
-            Request::Metrics,
+            Request::Metrics { prom: false },
+            Request::Metrics { prom: true },
+            Request::Trace { arm: None },
+            Request::Trace { arm: Some(true) },
+            Request::Trace { arm: Some(false) },
             Request::Shutdown,
         ];
         for (i, req) in reqs.iter().enumerate() {
@@ -455,7 +513,12 @@ mod tests {
                     assert_eq!(a, b);
                 }
                 (Request::Compact, Request::Compact) => {}
-                (Request::Metrics, Request::Metrics) => {}
+                (Request::Metrics { prom: a }, Request::Metrics { prom: b }) => {
+                    assert_eq!(a, b);
+                }
+                (Request::Trace { arm: a }, Request::Trace { arm: b }) => {
+                    assert_eq!(a, b);
+                }
                 (Request::Shutdown, Request::Shutdown) => {}
                 (want, got) => panic!("{want:?} decoded as {got:?}"),
             }
@@ -471,6 +534,45 @@ mod tests {
             .unwrap_err();
         assert_eq!(err.code, ErrorCode::BadRequest);
         assert_eq!(err.id, Some(Json::u64(1)));
+    }
+
+    #[test]
+    fn metrics_format_and_trace_arm_validate() {
+        let f = decode_request("{\"id\":1,\"op\":\"metrics\"}").unwrap();
+        assert!(matches!(f.req, Request::Metrics { prom: false }));
+        let f = decode_request("{\"id\":1,\"op\":\"metrics\",\"format\":\"prom\"}").unwrap();
+        assert!(matches!(f.req, Request::Metrics { prom: true }));
+        let e = decode_request("{\"id\":1,\"op\":\"metrics\",\"format\":\"xml\"}")
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+
+        let f = decode_request("{\"id\":2,\"op\":\"trace\"}").unwrap();
+        assert!(matches!(f.req, Request::Trace { arm: None }));
+        let f = decode_request("{\"id\":2,\"op\":\"trace\",\"arm\":true}").unwrap();
+        assert!(matches!(f.req, Request::Trace { arm: Some(true) }));
+        let e = decode_request("{\"id\":2,\"op\":\"trace\",\"arm\":1}").unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, Some(Json::u64(2)));
+    }
+
+    #[test]
+    fn op_tokens_match_the_wire_grammar() {
+        for (req, tok) in [
+            (Request::Ask { study: "s".into(), q: 1 }, "ask"),
+            (Request::Tell { study: "s".into(), trial_id: 0, value: 0.0 }, "tell"),
+            (Request::Snapshot { study: "s".into() }, "snapshot"),
+            (Request::Compact, "compact"),
+            (Request::Metrics { prom: false }, "metrics"),
+            (Request::Trace { arm: None }, "trace"),
+            (Request::Shutdown, "shutdown"),
+        ] {
+            assert_eq!(req.op_token(), tok);
+            // op_token is exactly the token decode_request dispatches on.
+            let line = encode_request(0, &req).to_string();
+            let back = decode_request(&line).unwrap();
+            assert_eq!(back.req.op_token(), tok);
+        }
+        assert_eq!(Request::Create(Box::new(spec())).op_token(), "create");
     }
 
     #[test]

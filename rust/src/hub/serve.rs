@@ -31,8 +31,12 @@
 //!   (terminal) — see the [`super`] module docs. Both are typed frames;
 //!   a study crash never tears down the server or the connection.
 //!
-//! Request counts and a power-of-two latency histogram sit next to the
-//! pool's coalescing metrics in the `metrics` op.
+//! Request counts and a power-of-two latency histogram
+//! ([`crate::obs::Hist`]) sit next to the pool's coalescing metrics,
+//! the unified [`crate::obs::registry`], and per-study supervision
+//! stats in the `metrics` op (`format=prom` renders the same data as
+//! Prometheus text). The `trace` op arms/disarms the process-global
+//! flight recorder and dumps it as Chrome trace-event JSON.
 
 use super::proto::{
     decode_request, ok_response, snapshot_to_json, suggestions_to_json, ErrorCode,
@@ -41,6 +45,7 @@ use super::proto::{
 use super::json::Json;
 use super::StudyHub;
 use crate::error::Result;
+use crate::obs::{self, recorder, registry, Hist};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -66,46 +71,8 @@ impl Default for ServeConfig {
     }
 }
 
-/// Power-of-two latency histogram: bucket `i` counts requests whose
-/// handling took `[2^i, 2^(i+1))` ns. Lock-free, fixed memory, and
-/// quantiles come out with ≤ 2× relative error — plenty for p50/p99
-/// serving dashboards.
-struct LatencyHist {
-    buckets: [AtomicU64; 64],
-}
-
-impl LatencyHist {
-    fn new() -> Self {
-        LatencyHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
-    }
-
-    fn record(&self, d: Duration) {
-        let ns = (d.as_nanos().min(u64::MAX as u128) as u64).max(1);
-        let idx = 63 - ns.leading_zeros() as usize;
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Approximate `q`-quantile in nanoseconds (bucket midpoint).
-    fn quantile(&self, q: f64) -> u64 {
-        let counts: Vec<u64> =
-            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
-        let mut cum = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= target {
-                return (1u64 << i) + ((1u64 << i) >> 1);
-            }
-        }
-        unreachable!("cumulative count reaches total")
-    }
-}
-
-/// Serving-tier request counters (all relaxed atomics).
+/// Serving-tier request counters (all relaxed atomics; the latency
+/// histogram is the extracted [`crate::obs::Hist`]).
 struct ServeMetrics {
     requests: AtomicU64,
     errors: AtomicU64,
@@ -117,7 +84,8 @@ struct ServeMetrics {
     compacts: AtomicU64,
     metrics_calls: AtomicU64,
     shutdowns: AtomicU64,
-    latency: LatencyHist,
+    traces: AtomicU64,
+    latency: Hist,
 }
 
 impl ServeMetrics {
@@ -133,7 +101,8 @@ impl ServeMetrics {
             compacts: AtomicU64::new(0),
             metrics_calls: AtomicU64::new(0),
             shutdowns: AtomicU64::new(0),
-            latency: LatencyHist::new(),
+            traces: AtomicU64::new(0),
+            latency: Hist::new(),
         }
     }
 
@@ -149,6 +118,7 @@ impl ServeMetrics {
             compacts: self.compacts.load(Ordering::Relaxed),
             metrics_calls: self.metrics_calls.load(Ordering::Relaxed),
             shutdowns: self.shutdowns.load(Ordering::Relaxed),
+            traces: self.traces.load(Ordering::Relaxed),
             p50_ns: self.latency.quantile(0.50),
             p99_ns: self.latency.quantile(0.99),
         }
@@ -169,7 +139,9 @@ pub struct ServeMetricsSnapshot {
     pub compacts: u64,
     pub metrics_calls: u64,
     pub shutdowns: u64,
-    /// Approximate request-handling latency quantiles (nanoseconds).
+    pub traces: u64,
+    /// Approximate request-handling latency quantiles (nanoseconds,
+    /// rank-interpolated within the power-of-two bucket).
     pub p50_ns: u64,
     pub p99_ns: u64,
 }
@@ -429,6 +401,9 @@ fn handle_line(text: &str, shared: &Shared) -> Json {
 fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
     let RequestFrame { id, req } = frame;
     let m = &shared.metrics;
+    // The serve layer's span: one per dispatched frame, named after
+    // the op (free unless the flight recorder is armed).
+    let _frame_span = recorder::span("serve", req.op_token(), obs::NO_STUDY);
 
     // Drain gate: `shutdown` stays idempotent and `metrics` keeps
     // answering (so an operator can watch the drain), everything else
@@ -439,7 +414,7 @@ fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
                 m.shutdowns.fetch_add(1, Ordering::Relaxed);
                 return ok_response(id, vec![("draining".into(), Json::Bool(true))]);
             }
-            Request::Metrics => {}
+            Request::Metrics { .. } => {}
             _ => {
                 m.errors.fetch_add(1, Ordering::Relaxed);
                 return ProtoError::new(
@@ -458,9 +433,34 @@ fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
             m.shutdowns.fetch_add(1, Ordering::Relaxed);
             return ok_response(id, vec![("draining".into(), Json::Bool(true))]);
         }
-        Request::Metrics => {
+        Request::Metrics { prom } => {
             m.metrics_calls.fetch_add(1, Ordering::Relaxed);
-            return ok_response(id, vec![("metrics".into(), metrics_json(shared))]);
+            let payload = if *prom {
+                Json::Str(metrics_prom(shared))
+            } else {
+                metrics_json(shared)
+            };
+            return ok_response(id, vec![("metrics".into(), payload)]);
+        }
+        Request::Trace { arm } => {
+            m.traces.fetch_add(1, Ordering::Relaxed);
+            let mut fields = Vec::new();
+            match arm {
+                Some(true) => recorder::arm(),
+                Some(false) => recorder::disarm(),
+                // No `arm` field: dump the recorder as Chrome trace
+                // JSON without changing its state.
+                None => {
+                    let events = recorder::drain();
+                    fields.push((
+                        "trace".into(),
+                        crate::obs::trace::chrome_trace(&events),
+                    ));
+                }
+            }
+            fields.push(("armed".into(), Json::Bool(recorder::armed())));
+            fields.push(("events".into(), Json::u64(recorder::emitted())));
+            return ok_response(id, fields);
         }
         _ => {}
     }
@@ -566,13 +566,21 @@ fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
                 Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
             }
         }
-        Request::Metrics | Request::Shutdown => unreachable!("handled above"),
+        Request::Metrics { .. } | Request::Trace { .. } | Request::Shutdown => {
+            unreachable!("handled above")
+        }
     }
+}
+
+fn installed_hub(shared: &Shared) -> Option<Arc<StudyHub>> {
+    shared.hub.read().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
 }
 
 /// The `metrics` op payload: serving counters, the pool's coalescing
 /// counters (null when the pool is off or the hub not yet installed),
-/// and journal progress.
+/// journal progress, per-study supervision stats (restart counts and
+/// the most recent panic message per crashed study), and the unified
+/// [`crate::obs::registry`].
 fn metrics_json(shared: &Shared) -> Json {
     let s = shared.metrics.snapshot();
     let serve = Json::Obj(vec![
@@ -584,16 +592,12 @@ fn metrics_json(shared: &Shared) -> Json {
         ("tells".into(), Json::u64(s.tells)),
         ("snapshots".into(), Json::u64(s.snapshots)),
         ("compacts".into(), Json::u64(s.compacts)),
+        ("traces".into(), Json::u64(s.traces)),
         ("p50_ns".into(), Json::u64(s.p50_ns)),
         ("p99_ns".into(), Json::u64(s.p99_ns)),
     ]);
-    let hub = shared
-        .hub
-        .read()
-        .unwrap_or_else(std::sync::PoisonError::into_inner)
-        .clone();
     let (ready, pool, journal_events, journal_snapshots, studies, restarts, crashed) =
-        match hub {
+        match installed_hub(shared) {
             None => (false, Json::Null, 0, 0, Vec::new(), 0, Vec::new()),
             Some(h) => {
                 let pool = match h.pool_metrics() {
@@ -614,12 +618,31 @@ fn metrics_json(shared: &Shared) -> Json {
                     pool,
                     h.journal_events(),
                     h.journal_snapshots(),
-                    h.study_names(),
+                    h.study_stats(),
                     h.total_restarts(),
                     h.crashed_studies(),
                 )
             }
         };
+    let study_stats = Json::Arr(
+        studies
+            .iter()
+            .map(|st| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(st.name.clone())),
+                    ("status".into(), Json::Str(st.status.into())),
+                    ("restarts".into(), Json::usize(st.restarts)),
+                    (
+                        "last_panic".into(),
+                        match &st.last_panic {
+                            None => Json::Null,
+                            Some(m) => Json::Str(m.clone()),
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    );
     Json::Obj(vec![
         ("ready".into(), Json::Bool(ready)),
         ("serve".into(), serve),
@@ -628,36 +651,112 @@ fn metrics_json(shared: &Shared) -> Json {
         ("journal_snapshots".into(), Json::usize(journal_snapshots)),
         (
             "studies".into(),
-            Json::Arr(studies.into_iter().map(Json::Str).collect()),
+            Json::Arr(studies.into_iter().map(|st| Json::Str(st.name)).collect()),
         ),
+        ("study_stats".into(), study_stats),
         ("restarts".into(), Json::usize(restarts)),
         (
             "crashed".into(),
             Json::Arr(crashed.into_iter().map(Json::Str).collect()),
         ),
+        ("registry".into(), registry::to_json()),
     ])
+}
+
+/// The same data as [`metrics_json`] in the Prometheus text exposition
+/// format (`metrics --format=prom`): `dbe_serve_*` counters and
+/// latency quantiles, `dbe_pool_*`, journal progress gauges, per-study
+/// `dbe_study_restarts{study="…"}`, and every metric in the unified
+/// registry.
+fn metrics_prom(shared: &Shared) -> String {
+    use registry::prom_line;
+    let s = shared.metrics.snapshot();
+    let mut out = String::new();
+    for (name, v) in [
+        ("dbe_serve_requests", s.requests),
+        ("dbe_serve_errors", s.errors),
+        ("dbe_serve_busy", s.busy),
+        ("dbe_serve_creates", s.creates),
+        ("dbe_serve_asks", s.asks),
+        ("dbe_serve_tells", s.tells),
+        ("dbe_serve_snapshots", s.snapshots),
+        ("dbe_serve_compacts", s.compacts),
+        ("dbe_serve_traces", s.traces),
+    ] {
+        out.push_str(&format!("# TYPE {name} counter\n"));
+        prom_line(&mut out, name, &[], v as f64);
+    }
+    out.push_str("# TYPE dbe_serve_latency_ns summary\n");
+    prom_line(&mut out, "dbe_serve_latency_ns", &[("quantile", "0.5")], s.p50_ns as f64);
+    prom_line(&mut out, "dbe_serve_latency_ns", &[("quantile", "0.99")], s.p99_ns as f64);
+
+    if let Some(h) = installed_hub(shared) {
+        prom_line(&mut out, "dbe_serve_ready", &[], 1.0);
+        if let Some(p) = h.pool_metrics() {
+            prom_line(&mut out, "dbe_pool_requests", &[], p.requests as f64);
+            prom_line(&mut out, "dbe_pool_batches", &[], p.batches as f64);
+            prom_line(&mut out, "dbe_pool_points", &[], p.points as f64);
+            prom_line(&mut out, "dbe_pool_failures", &[], p.failures as f64);
+        }
+        prom_line(&mut out, "dbe_journal_events", &[], h.journal_events() as f64);
+        prom_line(&mut out, "dbe_journal_snapshots", &[], h.journal_snapshots() as f64);
+        prom_line(&mut out, "dbe_hub_restarts_total", &[], h.total_restarts() as f64);
+        for st in h.study_stats() {
+            prom_line(
+                &mut out,
+                "dbe_study_restarts",
+                &[("study", &st.name), ("status", st.status)],
+                st.restarts as f64,
+            );
+        }
+    } else {
+        prom_line(&mut out, "dbe_serve_ready", &[], 0.0);
+    }
+    out.push_str(&registry::prom_text());
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Bucket/quantile math lives (and is tested) in `obs::hist`; here
+    /// we only pin that the serve tier records into it and reads
+    /// plausible quantiles.
     #[test]
-    fn latency_hist_buckets_and_quantiles() {
-        let h = LatencyHist::new();
-        assert_eq!(h.quantile(0.5), 0, "empty histogram reads 0");
-        // 99 fast requests (~1us) and one slow (~1ms).
+    fn serve_metrics_latency_quantiles_read_back() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.snapshot().p50_ns, 0, "empty histogram reads 0");
         for _ in 0..99 {
-            h.record(Duration::from_nanos(1_100));
+            m.latency.record(Duration::from_nanos(1_100));
         }
-        h.record(Duration::from_millis(1));
-        let p50 = h.quantile(0.50);
-        let p99 = h.quantile(0.99);
-        // Bucket mids are within 2x of the true values.
-        assert!((512..=2_048).contains(&p50), "p50 ~1.1us, got {p50}ns");
-        assert!((512..=2_048).contains(&p99), "p99 still in the fast bucket, got {p99}ns");
-        let p100 = h.quantile(1.0);
-        assert!((524_288..=2_097_152).contains(&p100), "max ~1ms, got {p100}ns");
+        m.latency.record(Duration::from_millis(1));
+        let s = m.snapshot();
+        assert!((1_024..2_048).contains(&s.p50_ns), "p50 ~1.1us, got {}", s.p50_ns);
+        assert!((1_024..2_048).contains(&s.p99_ns), "p99 rank 99/100, got {}", s.p99_ns);
+    }
+
+    #[test]
+    fn metrics_json_and_prom_agree_without_a_hub() {
+        let shared = Shared {
+            hub: RwLock::new(None),
+            draining: AtomicBool::new(false),
+            max_frame: MAX_FRAME_DEFAULT,
+            metrics: ServeMetrics::new(),
+        };
+        shared.metrics.requests.fetch_add(3, Ordering::Relaxed);
+        let j = metrics_json(&shared);
+        assert_eq!(j.field("ready").unwrap(), &Json::Bool(false));
+        assert_eq!(
+            j.field("serve").unwrap().field("requests").unwrap().as_u64().unwrap(),
+            3
+        );
+        assert!(j.get("registry").is_some(), "unified registry rides the metrics op");
+        assert!(j.get("study_stats").is_some());
+        let prom = metrics_prom(&shared);
+        assert!(prom.contains("dbe_serve_requests 3\n"), "{prom}");
+        assert!(prom.contains("dbe_serve_ready 0\n"), "{prom}");
+        assert!(prom.contains("# TYPE dbe_serve_latency_ns summary"), "{prom}");
     }
 
     #[test]

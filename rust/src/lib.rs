@@ -68,6 +68,7 @@ pub mod error;
 pub mod gp;
 pub mod hub;
 pub mod linalg;
+pub mod obs;
 pub mod optim;
 pub mod repro;
 pub mod rng;

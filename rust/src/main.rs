@@ -69,10 +69,12 @@ fn print_usage() {
                         [--sync os|data|every:N] [--restart-budget R] [--snapshot-every N]\n\
                         [--compact  (with --journal: compact it and exit)]\n\
            dbe-bo serve [--addr HOST:PORT] [--workers K] [--pool-workers W] [--mailbox-cap C]\n\
-                        [--max-frame BYTES] [--journal PATH] [--resume]\n\
+                        [--max-frame BYTES] [--journal PATH] [--resume] [--record]\n\
                         [--sync os|data|every:N] [--restart-budget R] [--snapshot-every N]\n\
-           dbe-bo client [--addr HOST:PORT] [--shutdown | --metrics | --compact |\n\
+           dbe-bo client [--addr HOST:PORT] [--shutdown | --metrics [--prom] | --compact |\n\
                         --script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
+                        [--trace [--trace-out FILE]]  (arm the server's flight recorder,\n\
+                        drive the workload, dump Chrome trace JSON)\n\
            dbe-bo demo-coordinator --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo info\n\
          \n\
@@ -583,6 +585,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_frame: args.get_usize("max-frame", MAX_FRAME_DEFAULT)?,
     };
 
+    if args.has("record") {
+        // Arm the flight recorder for the whole process lifetime: every
+        // layer (serve/hub/pool/mso/gp/journal) records from frame one.
+        dbe_bo::obs::recorder::arm();
+        println!("flight recorder armed (dump with `dbe-bo client --trace`)");
+    }
+
     // Own the port first; replay the journal second. That ordering is
     // the whole replay/live-traffic race fix.
     let server = Server::bind(serve_cfg.clone())?;
@@ -640,12 +649,26 @@ fn cmd_client(args: &Args) -> Result<()> {
         return Ok(());
     }
     if args.has("metrics") {
-        println!("{}", HubClient::connect(&addr)?.metrics()?);
+        let mut client = HubClient::connect(&addr)?;
+        if args.has("prom") {
+            // Prometheus text exposition (`metrics --format=prom` op).
+            print!("{}", client.metrics_prom()?);
+        } else {
+            println!("{}", client.metrics()?);
+        }
         return Ok(());
     }
     if args.has("compact") {
         println!("{}", HubClient::connect(&addr)?.compact()?);
         return Ok(());
+    }
+
+    // `--trace`: arm the server's flight recorder, drive the workload,
+    // then dump Chrome trace JSON (Perfetto-loadable) to --trace-out.
+    let tracing = args.has("trace");
+    if tracing {
+        HubClient::connect(&addr)?.trace_arm(true)?;
+        println!("client: server flight recorder armed");
     }
 
     let studies = workload_from_args(args, 2, 20)?;
@@ -716,5 +739,18 @@ fn cmd_client(args: &Args) -> Result<()> {
         results.push(j.join().map_err(|_| Error::Hub("client driver panicked".into()))??);
     }
     println!("client run done in {:.2?}: {} studies", t0.elapsed(), results.len());
+    if tracing {
+        let mut client = HubClient::connect(&addr)?;
+        let trace = client.trace_dump()?;
+        client.trace_arm(false)?;
+        let n = trace.field("traceEvents")?.as_arr()?.len();
+        let out = args.get_str("trace-out", "");
+        if out.is_empty() {
+            println!("{trace}");
+        } else {
+            std::fs::write(&out, trace.to_string())?;
+            println!("trace: {n} events written to {out} (load in Perfetto / chrome://tracing)");
+        }
+    }
     Ok(())
 }

@@ -1,0 +1,191 @@
+//! Lock-free power-of-two histograms (extracted from `hub/serve.rs`).
+//!
+//! Bucket `i` counts samples in `[2^i, 2^(i+1))` — 64 fixed buckets
+//! cover every `u64` nanosecond value, recording is one relaxed
+//! `fetch_add`, and the memory footprint is constant. One [`Hist`]
+//! instance backs each latency site: serve request handling, pool
+//! coalescing waits, journal fsyncs (see [`super::registry`]).
+//!
+//! Quantile reads **interpolate within the bucket** by rank: the
+//! returned value walks linearly from the bucket's lower edge to its
+//! upper edge as the target rank moves through the bucket's samples.
+//! (The pre-extraction histogram reported a fixed bucket midpoint,
+//! which pinned every quantile that landed in one bucket to the same
+//! value and could sit a full 2× off a bucket-edge population.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A 64-bucket power-of-two histogram over `u64` samples
+/// (conventionally nanoseconds).
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record a duration in nanoseconds (saturating at `u64::MAX`).
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record a raw sample. Zero is clamped to 1 so it lands in the
+    /// lowest bucket instead of shifting by 64.
+    pub fn record_ns(&self, ns: u64) {
+        let ns = ns.max(1);
+        let idx = 63 - ns.leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate `q`-quantile (`0.0 ..= 1.0`), rank-interpolated
+    /// within the bucket. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64 * q).ceil() as u64).clamp(1, total);
+        let mut before = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if before + c >= target {
+                let lo = 1u64 << i;
+                let width = lo; // bucket i spans [2^i, 2^(i+1))
+                // Rank-interpolate: the j-th of the bucket's c samples
+                // (1-based) sits at lo + width·(j − ½)/c, so a lone
+                // sample reads the midpoint and a full sweep of ranks
+                // walks the bucket edge to edge.
+                let frac = (target - before) as f64 - 0.5;
+                // `as u64` saturates, which also guards the top bucket
+                // (lo = 2^63) against overflow.
+                return (lo as f64 + width as f64 * frac / c as f64) as u64;
+            }
+            before += c;
+        }
+        unreachable!("cumulative count reaches total")
+    }
+
+    /// Non-empty buckets as `(upper_bound_exclusive, count)` pairs in
+    /// ascending order — the raw material for Prometheus-style
+    /// cumulative `le` buckets.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then(|| ((1u64 << i).saturating_mul(2), c))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0, "q={q}");
+        }
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        let h = Hist::new();
+        // 1023 and 1024 straddle the bucket-9/bucket-10 edge; 2047 is
+        // the last value of bucket 10.
+        h.record_ns(1023);
+        assert_eq!(h.nonzero_buckets(), vec![(1024, 1)]);
+        h.record_ns(1024);
+        h.record_ns(2047);
+        assert_eq!(h.nonzero_buckets(), vec![(1024, 1), (2048, 2)]);
+        // Zero clamps into the lowest bucket instead of vanishing.
+        h.record_ns(0);
+        assert_eq!(h.nonzero_buckets()[0], (2, 1));
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_the_bucket() {
+        let h = Hist::new();
+        // 100 samples, all in bucket [1024, 2048).
+        for _ in 0..100 {
+            h.record_ns(1500);
+        }
+        let p10 = h.quantile(0.10);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // Interpolation must spread ranks across the bucket, not pin
+        // them all to one midpoint/upper-bound value.
+        assert!(p10 < p50 && p50 < p99, "p10={p10} p50={p50} p99={p99}");
+        assert!((1024..2048).contains(&p10), "p10 stays in-bucket, got {p10}");
+        assert!((1024..2048).contains(&p99), "p99 stays in-bucket, got {p99}");
+        // p50 of a uniform bucket sits near the bucket middle.
+        assert!((1400..=1700).contains(&p50), "p50 ≈ bucket middle, got {p50}");
+    }
+
+    #[test]
+    fn p50_p99_on_a_known_bimodal_distribution() {
+        let h = Hist::new();
+        // 99 fast (~1.1 µs) + 1 slow (~1 ms): p50 fast, p100 slow.
+        for _ in 0..99 {
+            h.record(Duration::from_nanos(1_100));
+        }
+        h.record(Duration::from_millis(1));
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p100 = h.quantile(1.0);
+        assert!((1024..2048).contains(&p50), "p50 in the fast bucket, got {p50}");
+        assert!((1024..2048).contains(&p99), "p99 still fast (rank 99), got {p99}");
+        assert!(
+            (524_288..=1_048_576).contains(&p100),
+            "max in the ~1 ms bucket, got {p100}"
+        );
+    }
+
+    #[test]
+    fn a_single_sample_reads_its_bucket_midpoint() {
+        let h = Hist::new();
+        h.record_ns(1_000_000); // bucket [2^19, 2^20)
+        let mid = (1u64 << 19) + (1u64 << 18);
+        for q in [0.01, 0.5, 1.0] {
+            assert_eq!(h.quantile(q), mid, "q={q}");
+        }
+    }
+
+    #[test]
+    fn top_bucket_saturates_without_overflow() {
+        let h = Hist::new();
+        h.record_ns(u64::MAX);
+        h.record(Duration::from_secs(u64::MAX)); // as_nanos > u64::MAX
+        let q = h.quantile(1.0);
+        assert!(q >= 1u64 << 63, "top bucket lower edge, got {q}");
+        assert_eq!(h.count(), 2);
+        // The exclusive upper bound saturates instead of wrapping.
+        assert_eq!(h.nonzero_buckets(), vec![(u64::MAX, 2)]);
+    }
+}

@@ -1,0 +1,37 @@
+//! Observability: flight recorder, unified metrics, exposition
+//! (ISSUE 9).
+//!
+//! Three zero-dependency pieces answer "where did this slow ask spend
+//! its time?" across every layer of the serving stack:
+//!
+//! * [`recorder`] — a process-global, lock-free ring buffer of
+//!   structured span/instant events instrumenting the full ask path:
+//!   serve frame decode → hub actor dispatch → pool coalescing wait →
+//!   MSO per-restart QN loop → GP fit stages → journal
+//!   append/fsync/snapshot/compaction. Disarmed cost is a single
+//!   relaxed atomic load; armed, recording never feeds RNG or
+//!   suggestions, so bitwise-equivalence guarantees hold with tracing
+//!   on.
+//! * [`hist`] + [`registry`] — the power-of-two latency histogram
+//!   (extracted from `hub/serve.rs`, now with rank-interpolated
+//!   quantiles) and a process-global namespace of named counters and
+//!   histograms fed by the serve tier, the acquisition pool, the
+//!   journal, and the actor supervisor.
+//! * [`trace`] — Chrome trace-event JSON rendering of the recorder,
+//!   served by the `trace` wire op (`dbe-bo client --trace
+//!   --trace-out t.json`, Perfetto-loadable). The registry is exposed
+//!   as JSON under the `metrics` op and as Prometheus text via
+//!   `metrics --format=prom`.
+//!
+//! The supervisor additionally attaches the crashed study's last-K
+//! recorder events to its `PanicRecord` — a black box for
+//! postmortems (see `hub::StudyHub::panic_log`).
+
+pub mod hist;
+pub mod recorder;
+pub mod registry;
+pub mod trace;
+
+pub use hist::Hist;
+pub use recorder::{armed, instant, span, span_args, ArgV, Event, Phase, Span, NO_STUDY};
+pub use registry::Counter;

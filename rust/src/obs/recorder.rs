@@ -1,0 +1,445 @@
+//! The flight recorder: a process-global, lock-free ring buffer of
+//! structured span/instant events.
+//!
+//! ## Design constraints (ISSUE 9)
+//!
+//! * **Disarmed cost is one relaxed atomic load.** Every emit helper
+//!   checks [`armed`] first and returns before touching the clock, the
+//!   cursor, or the ring (same idiom as the failpoint registry's
+//!   unarmed fast path). `benches/obs_overhead.rs` asserts this stays
+//!   under 1% of hub ask throughput.
+//! * **Deterministic-safe.** Recording never feeds RNG, suggestions,
+//!   or any other computation — armed or not, the optimizer's outputs
+//!   are bitwise those of an uninstrumented run (asserted by the chaos
+//!   battery with the recorder armed). Wall clocks are read only
+//!   *after* the armed check, so a disarmed process reads no clocks at
+//!   all on instrumented paths.
+//! * **Lock-free, lossy by design.** Writers claim slots with one
+//!   `fetch_add` on a global cursor and publish through a per-slot
+//!   seqlock; when the ring wraps, old events are overwritten. Readers
+//!   ([`drain`], [`recent_for_study`]) validate each slot's seqlock
+//!   word and silently skip slots torn by a concurrent writer — a
+//!   flight recorder favors bounded memory and zero contention over
+//!   completeness.
+//!
+//! ## Span taxonomy
+//!
+//! | cat       | names                                   | layer |
+//! |-----------|-----------------------------------------|-------|
+//! | `serve`   | per-op frame spans (`ask`, `tell`, …)   | TCP front-end |
+//! | `hub`     | `ask`/`tell` spans, `restart` span per supervised attempt | study actors |
+//! | `pool`    | `oracle` span, `coalesce` instant       | acquisition pool |
+//! | `mso`     | `suggest` span, `qn_restart`/`qn_shared` instants | multi-start optimizer / L-BFGS-B |
+//! | `gp`      | `fit_full`, `refit_append` spans        | GP fit engine |
+//! | `journal` | `append`/`clawback` instants, `snapshot`/`compact` spans (fsync latency lives in the registry histogram `hub.journal.fsync_ns`) | durability |
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Ring capacity (a power of two). 4096 events × ~150 B ≈ 0.6 MiB of
+/// static storage — roughly the last few hundred asks of full-path
+/// context.
+pub const RING_CAP: usize = 4096;
+
+/// Maximum structured args per event.
+pub const MAX_ARGS: usize = 4;
+
+/// `study` value for events not attributable to one study.
+pub const NO_STUDY: u32 = u32::MAX;
+
+/// Event phase, mirroring Chrome trace-event phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Span enter (`ph:"B"`).
+    Begin,
+    /// Span exit (`ph:"E"`).
+    End,
+    /// Point event (`ph:"i"`).
+    Instant,
+}
+
+/// A structured argument value. `&'static str` only — event emission
+/// must never allocate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArgV {
+    None,
+    I(i64),
+    U(u64),
+    F(f64),
+    S(&'static str),
+}
+
+/// One recorded event. `Copy` and allocation-free by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Global emission index (total order across threads).
+    pub seq: u64,
+    pub phase: Phase,
+    /// Layer tag — see the span taxonomy table in the module docs.
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Hub study index, or [`NO_STUDY`].
+    pub study: u32,
+    /// Small per-thread id (assignment order, not OS tid).
+    pub tid: u32,
+    /// Nanoseconds since the recorder epoch (first arm).
+    pub t_ns: u64,
+    pub args: [(&'static str, ArgV); MAX_ARGS],
+}
+
+const EMPTY_EVENT: Event = Event {
+    seq: 0,
+    phase: Phase::Instant,
+    cat: "",
+    name: "",
+    study: NO_STUDY,
+    tid: 0,
+    t_ns: 0,
+    args: [("", ArgV::None); MAX_ARGS],
+};
+
+impl std::fmt::Display for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ph = match self.phase {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+        };
+        write!(f, "[{:>12}ns t{}] {} {}/{}", self.t_ns, self.tid, ph, self.cat, self.name)?;
+        if self.study != NO_STUDY {
+            write!(f, " study={}", self.study)?;
+        }
+        for (k, v) in &self.args {
+            match v {
+                ArgV::None => {}
+                ArgV::I(x) => write!(f, " {k}={x}")?,
+                ArgV::U(x) => write!(f, " {k}={x}")?,
+                ArgV::F(x) => write!(f, " {k}={x}")?,
+                ArgV::S(x) => write!(f, " {k}={x}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One ring slot: a seqlock word plus the payload.
+///
+/// State protocol: `0` = never written; a writer claiming global index
+/// `n` stores `2n+1` (write in progress), fills the payload, then
+/// stores `2n+2` (published). A reader accepts a slot only if it loads
+/// the same even, non-zero state before and after copying the payload
+/// *and* the payload's own `seq` agrees — anything else is a torn or
+/// stale slot and is skipped.
+struct Slot {
+    state: AtomicU64,
+    ev: UnsafeCell<Event>,
+}
+
+// SAFETY: the payload is only read through the seqlock protocol above —
+// a torn read is detected by the state word changing and the copy is
+// discarded, never dereferenced as anything but the `Copy` bytes of an
+// `Event`. Volatile copies keep the racing access from being folded.
+unsafe impl Sync for Slot {}
+
+const EMPTY_SLOT: Slot =
+    Slot { state: AtomicU64::new(0), ev: UnsafeCell::new(EMPTY_EVENT) };
+
+static RING: [Slot; RING_CAP] = [EMPTY_SLOT; RING_CAP];
+static CURSOR: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Whether the recorder is armed — the one relaxed load every
+/// instrumented site pays when disarmed.
+#[inline(always)]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm the recorder. The first arm pins the epoch all `t_ns` values
+/// are measured from.
+pub fn arm() {
+    let _ = epoch();
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm the recorder. Already-recorded events stay readable.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Total events ever emitted (monotonic; not capped at [`RING_CAP`]).
+pub fn emitted() -> u64 {
+    CURSOR.load(Ordering::Relaxed)
+}
+
+fn tid() -> u32 {
+    thread_local! {
+        static TID: Cell<u32> = const { Cell::new(u32::MAX) };
+    }
+    TID.with(|c| {
+        if c.get() == u32::MAX {
+            c.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        c.get()
+    })
+}
+
+fn emit(
+    phase: Phase,
+    cat: &'static str,
+    name: &'static str,
+    study: u32,
+    args: &[(&'static str, ArgV)],
+) {
+    // Callers check `armed()` first; re-checking here keeps direct
+    // callers honest without measurable cost (the branch is taken).
+    if !armed() {
+        return;
+    }
+    let t_ns = epoch().elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    let mut ev = Event { seq: 0, phase, cat, name, study, tid: tid(), t_ns, args: EMPTY_EVENT.args };
+    for (slot, arg) in ev.args.iter_mut().zip(args) {
+        *slot = *arg;
+    }
+    let seq = CURSOR.fetch_add(1, Ordering::Relaxed);
+    ev.seq = seq;
+    let slot = &RING[(seq as usize) & (RING_CAP - 1)];
+    slot.state.store(seq * 2 + 1, Ordering::Release);
+    // SAFETY: see `Slot` — racing writers/readers are resolved by the
+    // seqlock word; the payload is plain `Copy` data.
+    unsafe { std::ptr::write_volatile(slot.ev.get(), ev) };
+    slot.state.store(seq * 2 + 2, Ordering::Release);
+}
+
+/// Emit a point event.
+pub fn instant(
+    cat: &'static str,
+    name: &'static str,
+    study: u32,
+    args: &[(&'static str, ArgV)],
+) {
+    emit(Phase::Instant, cat, name, study, args);
+}
+
+/// RAII span: emits `Begin` on creation (when armed) and the matching
+/// `End` on drop. A span created while disarmed stays inert even if
+/// the recorder arms mid-span, so `Begin`/`End` pairs stay matched.
+pub struct Span {
+    live: bool,
+    cat: &'static str,
+    name: &'static str,
+    study: u32,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live && armed() {
+            emit(Phase::End, self.cat, self.name, self.study, &[]);
+        }
+    }
+}
+
+/// Open a span with no args.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str, study: u32) -> Span {
+    span_args(cat, name, study, &[])
+}
+
+/// Open a span whose `Begin` event carries args.
+#[inline]
+pub fn span_args(
+    cat: &'static str,
+    name: &'static str,
+    study: u32,
+    args: &[(&'static str, ArgV)],
+) -> Span {
+    if !armed() {
+        return Span { live: false, cat, name, study };
+    }
+    emit(Phase::Begin, cat, name, study, args);
+    Span { live: true, cat, name, study }
+}
+
+fn read_slot(slot: &Slot) -> Option<Event> {
+    let s1 = slot.state.load(Ordering::Acquire);
+    if s1 == 0 || s1 % 2 == 1 {
+        return None; // never written, or a write in progress
+    }
+    // SAFETY: seqlock protocol (see `Slot`); a torn copy is discarded
+    // below when the state word disagrees.
+    let ev = unsafe { std::ptr::read_volatile(slot.ev.get()) };
+    std::sync::atomic::fence(Ordering::Acquire);
+    let s2 = slot.state.load(Ordering::Relaxed);
+    (s1 == s2 && ev.seq * 2 + 2 == s1).then_some(ev)
+}
+
+/// Copy out every readable event, oldest first. A concurrent writer
+/// may overwrite slots mid-drain; such slots are skipped, not torn.
+pub fn drain() -> Vec<Event> {
+    let mut out: Vec<Event> = RING.iter().filter_map(read_slot).collect();
+    out.sort_by_key(|e| e.seq);
+    out
+}
+
+/// The last `k` readable events attributed to `study`, oldest first —
+/// the black-box trail the supervisor attaches to a `PanicRecord`.
+pub fn recent_for_study(study: u32, k: usize) -> Vec<Event> {
+    let mut events = drain();
+    events.retain(|e| e.study == study);
+    let skip = events.len().saturating_sub(k);
+    events.split_off(skip)
+}
+
+/// Reset cursor and ring for a fresh recording. Only meaningful while
+/// no writers are active; tests serialize on [`exclusive`].
+pub fn reset() {
+    disarm();
+    CURSOR.store(0, Ordering::Release);
+    for slot in &RING {
+        slot.state.store(0, Ordering::Release);
+    }
+}
+
+/// Guard serializing tests that arm the (process-global) recorder;
+/// resets on acquire *and* on drop.
+pub struct TestGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        reset();
+    }
+}
+
+/// Take the process-wide recorder test lock (mirrors
+/// `failpoint::exclusive`).
+pub fn exclusive() -> TestGuard {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(PoisonError::into_inner);
+    reset();
+    TestGuard(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_recorder_emits_nothing() {
+        let _g = exclusive();
+        instant("t", "noop", NO_STUDY, &[]);
+        let _s = span("t", "noop", NO_STUDY);
+        drop(_s);
+        assert_eq!(emitted(), 0);
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn spans_pair_and_instants_carry_args() {
+        let _g = exclusive();
+        arm();
+        {
+            let _s = span_args("t", "work", 3, &[("q", ArgV::U(2))]);
+            instant(
+                "t",
+                "step",
+                3,
+                &[("i", ArgV::I(-1)), ("f", ArgV::F(0.5)), ("s", ArgV::S("tok"))],
+            );
+        }
+        disarm();
+        let events = drain();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].phase, Phase::Begin);
+        assert_eq!(events[0].args[0], ("q", ArgV::U(2)));
+        assert_eq!(events[1].phase, Phase::Instant);
+        assert_eq!(events[1].args[2], ("s", ArgV::S("tok")));
+        assert_eq!(events[2].phase, Phase::End);
+        assert_eq!(events[2].name, "work");
+        // Monotonic seq and non-decreasing time on one thread.
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+    }
+
+    #[test]
+    fn span_opened_disarmed_stays_inert_after_arming() {
+        let _g = exclusive();
+        let s = span("t", "late", NO_STUDY);
+        arm();
+        drop(s); // must NOT emit an unmatched End
+        disarm();
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_events() {
+        let _g = exclusive();
+        arm();
+        let n = (RING_CAP + 100) as u64;
+        for i in 0..n {
+            instant("t", "tick", NO_STUDY, &[("i", ArgV::U(i))]);
+        }
+        disarm();
+        let events = drain();
+        assert_eq!(events.len(), RING_CAP);
+        assert_eq!(events.first().unwrap().seq, n - RING_CAP as u64);
+        assert_eq!(events.last().unwrap().seq, n - 1);
+        assert_eq!(emitted(), n);
+    }
+
+    #[test]
+    fn recent_for_study_filters_and_truncates() {
+        let _g = exclusive();
+        arm();
+        for i in 0..10u64 {
+            instant("t", "a", 1, &[("i", ArgV::U(i))]);
+            instant("t", "b", 2, &[("i", ArgV::U(i))]);
+        }
+        disarm();
+        let trail = recent_for_study(2, 4);
+        assert_eq!(trail.len(), 4);
+        assert!(trail.iter().all(|e| e.study == 2 && e.name == "b"));
+        assert_eq!(trail.last().unwrap().args[0], ("i", ArgV::U(9)));
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear_reads() {
+        let _g = exclusive();
+        arm();
+        let writers: Vec<_> = (0..4u32)
+            .map(|w| {
+                std::thread::Builder::new()
+                    .name(format!("obs-test-{w}"))
+                    .spawn(move || {
+                        for i in 0..5_000u64 {
+                            instant("t", "w", w, &[("i", ArgV::U(i)), ("w", ArgV::U(w as u64))]);
+                        }
+                    })
+                    .unwrap()
+            })
+            .collect();
+        // Drain concurrently with the writers: every accepted event
+        // must be internally consistent.
+        for _ in 0..50 {
+            for e in drain() {
+                assert_eq!(e.cat, "t");
+                assert_eq!(e.name, "w");
+                let (_, ArgV::U(w)) = e.args[1] else { panic!("torn args: {e:?}") };
+                assert_eq!(e.study, w as u32, "study/arg mismatch: torn write");
+            }
+        }
+        for j in writers {
+            j.join().unwrap();
+        }
+        disarm();
+        assert_eq!(emitted(), 20_000);
+        assert_eq!(drain().len(), RING_CAP);
+    }
+}

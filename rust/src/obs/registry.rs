@@ -1,0 +1,267 @@
+//! Unified metrics registry: named counters and histograms from every
+//! subsystem (serve, coordinator/pool, journal, supervisor) behind one
+//! process-global namespace, exposed through the `metrics` wire op
+//! (JSON) and `metrics --format=prom` (Prometheus text).
+//!
+//! Handles are `&'static` — registration leaks one allocation per
+//! distinct name (the name set is a small fixed vocabulary), after
+//! which a counter hit is one relaxed `fetch_add` with no locking.
+//! Subsystems register at construction time (`Journal::open`,
+//! `AcqPool::spawn`) or through a per-site `OnceLock` and hold the
+//! handle, so hot paths never touch the registry mutex.
+//!
+//! Naming convention: `<subsystem>.<metric>[_ns]` — histogram names
+//! end in `_ns` when the samples are nanoseconds, e.g.
+//! `hub.journal.fsync_ns`, `hub.pool.coalesce_wait_ns`,
+//! `hub.supervisor.restarts`.
+
+use super::hist::Hist;
+use crate::hub::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+/// A monotonically increasing named counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(&'static Counter),
+    Hist(&'static Hist),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<&'static str, Metric>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<&'static str, Metric>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, BTreeMap<&'static str, Metric>> {
+    registry().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Get or register the named counter.
+///
+/// # Panics
+/// If `name` is already registered as a histogram.
+pub fn counter(name: &'static str) -> &'static Counter {
+    let mut map = lock();
+    match map
+        .entry(name)
+        .or_insert_with(|| Metric::Counter(Box::leak(Box::new(Counter::default()))))
+    {
+        Metric::Counter(c) => *c,
+        Metric::Hist(_) => panic!("metric '{name}' is registered as a histogram"),
+    }
+}
+
+/// Get or register the named histogram.
+///
+/// # Panics
+/// If `name` is already registered as a counter.
+pub fn hist(name: &'static str) -> &'static Hist {
+    let mut map = lock();
+    match map.entry(name).or_insert_with(|| Metric::Hist(Box::leak(Box::new(Hist::new())))) {
+        Metric::Hist(h) => *h,
+        Metric::Counter(_) => panic!("metric '{name}' is registered as a counter"),
+    }
+}
+
+/// Point-in-time value of one registered metric.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Hist { count: u64, p50_ns: u64, p99_ns: u64, buckets: Vec<(u64, u64)> },
+}
+
+/// Snapshot every registered metric, name-sorted.
+pub fn snapshot() -> Vec<(&'static str, MetricValue)> {
+    lock()
+        .iter()
+        .map(|(&name, m)| {
+            let v = match m {
+                Metric::Counter(c) => MetricValue::Counter(c.get()),
+                Metric::Hist(h) => MetricValue::Hist {
+                    count: h.count(),
+                    p50_ns: h.quantile(0.50),
+                    p99_ns: h.quantile(0.99),
+                    buckets: h.nonzero_buckets(),
+                },
+            };
+            (name, v)
+        })
+        .collect()
+}
+
+/// The registry as the `registry` object of the `metrics` wire op:
+/// `{"<name>": <count>, …}` for counters,
+/// `{"<name>": {"count":…,"p50_ns":…,"p99_ns":…}, …}` for histograms.
+pub fn to_json() -> Json {
+    Json::Obj(
+        snapshot()
+            .into_iter()
+            .map(|(name, v)| {
+                let value = match v {
+                    MetricValue::Counter(n) => Json::u64(n),
+                    MetricValue::Hist { count, p50_ns, p99_ns, .. } => Json::Obj(vec![
+                        ("count".into(), Json::u64(count)),
+                        ("p50_ns".into(), Json::u64(p50_ns)),
+                        ("p99_ns".into(), Json::u64(p99_ns)),
+                    ]),
+                };
+                (name.to_string(), value)
+            })
+            .collect(),
+    )
+}
+
+/// Sanitize a metric name for Prometheus (`[a-zA-Z0-9_:]`).
+pub fn prom_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Append one Prometheus sample line: `name{labels} value`.
+pub fn prom_line(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(&prom_name(name));
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            // Prometheus label escaping: backslash, quote, newline.
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    // Prometheus text format wants plain decimal; u64-exact values
+    // print without a fractional part.
+    if value.fract() == 0.0 && value.abs() < 9.007_199_254_740_992e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value}"));
+    }
+    out.push('\n');
+}
+
+/// Render every registered metric in the Prometheus text exposition
+/// format: counters as `counter`, histograms as cumulative-`le` bucket
+/// series with `_count` (the classic histogram type).
+pub fn prom_text() -> String {
+    let mut out = String::new();
+    for (name, v) in snapshot() {
+        let pname = prom_name(name);
+        match v {
+            MetricValue::Counter(n) => {
+                out.push_str(&format!("# TYPE {pname} counter\n"));
+                prom_line(&mut out, name, &[], n as f64);
+            }
+            MetricValue::Hist { count, buckets, .. } => {
+                out.push_str(&format!("# TYPE {pname} histogram\n"));
+                let mut cum = 0u64;
+                for (le, c) in buckets {
+                    cum += c;
+                    let le_s = le.to_string();
+                    prom_line(
+                        &mut out,
+                        &format!("{name}_bucket"),
+                        &[("le", &le_s)],
+                        cum as f64,
+                    );
+                }
+                prom_line(&mut out, &format!("{name}_bucket"), &[("le", "+Inf")], count as f64);
+                prom_line(&mut out, &format!("{name}_count"), &[], count as f64);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_hists_register_once_and_accumulate() {
+        let c = counter("obs.test.registry_counter");
+        let before = c.get();
+        c.inc();
+        c.add(2);
+        assert_eq!(counter("obs.test.registry_counter").get(), before + 3);
+
+        let h = hist("obs.test.registry_hist_ns");
+        h.record_ns(1500);
+        assert!(hist("obs.test.registry_hist_ns").count() >= 1);
+    }
+
+    #[test]
+    fn snapshot_and_json_carry_both_kinds() {
+        counter("obs.test.snap_counter").inc();
+        hist("obs.test.snap_hist_ns").record_ns(3000);
+        let j = to_json();
+        assert!(j.get("obs.test.snap_counter").unwrap().as_u64().unwrap() >= 1);
+        let h = j.get("obs.test.snap_hist_ns").unwrap();
+        assert!(h.field("count").unwrap().as_u64().unwrap() >= 1);
+        assert!(h.field("p50_ns").unwrap().as_u64().unwrap() >= 2048);
+    }
+
+    #[test]
+    fn prom_text_is_well_formed() {
+        counter("obs.test.prom_counter").add(7);
+        hist("obs.test.prom_hist_ns").record_ns(1000);
+        let text = prom_text();
+        assert!(text.contains("# TYPE obs_test_prom_counter counter"));
+        assert!(text.contains("obs_test_prom_counter "));
+        assert!(text.contains("# TYPE obs_test_prom_hist_ns histogram"));
+        assert!(text.contains("obs_test_prom_hist_ns_bucket{le=\"1024\"}"));
+        assert!(text.contains("obs_test_prom_hist_ns_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("obs_test_prom_hist_ns_count "));
+        // Every line is `name{…} value` or a comment.
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.rsplit_once(' ').is_some(),
+                "bad prom line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn prom_names_and_labels_escape() {
+        assert_eq!(prom_name("hub.pool.coalesce_wait_ns"), "hub_pool_coalesce_wait_ns");
+        assert_eq!(prom_name("9lives"), "_9lives");
+        let mut out = String::new();
+        prom_line(&mut out, "m.x", &[("study", "a\"b\\c")], 1.5);
+        assert_eq!(out, "m_x{study=\"a\\\"b\\\\c\"} 1.5\n");
+    }
+}

@@ -1,0 +1,148 @@
+//! Chrome trace-event JSON exposition for the flight recorder.
+//!
+//! [`chrome_trace`] renders a drained event list as the Trace Event
+//! Format object (`{"traceEvents":[…]}`) that `chrome://tracing` and
+//! Perfetto load directly: span enter/exit become `ph:"B"`/`ph:"E"`
+//! duration events, instants become thread-scoped `ph:"i"`, and
+//! timestamps are microseconds since the recorder epoch (fractional,
+//! so nanosecond resolution survives). Reached over the wire via the
+//! `trace` op and `dbe-bo client --trace --trace-out <file>`.
+
+use super::recorder::{ArgV, Event, Phase, NO_STUDY};
+use crate::hub::json::Json;
+
+fn arg_json(v: &ArgV) -> Json {
+    match v {
+        ArgV::None => Json::Null,
+        ArgV::I(x) => Json::Num(x.to_string()),
+        ArgV::U(x) => Json::u64(*x),
+        ArgV::F(x) if x.is_finite() => Json::f64(*x),
+        // JSON has no Inf/NaN tokens; stringify the rare non-finite.
+        ArgV::F(x) => Json::Str(format!("{x}")),
+        ArgV::S(s) => Json::Str((*s).to_string()),
+    }
+}
+
+fn event_json(e: &Event) -> Json {
+    let ph = match e.phase {
+        Phase::Begin => "B",
+        Phase::End => "E",
+        Phase::Instant => "i",
+    };
+    let mut fields = vec![
+        ("name".into(), Json::Str(e.name.into())),
+        ("cat".into(), Json::Str(e.cat.into())),
+        ("ph".into(), Json::Str(ph.into())),
+        // Trace-event timestamps are microseconds; keep the nanosecond
+        // fraction.
+        ("ts".into(), Json::f64(e.t_ns as f64 / 1_000.0)),
+        ("pid".into(), Json::u64(1)),
+        ("tid".into(), Json::u64(e.tid as u64)),
+    ];
+    if e.phase == Phase::Instant {
+        // Thread-scoped instant, drawn as a tick on its thread track.
+        fields.push(("s".into(), Json::Str("t".into())));
+    }
+    let mut args = Vec::new();
+    if e.study != NO_STUDY {
+        args.push(("study".into(), Json::u64(e.study as u64)));
+    }
+    for (k, v) in &e.args {
+        if !matches!(v, ArgV::None) {
+            args.push(((*k).to_string(), arg_json(v)));
+        }
+    }
+    if !args.is_empty() {
+        fields.push(("args".into(), Json::Obj(args)));
+    }
+    Json::Obj(fields)
+}
+
+/// Render events (as returned by [`super::recorder::drain`]) as one
+/// Chrome trace-event JSON object.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(events.iter().map(event_json).collect())),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder;
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_json_parser() {
+        let _g = recorder::exclusive();
+        recorder::arm();
+        {
+            let _s = recorder::span_args(
+                "mso",
+                "suggest",
+                4,
+                &[("restarts", ArgV::U(8)), ("strategy", ArgV::S("dbe"))],
+            );
+            recorder::instant(
+                "mso",
+                "qn_restart",
+                4,
+                &[("iters", ArgV::U(12)), ("grad_inf", ArgV::F(1.5e-9))],
+            );
+        }
+        recorder::disarm();
+        let events = recorder::drain();
+        let text = chrome_trace(&events).to_string();
+        let back = Json::parse(&text).expect("trace JSON parses");
+        let list = back.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(list.len(), 3);
+
+        let begin = &list[0];
+        assert_eq!(begin.field("ph").unwrap().as_str().unwrap(), "B");
+        assert_eq!(begin.field("cat").unwrap().as_str().unwrap(), "mso");
+        assert_eq!(begin.field("name").unwrap().as_str().unwrap(), "suggest");
+        let args = begin.field("args").unwrap();
+        assert_eq!(args.field("study").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(args.field("strategy").unwrap().as_str().unwrap(), "dbe");
+
+        let inst = &list[1];
+        assert_eq!(inst.field("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(inst.field("s").unwrap().as_str().unwrap(), "t");
+        let g = inst.field("args").unwrap().field("grad_inf").unwrap().as_f64().unwrap();
+        assert_eq!(g.to_bits(), 1.5e-9f64.to_bits(), "f64 args round-trip bitwise");
+
+        let end = &list[2];
+        assert_eq!(end.field("ph").unwrap().as_str().unwrap(), "E");
+        // Timestamps are non-decreasing microseconds.
+        let ts: Vec<f64> =
+            list.iter().map(|e| e.field("ts").unwrap().as_f64().unwrap()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+    }
+
+    #[test]
+    fn negative_and_nonfinite_args_encode_safely() {
+        let e = Event {
+            seq: 0,
+            phase: Phase::Instant,
+            cat: "t",
+            name: "x",
+            study: NO_STUDY,
+            tid: 0,
+            t_ns: 1,
+            args: [
+                ("i", ArgV::I(-3)),
+                ("inf", ArgV::F(f64::INFINITY)),
+                ("", ArgV::None),
+                ("", ArgV::None),
+            ],
+        };
+        let text = chrome_trace(&[e]).to_string();
+        let back = Json::parse(&text).expect("parses despite non-finite arg");
+        let args = back.field("traceEvents").unwrap().as_arr().unwrap()[0]
+            .field("args")
+            .unwrap()
+            .clone();
+        assert_eq!(args.field("i").unwrap().as_f64().unwrap(), -3.0);
+        assert_eq!(args.field("inf").unwrap().as_str().unwrap(), "inf");
+    }
+}

@@ -144,6 +144,13 @@ impl Lbfgsb {
         }
     }
 
+    /// ‖P(x − g) − x‖∞ at the current iterate — the same bound-aware
+    /// first-order criterion the stop test uses, exposed so telemetry
+    /// can report how converged each restart finished.
+    pub fn grad_inf_norm(&self) -> f64 {
+        self.projected_grad_norm(&self.x, &self.g)
+    }
+
     /// ‖P(x − g) − x‖∞ — the bound-aware first-order criterion.
     fn projected_grad_norm(&self, x: &[f64], g: &[f64]) -> f64 {
         let mut m = 0.0f64;

@@ -53,6 +53,18 @@ impl StopReason {
     pub fn is_converged(self) -> bool {
         matches!(self, StopReason::GradTol | StopReason::FTol)
     }
+
+    /// Stable short token (flight-recorder args, logs).
+    pub fn token(self) -> &'static str {
+        match self {
+            StopReason::GradTol => "gradtol",
+            StopReason::FTol => "ftol",
+            StopReason::MaxIters => "max_iters",
+            StopReason::MaxEvals => "max_evals",
+            StopReason::LineSearchFailed => "linesearch",
+            StopReason::NumericalError => "numerical",
+        }
+    }
 }
 
 /// Common ask/tell interface implemented by [`lbfgsb::Lbfgsb`] and

@@ -72,6 +72,21 @@ impl Cbe {
 
         // The paper reports C-BE's Iters. as the shared coupled count.
         let iters = opt.n_iters();
+        if crate::obs::armed() {
+            // One instant for the whole coupled run: the QN state is
+            // shared, so there is no per-restart count to report.
+            crate::obs::instant(
+                "mso",
+                "qn_shared",
+                crate::obs::NO_STUDY,
+                &[
+                    ("iters", crate::obs::ArgV::U(iters as u64)),
+                    ("evals", crate::obs::ArgV::U(opt.n_evals() as u64)),
+                    ("grad_inf", crate::obs::ArgV::F(opt.grad_inf_norm())),
+                    ("reason", crate::obs::ArgV::S(reason.token())),
+                ],
+            );
+        }
         let restarts: Vec<RestartResult> = best_per
             .into_iter()
             .map(|(f, x)| RestartResult { x, f, iters, reason })

@@ -175,6 +175,24 @@ impl CbeBlockDiag {
             }
         };
 
+        if crate::obs::armed() {
+            let pg = x
+                .iter()
+                .zip(&gs)
+                .map(|(xb, gb)| proj_grad_norm(xb, gb, &cfg.bounds))
+                .fold(0.0f64, f64::max);
+            crate::obs::instant(
+                "mso",
+                "qn_shared",
+                crate::obs::NO_STUDY,
+                &[
+                    ("iters", crate::obs::ArgV::U(iters as u64)),
+                    ("evals", crate::obs::ArgV::U(n_points as u64)),
+                    ("grad_inf", crate::obs::ArgV::F(pg)),
+                    ("reason", crate::obs::ArgV::S(reason.token())),
+                ],
+            );
+        }
         let restarts: Vec<RestartResult> = best
             .into_iter()
             .map(|(f, p)| RestartResult { x: p, f, iters, reason })

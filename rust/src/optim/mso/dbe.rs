@@ -80,13 +80,31 @@ pub(super) fn drive_decoupled(
     Ok(reasons)
 }
 
-/// Package one driven state as a [`RestartResult`].
+/// Package one driven state as a [`RestartResult`]. When the flight
+/// recorder is armed, one `mso/qn_restart` instant per restart carries
+/// the paper's per-restart QN telemetry (iterations, line-search evals,
+/// final projected-gradient ∞-norm, convergence reason); disarmed, this
+/// is pure packaging.
 pub(super) fn restart_result(opt: &Lbfgsb, reason: Option<StopReason>) -> RestartResult {
+    let reason = reason.unwrap_or(StopReason::MaxEvals);
+    if crate::obs::armed() {
+        crate::obs::instant(
+            "mso",
+            "qn_restart",
+            crate::obs::NO_STUDY,
+            &[
+                ("iters", crate::obs::ArgV::U(opt.n_iters() as u64)),
+                ("evals", crate::obs::ArgV::U(opt.n_evals() as u64)),
+                ("grad_inf", crate::obs::ArgV::F(opt.grad_inf_norm())),
+                ("reason", crate::obs::ArgV::S(reason.token())),
+            ],
+        );
+    }
     RestartResult {
         x: opt.best_x().to_vec(),
         f: opt.best_f(),
         iters: opt.n_iters(),
-        reason: reason.unwrap_or(StopReason::MaxEvals),
+        reason,
     }
 }
 

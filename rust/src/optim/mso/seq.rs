@@ -1,6 +1,6 @@
 //! SEQ. OPT. (paper Algorithm 2): B independent sequential L-BFGS-B runs.
 
-use super::{MsoConfig, MsoResult, RestartResult};
+use super::{MsoConfig, MsoResult};
 use crate::batcheval::BatchAcqEvaluator;
 use crate::optim::lbfgsb::Lbfgsb;
 use crate::optim::{Ask, AskTellOptimizer};
@@ -36,12 +36,7 @@ impl SeqOpt {
                     Ask::Done(r) => break r,
                 }
             };
-            restarts.push(RestartResult {
-                x: opt.best_x().to_vec(),
-                f: opt.best_f(),
-                iters: opt.n_iters(),
-                reason,
-            });
+            restarts.push(super::dbe::restart_result(&opt, Some(reason)));
         }
 
         Ok(MsoResult::from_restarts(restarts, n_batches, n_points, t0.elapsed()))

@@ -677,6 +677,60 @@ fn wire_level_crash_answers_typed_frames_and_metrics_report_it() {
     server.join();
 }
 
+/// The flight recorder must be a PURE observer (ISSUE 9). Re-run the
+/// panic-storm recovery scenario with the recorder ARMED on the
+/// faulted hub while the fault-free twin runs without it: recovery
+/// must still be bitwise identical (tracing feeds no RNG, no
+/// suggestion), and the supervisor must attach a non-empty recorder
+/// trail to every `PanicRecord` it files.
+#[test]
+fn armed_flight_recorder_never_perturbs_bitwise_equivalence() {
+    let _rec = dbe_bo::obs::recorder::exclusive();
+    let _guard = failpoint::exclusive();
+    let _quiet = QuietPanics::install();
+    let n = 8;
+
+    // Fault-free twin, recorder disarmed.
+    let twin = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let twin_id = twin.create_study(StudySpec::new("s", quick_cfg(), 33)).unwrap();
+    drive(&twin, twin_id, n, 2);
+
+    // Faulted hub with tracing on for the whole run.
+    dbe_bo::obs::recorder::arm();
+    let hub = StudyHub::open(chaos_cfg(None, 0)).unwrap();
+    let id = hub.create_study(StudySpec::new("s", quick_cfg(), 33)).unwrap();
+    configure(
+        "hub::actor::ask",
+        FailSpec::new(Trigger::EveryNth(3), FailAction::Panic("armed storm".into()))
+            .with_max_fires(2),
+    );
+    drive(&hub, id, n, 2);
+    failpoint::clear();
+    dbe_bo::obs::recorder::disarm();
+
+    assert!(hub.total_restarts() >= 1, "the storm must actually have fired");
+    assert!(
+        dbe_bo::obs::recorder::emitted() > 0,
+        "an armed run must actually record events"
+    );
+    // The supervisor black box: every panic record carries the crashed
+    // study's recent recorder events (the hub/ask span at minimum).
+    for p in hub.panic_log() {
+        assert!(
+            !p.trail.is_empty(),
+            "armed supervision must attach an event trail to {}",
+            p.study
+        );
+    }
+
+    assert_snapshots_bitwise_equal(
+        "armed",
+        &hub.snapshot(id).unwrap(),
+        &twin.snapshot(twin_id).unwrap(),
+    );
+    assert_next_ask_bitwise_equal("armed", &hub, id, &twin, twin_id);
+}
+
 /// Supervision lint (mirrors `no_dense_inverse_on_hot_paths`): every
 /// thread inside the hub must be spawned through a named
 /// `thread::Builder` so panics and joins are attributable. A bare

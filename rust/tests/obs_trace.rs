@@ -1,0 +1,184 @@
+//! End-to-end flight-recorder battery (ISSUE 9): drive a live loopback
+//! `dbe-bo serve` with the recorder armed over the wire and assert the
+//! dumped Chrome trace JSON carries spans from every layer of the ask
+//! path — serve frame handling, hub actor dispatch, pool coalescing,
+//! the MSO QN loop, GP fits, and the journal. Also pins the trace-event
+//! invariants Perfetto needs: every Begin has a matching End on the
+//! same thread, timestamps are non-decreasing per thread, and instants
+//! are thread-scoped.
+
+use dbe_bo::bo::StudyConfig;
+use dbe_bo::hub::json::Json;
+use dbe_bo::hub::{HubClient, HubConfig, ServeConfig, Server, StudyHub, StudySpec};
+use dbe_bo::obs::recorder;
+use dbe_bo::optim::mso::MsoStrategy;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn quick_cfg() -> StudyConfig {
+    StudyConfig {
+        dim: 2,
+        bounds: vec![(-5.0, 5.0); 2],
+        n_trials: 40,
+        n_startup: 4,
+        restarts: 3,
+        strategy: MsoStrategy::Dbe,
+        fit_every: 2,
+        ..StudyConfig::default()
+    }
+}
+
+fn bowl(x: &[f64]) -> f64 {
+    (x[0] - 0.5).powi(2) + (x[1] + 1.0).powi(2)
+}
+
+fn temp_journal(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("dbe_bo_obs_{tag}_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+#[test]
+fn live_trace_covers_every_layer_of_the_ask_path() {
+    let _g = recorder::exclusive();
+    let path = temp_journal("live");
+
+    // Journal + pool so all five layers are actually on the path.
+    let hub = Arc::new(
+        StudyHub::open(HubConfig {
+            journal: Some(path.clone()),
+            pool_workers: 2,
+            ..HubConfig::default()
+        })
+        .unwrap(),
+    );
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    server.install_hub(Arc::clone(&hub));
+    let addr = server.local_addr().to_string();
+
+    let mut client = HubClient::connect(&addr).unwrap();
+    // Arm over the wire — exactly what `dbe-bo client --trace` sends.
+    client.trace_arm(true).unwrap();
+    client.create(&StudySpec::new("s", quick_cfg(), 17)).unwrap();
+
+    // Drive well past n_startup so acquisition (mso/gp/pool) runs.
+    let mut done = 0usize;
+    while done < 12 {
+        let batch = client.ask("s", 2).unwrap();
+        for sug in batch {
+            client.tell("s", sug.trial_id, bowl(&sug.x)).unwrap();
+            done += 1;
+        }
+    }
+
+    let trace = client.trace_dump().unwrap();
+    let emitted = client.trace_arm(false).unwrap();
+    client.shutdown().unwrap();
+    drop(client);
+    server.join();
+    let _ = std::fs::remove_file(&path);
+
+    // The dump must be exactly what --trace-out writes: re-parse it.
+    let text = trace.to_string();
+    let back = Json::parse(&text).expect("trace JSON must round-trip");
+    let events = back.field("traceEvents").unwrap().as_arr().unwrap().clone();
+    assert!(events.len() > 20, "a 12-trial run must record real work");
+
+    // Acceptance: spans from all five layers (plus gp) in one trace.
+    let cats: HashSet<String> = events
+        .iter()
+        .map(|e| e.field("cat").unwrap().as_str().unwrap().to_string())
+        .collect();
+    for layer in ["serve", "hub", "pool", "mso", "gp", "journal"] {
+        assert!(cats.contains(layer), "layer {layer} missing from trace: {cats:?}");
+    }
+
+    // Per-thread trace-event invariants: balanced B/E nesting and
+    // non-decreasing timestamps (what chrome://tracing validates). A
+    // wrapped ring legitimately loses old Begin events, so the strict
+    // nesting check only applies when every emitted event survived.
+    let wrapped = emitted > recorder::RING_CAP as u64;
+    let mut depth: HashMap<u64, i64> = HashMap::new();
+    let mut last_ts: HashMap<u64, f64> = HashMap::new();
+    for e in &events {
+        let tid = e.field("tid").unwrap().as_u64().unwrap();
+        let ts = e.field("ts").unwrap().as_f64().unwrap();
+        let prev = last_ts.entry(tid).or_insert(ts);
+        assert!(*prev <= ts, "timestamps must be non-decreasing per thread");
+        *prev = ts;
+        match e.field("ph").unwrap().as_str().unwrap() {
+            "B" => *depth.entry(tid).or_insert(0) += 1,
+            "E" => {
+                let d = depth.entry(tid).or_insert(0);
+                *d -= 1;
+                assert!(wrapped || *d >= 0, "E without a matching B on tid {tid}");
+            }
+            "i" => {
+                assert_eq!(
+                    e.field("s").unwrap().as_str().unwrap(),
+                    "t",
+                    "instants are thread-scoped"
+                );
+            }
+            ph => panic!("unexpected phase {ph}"),
+        }
+    }
+
+    // The per-restart QN telemetry the paper's tables are built from
+    // must be present and well-formed on at least one event.
+    let qn = events
+        .iter()
+        .find(|e| e.field("name").unwrap().as_str().unwrap() == "qn_restart")
+        .expect("D-BE run must emit mso/qn_restart instants");
+    let args = qn.field("args").unwrap();
+    assert!(args.field("iters").unwrap().as_u64().unwrap() >= 1);
+    assert!(args.field("grad_inf").unwrap().as_f64().unwrap().is_finite());
+    let reason = args.field("reason").unwrap().as_str().unwrap();
+    assert!(
+        ["gradtol", "ftol", "max_iters", "max_evals", "linesearch", "numerical"]
+            .contains(&reason),
+        "unknown stop reason {reason}"
+    );
+}
+
+/// Disarmed is the default: a full serve lifecycle without `--record`
+/// or a `trace` arm must leave the ring untouched, and a dump must
+/// answer an empty (but valid) trace rather than an error.
+#[test]
+fn disarmed_serve_records_nothing_and_dumps_empty_trace() {
+    let _g = recorder::exclusive();
+
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    server.install_hub(Arc::new(StudyHub::in_memory()));
+    let addr = server.local_addr().to_string();
+
+    let mut client = HubClient::connect(&addr).unwrap();
+    client.create(&StudySpec::new("s", quick_cfg(), 5)).unwrap();
+    let batch = client.ask("s", 2).unwrap();
+    for sug in batch {
+        client.tell("s", sug.trial_id, bowl(&sug.x)).unwrap();
+    }
+
+    let trace = client.trace_dump().unwrap();
+    assert!(
+        trace.field("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+        "disarmed recorder must stay empty"
+    );
+    assert_eq!(recorder::emitted(), 0, "no events may be emitted while disarmed");
+
+    client.shutdown().unwrap();
+    drop(client);
+    server.join();
+}

@@ -219,7 +219,7 @@ fn pipelined_requests_answer_in_order() {
     let spec = StudySpec::new("pipe", quick_cfg(), 7);
     let mut batch = Vec::new();
     for (id, req) in [
-        (10, Request::Metrics),
+        (10, Request::Metrics { prom: false }),
         (11, Request::Create(Box::new(spec))),
         (12, Request::Ask { study: "pipe".into(), q: 2 }),
     ] {
