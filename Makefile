@@ -2,7 +2,7 @@
 # The Rust side is self-contained; `artifacts` needs a JAX-capable
 # Python environment and is only required for the PJRT hot path.
 
-.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke compact-smoke obs-smoke artifacts
+.PHONY: build test lint docs chaos bench bench-smoke bench-gp-fit serve-smoke compact-smoke obs-smoke health-smoke artifacts
 
 build:
 	cargo build --release
@@ -37,6 +37,7 @@ bench:
 	cargo bench --bench hub_throughput
 	cargo bench --bench serve_throughput
 	cargo bench --bench journal_replay
+	cargo bench --bench health_overhead
 
 # Tiny-budget pass over every bench target so bench code can't rot
 # (mirrors CI's bench-smoke job).
@@ -51,6 +52,7 @@ bench-smoke:
 	cargo bench --bench serve_throughput -- --smoke
 	cargo bench --bench journal_replay -- --smoke
 	cargo bench --bench obs_overhead -- --smoke
+	cargo bench --bench health_overhead -- --smoke
 
 # The end-to-end serving smoke: loopback clients drive `dbe-bo serve`
 # over real TCP and emit results/BENCH_serve.json (asks/sec, ask-RTT
@@ -76,6 +78,19 @@ obs-smoke:
 	cargo test --release --test obs_trace
 	cargo test --release --test chaos armed_flight_recorder
 	cargo bench --bench obs_overhead -- --smoke
+
+# The study-health smoke (ISSUE 10): brute-force LOO validation, the
+# health-on/off bitwise twin, the `health` wire op battery, the
+# no-factorization source lint on the health engine, and the overhead
+# bench, which ASSERTS one health update costs ≤5% of an ask. Emits
+# results/BENCH_health.json; mirrors CI's health-smoke job.
+health-smoke:
+	cargo test --release --test fit_engine_equivalence loo_diagnostics
+	cargo test --release --test fit_engine_equivalence health_engine
+	cargo test --release --test chaos health_engine
+	cargo test --release --test serve_protocol health_op
+	! grep -inE "cholesky|solve|inverse|with_params" rust/src/obs/health.rs
+	cargo bench --bench health_overhead -- --smoke
 
 # The fit-engine perf snapshot: emits results/BENCH_gp_fit.json
 # (EXPERIMENTS.md §Perf "GP fit"). Run this on a quiet host for real

@@ -1,0 +1,248 @@
+//! Bench: study-health engine overhead (ISSUE 10, EXPERIMENTS.md
+//! §Health).
+//!
+//! Two questions:
+//!
+//! 1. **Per-tell cost at scale** — one health update (convergence
+//!    ledger bookkeeping + O(n²) LOO diagnostics off the cached factor
+//!    + flag re-evaluation + gauge publish) measured against one real
+//!    model-based ask on the same study at n=400 training points. The
+//!    CI-asserted bound: update ≤ 5% of an ask. LOO is the only term
+//!    that grows with n, and it grows one power slower than the
+//!    factorization the fit already paid — so the margin widens as
+//!    studies grow.
+//! 2. **End-to-end A/B** — the same hub workload with `health` on vs
+//!    off. Best values must be bitwise identical (the ledger is a pure
+//!    observer); the wall-clock ratio is reported as information.
+//!
+//! Emits `results/BENCH_health.json`. Run:
+//! `cargo bench --bench health_overhead [-- --smoke]`.
+
+use dbe_bo::bo::{Study, StudyConfig};
+use dbe_bo::cli::Args;
+use dbe_bo::config::BenchProtocol;
+use dbe_bo::hub::{HubConfig, StudyHub, StudySpec};
+use dbe_bo::obs::health::params_at_bound;
+use dbe_bo::obs::{HealthGauges, HealthLedger, LooSummary};
+use dbe_bo::optim::mso::MsoStrategy;
+use dbe_bo::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Instant;
+
+const STUDIES: usize = 2;
+
+fn bowl(x: &[f64]) -> f64 {
+    x.iter().map(|v| (v - 0.3) * (v - 0.3)).sum::<f64>()
+}
+
+fn study_cfg(dim: usize, n_trials: usize, p: &BenchProtocol) -> StudyConfig {
+    StudyConfig {
+        dim,
+        bounds: vec![(-5.0, 5.0); dim],
+        n_trials,
+        n_startup: p.startup.min(n_trials),
+        restarts: p.restarts,
+        strategy: MsoStrategy::Dbe,
+        lbfgsb: p.lbfgsb,
+        fit_every: p.fit_every,
+        ..StudyConfig::default()
+    }
+}
+
+/// One full health update, exactly the work `update_health` does per
+/// committed tell: ledger bookkeeping, LOO off the cached factor, flag
+/// hysteresis, gauge publish. Returns the LOO summary so the optimizer
+/// cannot fold the loop away.
+fn health_update(
+    study: &Study,
+    ledger: &mut HealthLedger,
+    gauges: &HealthGauges,
+    value: f64,
+) -> Option<LooSummary> {
+    ledger.on_tell(value);
+    let (at_bound, loo) = match study.gp() {
+        Some(gp) => (
+            params_at_bound(&gp.params, 1e-9),
+            LooSummary::from_diagnostics(&gp.loo_diagnostics(), gp.standardizer.std),
+        ),
+        None => (false, None),
+    };
+    ledger.observe_model(at_bound, loo, study.gp_n_train().unwrap_or(0));
+    let _ = ledger.reeval_flags();
+    gauges.publish(ledger);
+    ledger.loo()
+}
+
+/// Hub workload: returns (wall seconds, best values per study).
+fn run_hub(p: &BenchProtocol, dim: usize, q: usize, health: bool) -> (f64, Vec<f64>) {
+    let hub = Arc::new(
+        StudyHub::open(HubConfig {
+            pool_workers: p.hub_workers.max(1),
+            health,
+            ..HubConfig::default()
+        })
+        .unwrap(),
+    );
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for s in 0..STUDIES {
+        let hub = Arc::clone(&hub);
+        let p = p.clone();
+        joins.push(std::thread::spawn(move || {
+            let spec = StudySpec::new(
+                format!("s{s}"),
+                study_cfg(dim, p.trials, &p),
+                700 + s as u64,
+            );
+            let n_trials = spec.config.n_trials;
+            let id = hub.create_study(spec).unwrap();
+            let mut done = 0;
+            while done < n_trials {
+                let batch = hub.ask(id, q.min(n_trials - done)).unwrap();
+                for sug in batch {
+                    hub.tell(id, sug.trial_id, bowl(&sug.x)).unwrap();
+                    done += 1;
+                }
+            }
+            hub.snapshot(id).unwrap().best.unwrap().value
+        }));
+    }
+    let bests = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    (t0.elapsed().as_secs_f64(), bests)
+}
+
+fn main() {
+    let args = Args::from_env().unwrap_or_default();
+    let smoke = args.has("smoke");
+    let mut p = BenchProtocol::from_args(&args).expect("bench flags");
+    if smoke {
+        p.trials = 10;
+        p.startup = 4;
+        p.restarts = 3;
+    } else if !args.has("trials") {
+        p.trials = 25;
+    }
+    if p.hub_workers == 0 {
+        p.hub_workers = 2;
+    }
+    let dim = p.dims.first().copied().unwrap_or(2);
+    // The scale point for the asserted bound.
+    let n_train: usize = if smoke { 60 } else { 400 };
+    let reps: usize = if smoke { 30 } else { 50 };
+    let ask_reps: usize = if smoke { 3 } else { 5 };
+
+    println!(
+        "# health_overhead — update-vs-ask at n={n_train}, A/B over {STUDIES} studies \
+         D={dim}, {} trials{}",
+        p.trials,
+        if smoke { " [SMOKE]" } else { "" }
+    );
+
+    // 1. A study grown to n_train observations, then fitted by its
+    // first model-based suggest — the state a long-running study sits
+    // in when every subsequent tell pays one health update.
+    let mut study = Study::new(study_cfg(dim, n_train + reps + 1, &p), 4242);
+    let mut rng = Pcg64::seeded(99);
+    for _ in 0..n_train {
+        let x = rng.uniform_vec(dim, -5.0, 5.0);
+        let v = bowl(&x);
+        study.observe(x, v);
+    }
+    let warm = study.suggest().expect("model-based suggest at n_train");
+    assert_eq!(study.gp_n_train(), Some(n_train), "the GP is fitted at n_train");
+    let _ = bowl(&warm);
+
+    // The real ask at this scale: a full multi-start suggest.
+    let t0 = Instant::now();
+    for _ in 0..ask_reps {
+        std::hint::black_box(study.suggest().unwrap());
+    }
+    let ask_ns = t0.elapsed().as_nanos() as f64 / ask_reps as f64;
+    study.take_ask_quality();
+
+    // The health update at the same scale, repeated over fresh tells.
+    let mut ledger = HealthLedger::new();
+    let gauges = HealthGauges::new();
+    let mut values: Vec<f64> = Vec::with_capacity(reps);
+    let mut v_rng = Pcg64::seeded(7);
+    for _ in 0..reps {
+        values.push(bowl(&v_rng.uniform_vec(dim, -5.0, 5.0)));
+    }
+    let t0 = Instant::now();
+    let mut last = None;
+    for &v in &values {
+        last = health_update(&study, &mut ledger, &gauges, v);
+    }
+    let update_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let loo = last.expect("a fitted GP yields LOO diagnostics");
+    assert_eq!(loo.n, n_train, "LOO covered the whole training set");
+    assert!(loo.lpd.is_finite(), "LOO-LPD must be finite, got {}", loo.lpd);
+
+    let frac = update_ns / ask_ns;
+    println!(
+        "ask at n={n_train}   : {:>10.1} µs  ({ask_reps} reps)",
+        ask_ns / 1e3
+    );
+    println!(
+        "update at n={n_train}: {:>10.1} µs  ({reps} reps) -> {:.3}% of an ask (bound 5%)",
+        update_ns / 1e3,
+        frac * 100.0
+    );
+    assert!(
+        frac <= 0.05,
+        "health update {:.2}% of an ask at n={n_train} exceeds the 5% budget \
+         ({:.1} µs update vs {:.1} µs ask)",
+        frac * 100.0,
+        update_ns / 1e3,
+        ask_ns / 1e3,
+    );
+
+    // 2. End-to-end A/B: health on vs off, bitwise-identical results.
+    let _ = run_hub(&p, dim, 2, false); // warm-up, discarded
+    let (off_s, off_bests) = run_hub(&p, dim, 2, false);
+    let (on_s, on_bests) = run_hub(&p, dim, 2, true);
+    let on_bits: Vec<u64> = on_bests.iter().map(|v| v.to_bits()).collect();
+    let off_bits: Vec<u64> = off_bests.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(on_bits, off_bits, "enabling health changed the trajectories");
+    let ratio = on_s / off_s;
+    println!(
+        "hub A/B        : off {off_s:.3}s, on {on_s:.3}s -> ratio {ratio:.3}x (informational)"
+    );
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"health_overhead\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"dim\": {dim},\n",
+            "  \"n_train\": {n_train},\n",
+            "  \"ask_us\": {askus:.3},\n",
+            "  \"update_us\": {updus:.3},\n",
+            "  \"update_frac_of_ask\": {frac:.6},\n",
+            "  \"bound_frac\": 0.05,\n",
+            "  \"loo_n\": {loon},\n",
+            "  \"loo_lpd\": {lpd:.6},\n",
+            "  \"hub_trials\": {trials},\n",
+            "  \"hub_wall_off_s\": {off:.6},\n",
+            "  \"hub_wall_on_s\": {on:.6},\n",
+            "  \"hub_on_ratio\": {ratio:.4}\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        dim = dim,
+        n_train = n_train,
+        askus = ask_ns / 1e3,
+        updus = update_ns / 1e3,
+        frac = frac,
+        loon = loo.n,
+        lpd = loo.lpd,
+        trials = p.trials,
+        off = off_s,
+        on = on_s,
+        ratio = ratio,
+    );
+    std::fs::create_dir_all(&p.out_dir).expect("create out dir");
+    let path = format!("{}/BENCH_health.json", p.out_dir);
+    std::fs::write(&path, json).expect("write bench json");
+    println!("JSON written to {path}");
+}

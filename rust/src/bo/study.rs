@@ -18,11 +18,15 @@
 use super::{denormalize, normalize, BestResult};
 use crate::batcheval::{BatchAcqEvaluator, NativeGpEvaluator};
 use crate::gp::{GpParams, GpRegressor};
+use crate::obs::health::AskQuality;
 use crate::optim::lbfgsb::LbfgsbOptions;
 use crate::optim::mso::{run_mso, MsoConfig, MsoStrategy, ParDbe};
 use crate::rng::Pcg64;
 use crate::{Error, Result};
 use std::time::{Duration, Instant};
+
+/// Upper bound on undrained [`AskQuality`] records held by a study.
+const ASK_QUALITY_CAP: usize = 32;
 
 /// One evaluated trial.
 #[derive(Clone, Debug)]
@@ -235,6 +239,12 @@ pub struct Study {
     /// Optional evaluator override (e.g. the PJRT artifact path, or the
     /// hub's pooled evaluator).
     eval_factory: Option<EvalFactory>,
+    /// QN-quality records of recent model-based suggestions, one per
+    /// accepted candidate, drained by the hub's health ledger via
+    /// [`Study::take_ask_quality`]. Bounded, never snapshotted, and
+    /// written only *after* the suggestion is computed — pure telemetry
+    /// with no feedback into the optimization state.
+    ask_quality: Vec<AskQuality>,
 }
 
 impl Study {
@@ -259,6 +269,7 @@ impl Study {
             restore_gp: None,
             stats: StudyStats::default(),
             eval_factory: None,
+            ask_quality: Vec::new(),
         })
     }
 
@@ -317,6 +328,7 @@ impl Study {
                 ..StudyStats::default()
             },
             eval_factory: None,
+            ask_quality: Vec::new(),
         })
     }
 
@@ -482,7 +494,28 @@ impl Study {
         self.stats.iters.extend(res.restarts.iter().map(|r| r.iters));
         self.stats.total_wall += t_total.elapsed();
 
+        // Health telemetry: distill the accepted suggestion's MSO run
+        // for the hub's ledger. Bounded so undrained standalone use
+        // (benches, table_bench) cannot grow it unboundedly.
+        if self.ask_quality.len() >= ASK_QUALITY_CAP {
+            self.ask_quality.remove(0);
+        }
+        self.ask_quality.push(AskQuality::from_mso(trial_id, &res));
+
         Ok(denormalize(&res.best_x, &self.cfg.bounds))
+    }
+
+    /// Drain the QN-quality records accumulated by model-based
+    /// suggestions since the last call (hub health ledger).
+    pub fn take_ask_quality(&mut self) -> Vec<AskQuality> {
+        std::mem::take(&mut self.ask_quality)
+    }
+
+    /// Read-only view of the fitted GP (`None` before the first
+    /// model-based call, or after a restore until the first sync) —
+    /// the health ledger's LOO diagnostics read through this.
+    pub fn gp(&self) -> Option<&GpRegressor> {
+        self.gp.as_ref()
     }
 
     /// Journal-replay hook: bring the GP to exactly the state a live

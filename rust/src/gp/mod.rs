@@ -19,5 +19,5 @@ pub mod stats;
 pub use acquisition::{Lcb, LogEi, LogPi};
 pub use fit::{mll_value_grad_cached, FitCache};
 pub use kernel::{GpParams, Matern52};
-pub use regressor::{mll_value_grad, GpRegressor, Posterior, PosteriorWorkspace};
+pub use regressor::{mll_value_grad, GpRegressor, LooDiagnostics, Posterior, PosteriorWorkspace};
 pub use standardize::Standardizer;

@@ -39,6 +39,16 @@ pub fn mll_value_grad(
     mll_value_grad_cached(&mut FitCache::new(x), y_std, params)
 }
 
+/// Per-training-point leave-one-out diagnostics in the full model's
+/// *standardized* target space (see [`GpRegressor::loo_diagnostics`]).
+#[derive(Clone, Debug)]
+pub struct LooDiagnostics {
+    /// `yᵢ − μ₋ᵢ`: held-out actual minus LOO predictive mean.
+    pub residuals: Vec<f64>,
+    /// `σ²₋ᵢ`: LOO predictive variance (noise included).
+    pub variances: Vec<f64>,
+}
+
 /// Posterior mean/σ (and optionally their input-gradients) at a point.
 #[derive(Clone, Debug)]
 pub struct Posterior {
@@ -294,6 +304,33 @@ impl GpRegressor {
         &self.alpha
     }
 
+    /// Leave-one-out residuals and predictive variances from the cached
+    /// factors (Sundararajan & Keerthi 2001; GPML §5.4.2), O(n²) total:
+    ///
+    /// ```text
+    /// yᵢ − μ₋ᵢ = αᵢ / [K⁻¹]ᵢᵢ        σ²₋ᵢ = 1 / [K⁻¹]ᵢᵢ
+    /// [K⁻¹]ᵢᵢ  = ‖W.row(i)[i..]‖²   with W = L⁻ᵀ (cached `w_half`)
+    /// ```
+    ///
+    /// K includes the noise term, so `σ²₋ᵢ` is the *predictive* LOO
+    /// variance and the identities hold at fixed hyperparameters in the
+    /// full model's standardized target space. Zero new factorizations:
+    /// only `alpha` and `w_half` are read — keep it that way (the health
+    /// path is grep-linted against `cholesky`/`solve`/`inverse`).
+    pub fn loo_diagnostics(&self) -> LooDiagnostics {
+        let n = self.x.len();
+        let mut residuals = Vec::with_capacity(n);
+        let mut variances = Vec::with_capacity(n);
+        for i in 0..n {
+            let wi = &self.w_half.row(i)[i..];
+            let kinv_ii = dot(wi, wi);
+            let var = 1.0 / kinv_ii;
+            residuals.push(self.alpha[i] * var);
+            variances.push(var);
+        }
+        LooDiagnostics { residuals, variances }
+    }
+
     /// Posterior at a single point, with input-gradients:
     /// `μ = k_*ᵀα`, `σ² = k(x,x) − k_*ᵀK⁻¹k_*`,
     /// `∇μ = (∂k_*/∂x)ᵀ α`, `∇σ² = −2 (∂k_*/∂x)ᵀ K⁻¹ k_*`.
@@ -418,6 +455,28 @@ mod tests {
         let y: Vec<f64> =
             x.iter().map(|p| (6.0 * p[0]).sin() + p.iter().sum::<f64>() * 0.5).collect();
         (x, y)
+    }
+
+    #[test]
+    fn loo_diagnostics_match_kinv_diagonal_identities() {
+        // Reference [K⁻¹]ᵢᵢ via the public factorization (solve against
+        // unit vectors): residᵢ = αᵢ/[K⁻¹]ᵢᵢ, varᵢ = 1/[K⁻¹]ᵢᵢ.
+        let (x, y) = toy_data(24, 2, 9);
+        let params =
+            GpParams { log_len: (0.4f64).ln(), log_sf2: 0.1, log_noise: (1e-3f64).ln() };
+        let gp = GpRegressor::with_params(x, &y, params).unwrap();
+        let n = gp.n_train();
+        let loo = gp.loo_diagnostics();
+        assert_eq!(loo.residuals.len(), n);
+        assert_eq!(loo.variances.len(), n);
+        for i in 0..n {
+            let mut e = vec![0.0; n];
+            e[i] = 1.0;
+            let kinv_ii = gp.chol().solve(&e)[i];
+            assert_close(loo.variances[i], 1.0 / kinv_ii, 1e-10);
+            assert_close(loo.residuals[i], gp.alpha()[i] / kinv_ii, 1e-10);
+            assert!(loo.variances[i] > 0.0);
+        }
     }
 
     #[test]

@@ -100,6 +100,14 @@ impl HubClient {
         Ok(frame.field("snapshot")?.clone())
     }
 
+    /// Fetch the study's health report (see
+    /// [`super::proto::health_to_json`] for the shape): convergence
+    /// ledger, LOO diagnostics, QN quality, anomaly flags.
+    pub fn health(&mut self, study: &str) -> Result<Json> {
+        let frame = self.call(&Request::Health { study: study.into() })?;
+        Ok(frame.field("health")?.clone())
+    }
+
     /// Checkpoint every study and compact the server's journal; returns
     /// the `compacted` stats object (`events_before`, `events_after`,
     /// `segments_removed`).

@@ -90,6 +90,7 @@ use crate::bo::{BestResult, Study, StudyConfig, StudyRestore, StudyStats, Trial}
 use crate::coordinator::{MetricsSnapshot, ServiceConfig};
 use crate::error::{Error, Result};
 use crate::gp::GpParams;
+use crate::obs::health::{params_at_bound, HealthGauges, HealthLedger, LooSummary};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
@@ -248,6 +249,12 @@ pub struct HubConfig {
     /// periodic snapshots (the default); ignored without a journal.
     /// [`StudyHub::checkpoint`] takes one on demand regardless.
     pub snapshot_every: usize,
+    /// Maintain the per-study health ledger (LOO diagnostics,
+    /// convergence ledger, anomaly flags — see [`crate::obs::health`]).
+    /// On by default; the off switch exists so the chaos battery can
+    /// prove suggestions and journal bytes are bitwise-identical either
+    /// way (health is strictly read-only telemetry).
+    pub health: bool,
 }
 
 impl Default for HubConfig {
@@ -260,6 +267,7 @@ impl Default for HubConfig {
             sync: SyncPolicy::Os,
             restart_budget: 3,
             snapshot_every: 0,
+            health: true,
         }
     }
 }
@@ -315,6 +323,47 @@ pub struct StudyStat {
     pub restarts: usize,
     /// Most recent supervised panic message, if any.
     pub last_panic: Option<String>,
+    /// Raw-units incumbent from the health gauges (`None` before any
+    /// tell, or with health disabled).
+    pub best: Option<f64>,
+    /// Incumbent improvement per tell over the ledger's trailing window.
+    pub regret_slope: f64,
+    /// Mean LOO log predictive density (`None` before the first
+    /// model diagnosis).
+    pub loo_lpd: Option<f64>,
+    /// Tells since the last incumbent improvement.
+    pub stall: u64,
+    /// Raised anomaly flags (count; the `health` op lists them).
+    pub flags: u64,
+}
+
+/// Point-in-time health report of one study — the convergence ledger,
+/// LOO model diagnostics, QN quality, and raised flags, all derived
+/// from deterministic committed state (see [`crate::obs::health`]).
+/// Served by [`StudyHub::health`] and the `health` wire op. With
+/// [`HubConfig::health`] off, the ledger fields are empty defaults.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    pub name: String,
+    pub n_trials: usize,
+    pub n_pending: usize,
+    pub next_trial_id: u64,
+    /// Raw-units incumbent and the (1-based) tell that set it.
+    pub best: Option<(f64, u64)>,
+    /// Tells since the last incumbent improvement.
+    pub since_improvement: u64,
+    /// Incumbent improvement per tell over the trailing window.
+    pub regret_slope: f64,
+    /// Simple-regret delta of the most recent improving tell.
+    pub last_delta: f64,
+    /// log-EI of the most recent accepted suggestion (collapse signal).
+    pub log_ei: Option<f64>,
+    /// Training-set size of the live (or restorable) GP.
+    pub gp_n_train: Option<usize>,
+    pub loo: Option<crate::obs::LooSummary>,
+    pub qn: Option<crate::obs::QnSummary>,
+    /// Raised anomaly flags, in [`crate::obs::health::ALL_FLAGS`] order.
+    pub flags: Vec<&'static str>,
 }
 
 enum Msg {
@@ -325,6 +374,7 @@ enum Msg {
     ReplaySnapshot { snap: SnapshotRecord, reply: Sender<Result<()>> },
     Checkpoint { reply: Sender<Result<()>> },
     Snapshot { reply: Sender<Result<StudySnapshot>> },
+    Health { reply: Sender<Result<HealthReport>> },
 }
 
 struct Actor {
@@ -336,6 +386,10 @@ struct Actor {
     status: Arc<AtomicU8>,
     /// Supervised restarts of this actor, shared with its thread.
     restarts: Arc<AtomicUsize>,
+    /// Health gauges published by the actor thread post-commit; read
+    /// lock-free by [`StudyHub::study_stats`] (the `metrics` op) so
+    /// exposition never queues behind the actor's mailbox.
+    gauges: Arc<HealthGauges>,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -389,6 +443,7 @@ pub struct StudyHub {
     mailbox_cap: usize,
     restart_budget: usize,
     snapshot_every: usize,
+    health_enabled: bool,
     panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
@@ -415,6 +470,7 @@ impl StudyHub {
             mailbox_cap: cfg.mailbox_cap,
             restart_budget: cfg.restart_budget,
             snapshot_every: cfg.snapshot_every,
+            health_enabled: cfg.health,
             panic_log: Arc::new(Mutex::new(Vec::new())),
         };
         // Replay from each study's NEWEST snapshot: earlier asks/tells
@@ -492,6 +548,7 @@ impl StudyHub {
         let name = spec.name.clone();
         let status = Arc::new(AtomicU8::new(STATUS_RUNNING));
         let restarts = Arc::new(AtomicUsize::new(0));
+        let gauges = Arc::new(HealthGauges::new());
         let ctx = ActorContext {
             idx,
             spec,
@@ -501,6 +558,8 @@ impl StudyHub {
             restarts: Arc::clone(&restarts),
             budget: self.restart_budget,
             snapshot_every: self.snapshot_every,
+            health_enabled: self.health_enabled,
+            gauges: Arc::clone(&gauges),
             panic_log: Arc::clone(&self.panic_log),
         };
         let handle = std::thread::Builder::new()
@@ -512,6 +571,7 @@ impl StudyHub {
             inflight: Arc::new(AtomicUsize::new(0)),
             status,
             restarts,
+            gauges,
             handle: Some(handle),
         });
         Ok(StudyId(idx))
@@ -556,6 +616,14 @@ impl StudyHub {
     /// Full state copy of one study.
     pub fn snapshot(&self, id: StudyId) -> Result<StudySnapshot> {
         self.study_request(id, |reply| Msg::Snapshot { reply })?
+    }
+
+    /// This study's health report: convergence ledger, LOO model
+    /// diagnostics, QN quality, and raised anomaly flags (see
+    /// [`crate::obs::health`]). Read-only — asking for health never
+    /// perturbs suggestions, fits, or the journal.
+    pub fn health(&self, id: StudyId) -> Result<HealthReport> {
+        self.study_request(id, |reply| Msg::Health { reply })?
     }
 
     /// Append a [`SnapshotRecord`] for one study to the journal now,
@@ -646,6 +714,11 @@ impl StudyHub {
                     .rev()
                     .find(|p| p.study == a.name)
                     .map(|p| p.message.clone()),
+                best: a.gauges.best(),
+                regret_slope: a.gauges.regret_slope(),
+                loo_lpd: a.gauges.loo_lpd(),
+                stall: a.gauges.stall(),
+                flags: a.gauges.flag_count(),
             })
             .collect()
     }
@@ -794,6 +867,8 @@ struct ActorContext {
     restarts: Arc<AtomicUsize>,
     budget: usize,
     snapshot_every: usize,
+    health_enabled: bool,
+    gauges: Arc<HealthGauges>,
     panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
@@ -872,6 +947,12 @@ struct ActorState {
     snapshot_every: usize,
     /// Committed asks/tells since the last periodic snapshot.
     since_snapshot: usize,
+    /// Health ledger ([`HubConfig::health`]): updated only *after* an
+    /// ask/tell commits, from committed values and read-only model
+    /// views — never feeds back into suggestions.
+    health_enabled: bool,
+    ledger: HealthLedger,
+    gauges: Arc<HealthGauges>,
     panic_log: Arc<Mutex<Vec<PanicRecord>>>,
 }
 
@@ -885,6 +966,8 @@ fn actor_loop(ctx: ActorContext, rx: Receiver<Msg>) {
         restarts,
         budget,
         snapshot_every,
+        health_enabled,
+        gauges,
         panic_log,
     } = ctx;
     let StudySpec { name, seed, liar, tag, config } = spec;
@@ -910,6 +993,9 @@ fn actor_loop(ctx: ActorContext, rx: Receiver<Msg>) {
         budget,
         snapshot_every,
         since_snapshot: 0,
+        health_enabled,
+        ledger: HealthLedger::new(),
+        gauges,
         panic_log,
     };
     while let Ok(msg) = rx.recv() {
@@ -934,6 +1020,7 @@ impl ActorState {
                 Msg::ReplaySnapshot { reply, .. } => drop(reply.send(Err(e))),
                 Msg::Checkpoint { reply } => drop(reply.send(Err(e))),
                 Msg::Snapshot { reply } => drop(reply.send(Err(e))),
+                Msg::Health { reply } => drop(reply.send(Err(e))),
             }
             return;
         }
@@ -973,6 +1060,14 @@ impl ActorState {
                 let r = catch_unwind(AssertUnwindSafe(|| self.make_snapshot()));
                 let out = match r {
                     Ok(snap) => Ok(snap),
+                    Err(p) => Err(self.supervise(p)),
+                };
+                let _ = reply.send(out);
+            }
+            Msg::Health { reply } => {
+                let r = catch_unwind(AssertUnwindSafe(|| self.make_health_report()));
+                let out = match r {
+                    Ok(h) => Ok(h),
                     Err(p) => Err(self.supervise(p)),
                 };
                 let _ = reply.send(out);
@@ -1029,6 +1124,7 @@ impl ActorState {
             self.pending.insert(s.trial_id, s.x.clone());
         }
         self.next_id += q as u64;
+        self.update_health(None);
         self.maybe_snapshot();
         Ok(out)
     }
@@ -1048,6 +1144,7 @@ impl ActorState {
         self.record(ev);
         let x = self.pending.remove(&trial_id).expect("checked above");
         self.study.observe(x, value);
+        self.update_health(Some(value));
         self.maybe_snapshot();
         Ok(())
     }
@@ -1105,6 +1202,12 @@ impl ActorState {
             Error::Hub(format!("journal tells trial {trial_id} that was never asked"))
         })?;
         self.study.observe(x, value);
+        // Keep the incumbent/stall side of the ledger in lockstep with
+        // replayed history. QN/acquisition telemetry cannot be rebuilt
+        // (replay never runs MSO), so it stays since-process-start.
+        if self.health_enabled {
+            self.ledger.on_tell(value);
+        }
         Ok(())
     }
 
@@ -1145,6 +1248,16 @@ impl ActorState {
         self.study = restore_study(&self.config, self.seed, state, &self.pool)?;
         self.pending = snap.pending.into_iter().collect();
         self.next_id = snap.next_trial_id;
+        // Rebuild the deterministic (incumbent/stall) side of the
+        // ledger from the restored history, in tell order.
+        if self.health_enabled {
+            self.ledger = HealthLedger::new();
+            let values: Vec<f64> =
+                self.study.trials().iter().map(|t| t.value).collect();
+            for v in values {
+                self.ledger.on_tell(v);
+            }
+        }
         Ok(())
     }
 
@@ -1219,6 +1332,73 @@ impl ActorState {
             stats: self.study.stats.clone(),
             gp_params: self.study.gp_params(),
             best: self.study.best(),
+        }
+    }
+
+    /// Advance the health ledger after an ask/tell *committed*. Reads
+    /// only committed values and read-only views of the study's GP —
+    /// it never touches RNG, fit schedules, or pending state, which is
+    /// what makes the health-on/health-off twin runs bitwise identical
+    /// (see `tests/chaos.rs`).
+    fn update_health(&mut self, telled: Option<f64>) {
+        if !self.health_enabled {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        if let Some(v) = telled {
+            self.ledger.on_tell(v);
+        }
+        for q in self.study.take_ask_quality() {
+            self.ledger.on_ask(&q);
+        }
+        let (at_bound, loo) = match self.study.gp() {
+            Some(gp) => (
+                params_at_bound(&gp.params, 1e-9),
+                LooSummary::from_diagnostics(
+                    &gp.loo_diagnostics(),
+                    gp.standardizer.std,
+                ),
+            ),
+            None => (false, None),
+        };
+        self.ledger.observe_model(
+            at_bound,
+            loo,
+            self.study.gp_n_train().unwrap_or(0),
+        );
+        for (flag, on) in self.ledger.reeval_flags() {
+            crate::obs::registry::counter("hub.health.flag_transitions").inc();
+            if crate::obs::armed() {
+                crate::obs::instant(
+                    "hub",
+                    "health_flag",
+                    self.idx as u32,
+                    &[
+                        ("flag", crate::obs::ArgV::S(flag)),
+                        ("on", crate::obs::ArgV::U(on as u64)),
+                    ],
+                );
+            }
+        }
+        self.gauges.publish(&self.ledger);
+        crate::obs::registry::hist("hub.health.update_ns").record(t0.elapsed());
+    }
+
+    fn make_health_report(&mut self) -> HealthReport {
+        HealthReport {
+            name: self.name.clone(),
+            n_trials: self.study.trials().len(),
+            n_pending: self.pending.len(),
+            next_trial_id: self.next_id,
+            best: self.ledger.best(),
+            since_improvement: self.ledger.since_improvement(),
+            regret_slope: self.ledger.regret_slope(),
+            last_delta: self.ledger.last_delta(),
+            log_ei: self.ledger.last_log_ei(),
+            gp_n_train: self.study.gp_n_train(),
+            loo: self.ledger.loo(),
+            qn: self.ledger.qn_summary(),
+            flags: self.ledger.active_flags(),
         }
     }
 
@@ -1331,6 +1511,7 @@ impl ActorState {
         self.study = build_study(&self.config, self.seed, &self.pool)?;
         self.pending.clear();
         self.next_id = 0;
+        self.ledger = HealthLedger::new();
         let events: Vec<JournalEvent> = match &self.journal {
             Some(j) => j
                 .lock()
@@ -1360,6 +1541,9 @@ impl ActorState {
                 }
                 _ => {}
             }
+        }
+        if self.health_enabled {
+            self.gauges.publish(&self.ledger);
         }
         Ok(())
     }

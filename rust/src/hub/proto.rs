@@ -20,6 +20,7 @@
 //! | `ask`      | `study` (name), `q` (optional, ≥1, default 1) | `suggestions`: `[{"id":u64,"x":[f64…]}…]` |
 //! | `tell`     | `study`, `trial` (u64), `value` (finite f64) | — |
 //! | `snapshot` | `study`                                 | `snapshot` object  |
+//! | `health`   | `study`                                 | `health` object (convergence ledger, LOO diagnostics, anomaly flags) |
 //! | `compact`  | —                                       | `compacted` object (`events_before`, `events_after`, `segments_removed`) |
 //! | `metrics`  | `format` (optional: `"json"` default, `"prom"`) | `metrics` object, or a Prometheus text string when `format:"prom"` |
 //! | `trace`    | `arm` (optional bool: arm/disarm the flight recorder; absent = dump) | `armed`, `events`, and (on dump) `trace`: Chrome trace-event JSON |
@@ -33,7 +34,7 @@
 
 use super::journal::{spec_fields, spec_from_fields};
 use super::json::Json;
-use super::{StudySnapshot, StudySpec, Suggestion};
+use super::{HealthReport, StudySnapshot, StudySpec, Suggestion};
 use crate::error::{Error, Result};
 
 /// Default cap on one frame's length in bytes (excluding the newline).
@@ -124,6 +125,8 @@ pub enum Request {
     Ask { study: String, q: usize },
     Tell { study: String, trial_id: u64, value: f64 },
     Snapshot { study: String },
+    /// Fetch the study's health report (see [`super::StudyHub::health`]).
+    Health { study: String },
     Compact,
     /// Fetch metrics; `prom` selects Prometheus text exposition.
     Metrics { prom: bool },
@@ -141,6 +144,7 @@ impl Request {
             Request::Ask { .. } => "ask",
             Request::Tell { .. } => "tell",
             Request::Snapshot { .. } => "snapshot",
+            Request::Health { .. } => "health",
             Request::Compact => "compact",
             Request::Metrics { .. } => "metrics",
             Request::Trace { .. } => "trace",
@@ -238,6 +242,7 @@ pub fn decode_request(text: &str) -> std::result::Result<RequestFrame, ProtoErro
             Request::Tell { study: study(&j)?, trial_id, value }
         }
         "snapshot" => Request::Snapshot { study: study(&j)? },
+        "health" => Request::Health { study: study(&j)? },
         "compact" => Request::Compact,
         "metrics" => {
             let prom = match j.get("format") {
@@ -289,6 +294,10 @@ pub fn encode_request(id: u64, req: &Request) -> Json {
         }
         Request::Snapshot { study } => {
             fields.push(("op".into(), Json::Str("snapshot".into())));
+            fields.push(("study".into(), Json::Str(study.clone())));
+        }
+        Request::Health { study } => {
+            fields.push(("op".into(), Json::Str("health".into())));
             fields.push(("study".into(), Json::Str(study.clone())));
         }
         Request::Compact => fields.push(("op".into(), Json::Str("compact".into()))),
@@ -418,6 +427,76 @@ pub fn snapshot_to_json(s: &StudySnapshot) -> Json {
     ])
 }
 
+/// Wire encoding of a [`HealthReport`].
+///
+/// Like [`snapshot_to_json`], only **deterministic** state crosses the
+/// wire — counters, incumbent values, LOO summaries, stop-reason
+/// mixes, flags. Wall-clock timings are deliberately absent, so two
+/// runs of the same trial sequence encode identically (the chaos
+/// battery leans on this).
+pub fn health_to_json(h: &HealthReport) -> Json {
+    let best = match h.best {
+        None => Json::Null,
+        Some((value, tell)) => Json::Obj(vec![
+            ("value".into(), Json::f64(value)),
+            ("tell".into(), Json::u64(tell)),
+        ]),
+    };
+    let loo = match &h.loo {
+        None => Json::Null,
+        Some(l) => Json::Obj(vec![
+            ("n".into(), Json::usize(l.n)),
+            ("lpd".into(), Json::f64(l.lpd)),
+            ("max_abs_z".into(), Json::f64(l.max_abs_z)),
+            ("coverage95".into(), Json::f64(l.coverage95)),
+        ]),
+    };
+    let qn = match &h.qn {
+        None => Json::Null,
+        Some(q) => Json::Obj(vec![
+            ("window".into(), Json::usize(q.window)),
+            ("total".into(), Json::u64(q.total)),
+            ("median_iters".into(), Json::f64(q.median_iters)),
+            ("grad_inf_p50".into(), Json::f64(q.grad_inf_p50)),
+            ("grad_inf_p90".into(), Json::f64(q.grad_inf_p90)),
+            ("converged_frac".into(), Json::f64(q.converged_frac)),
+            (
+                "reasons".into(),
+                Json::Obj(
+                    q.reasons
+                        .iter()
+                        .map(|&(tok, n)| (tok.to_string(), Json::u64(n)))
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    Json::Obj(vec![
+        ("study".into(), Json::Str(h.name.clone())),
+        ("n_trials".into(), Json::usize(h.n_trials)),
+        ("pending".into(), Json::usize(h.n_pending)),
+        ("next_trial".into(), Json::u64(h.next_trial_id)),
+        ("best".into(), best),
+        ("since_improvement".into(), Json::u64(h.since_improvement)),
+        ("regret_slope".into(), Json::f64(h.regret_slope)),
+        ("last_delta".into(), Json::f64(h.last_delta)),
+        (
+            "log_ei".into(),
+            h.log_ei.map(Json::f64).unwrap_or(Json::Null),
+        ),
+        (
+            "gp_n_train".into(),
+            h.gp_n_train.map(Json::usize).unwrap_or(Json::Null),
+        ),
+        ("loo".into(), loo),
+        ("qn".into(), qn),
+        (
+            "flags".into(),
+            Json::Arr(h.flags.iter().map(|&f| Json::Str(f.into())).collect()),
+        ),
+    ])
+}
+
 /// Map a hub-layer error to the wire code for the op that raised it.
 ///
 /// The hub reports every domain failure as [`Error::Hub`], so the op
@@ -488,6 +567,7 @@ mod tests {
             Request::Ask { study: "s".into(), q: 4 },
             Request::Tell { study: "s".into(), trial_id: u64::MAX, value: -0.1 },
             Request::Snapshot { study: "s".into() },
+            Request::Health { study: "s".into() },
             Request::Compact,
             Request::Metrics { prom: false },
             Request::Metrics { prom: true },
@@ -510,6 +590,9 @@ mod tests {
                     assert_eq!(va.to_bits(), vb.to_bits());
                 }
                 (Request::Snapshot { study: a }, Request::Snapshot { study: b }) => {
+                    assert_eq!(a, b);
+                }
+                (Request::Health { study: a }, Request::Health { study: b }) => {
                     assert_eq!(a, b);
                 }
                 (Request::Compact, Request::Compact) => {}
@@ -561,6 +644,7 @@ mod tests {
             (Request::Ask { study: "s".into(), q: 1 }, "ask"),
             (Request::Tell { study: "s".into(), trial_id: 0, value: 0.0 }, "tell"),
             (Request::Snapshot { study: "s".into() }, "snapshot"),
+            (Request::Health { study: "s".into() }, "health"),
             (Request::Compact, "compact"),
             (Request::Metrics { prom: false }, "metrics"),
             (Request::Trace { arm: None }, "trace"),
@@ -619,6 +703,48 @@ mod tests {
                 assert_eq!(xa.to_bits(), xb.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn health_report_encodes_deterministic_state_only() {
+        let h = HealthReport {
+            name: "s0".into(),
+            n_trials: 7,
+            n_pending: 1,
+            next_trial_id: 8,
+            best: Some((-1.25, 6)),
+            since_improvement: 1,
+            regret_slope: -0.5,
+            last_delta: 0.25,
+            log_ei: Some(-3.5),
+            gp_n_train: Some(7),
+            loo: Some(crate::obs::LooSummary {
+                n: 7,
+                lpd: -1.0,
+                max_abs_z: 2.0,
+                coverage95: 1.0,
+            }),
+            qn: None,
+            flags: vec!["stalled"],
+        };
+        let line = health_to_json(&h).to_string();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.field("study").unwrap().as_str().unwrap(), "s0");
+        assert_eq!(j.field("next_trial").unwrap().as_u64().unwrap(), 8);
+        let best = j.field("best").unwrap();
+        assert_eq!(
+            best.field("value").unwrap().as_f64().unwrap().to_bits(),
+            (-1.25f64).to_bits()
+        );
+        assert_eq!(best.field("tell").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(j.field("loo").unwrap().field("n").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(j.field("qn").unwrap(), &Json::Null);
+        let flags = j.field("flags").unwrap().as_arr().unwrap();
+        assert_eq!(flags.len(), 1);
+        assert_eq!(flags[0].as_str().unwrap(), "stalled");
+        // Deterministic-state-only: no wall-clock leaks into the frame.
+        assert!(!line.contains("wall"), "{line}");
+        assert!(!line.contains("_ns"), "{line}");
     }
 
     #[test]

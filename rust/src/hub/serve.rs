@@ -39,8 +39,8 @@
 //! flight recorder and dumps it as Chrome trace-event JSON.
 
 use super::proto::{
-    decode_request, ok_response, snapshot_to_json, suggestions_to_json, ErrorCode,
-    ProtoError, Request, RequestFrame, MAX_FRAME_DEFAULT,
+    decode_request, health_to_json, ok_response, snapshot_to_json, suggestions_to_json,
+    ErrorCode, ProtoError, Request, RequestFrame, MAX_FRAME_DEFAULT,
 };
 use super::json::Json;
 use super::StudyHub;
@@ -81,6 +81,7 @@ struct ServeMetrics {
     asks: AtomicU64,
     tells: AtomicU64,
     snapshots: AtomicU64,
+    healths: AtomicU64,
     compacts: AtomicU64,
     metrics_calls: AtomicU64,
     shutdowns: AtomicU64,
@@ -98,6 +99,7 @@ impl ServeMetrics {
             asks: AtomicU64::new(0),
             tells: AtomicU64::new(0),
             snapshots: AtomicU64::new(0),
+            healths: AtomicU64::new(0),
             compacts: AtomicU64::new(0),
             metrics_calls: AtomicU64::new(0),
             shutdowns: AtomicU64::new(0),
@@ -115,6 +117,7 @@ impl ServeMetrics {
             asks: self.asks.load(Ordering::Relaxed),
             tells: self.tells.load(Ordering::Relaxed),
             snapshots: self.snapshots.load(Ordering::Relaxed),
+            healths: self.healths.load(Ordering::Relaxed),
             compacts: self.compacts.load(Ordering::Relaxed),
             metrics_calls: self.metrics_calls.load(Ordering::Relaxed),
             shutdowns: self.shutdowns.load(Ordering::Relaxed),
@@ -136,6 +139,7 @@ pub struct ServeMetricsSnapshot {
     pub asks: u64,
     pub tells: u64,
     pub snapshots: u64,
+    pub healths: u64,
     pub compacts: u64,
     pub metrics_calls: u64,
     pub shutdowns: u64,
@@ -546,6 +550,19 @@ fn dispatch(frame: RequestFrame, shared: &Shared) -> Json {
                 },
             }
         }
+        Request::Health { study } => {
+            m.healths.fetch_add(1, Ordering::Relaxed);
+            match hub.find_study(study) {
+                None => unknown_study(id, study),
+                Some(sid) => match hub.health(sid) {
+                    Ok(h) => ok_response(
+                        id,
+                        vec![("health".into(), health_to_json(&h))],
+                    ),
+                    Err(e) => fail(id, super::proto::error_code_for(&req, &e), &e),
+                },
+            }
+        }
         Request::Compact => {
             m.compacts.fetch_add(1, Ordering::Relaxed);
             match hub.compact() {
@@ -591,6 +608,7 @@ fn metrics_json(shared: &Shared) -> Json {
         ("asks".into(), Json::u64(s.asks)),
         ("tells".into(), Json::u64(s.tells)),
         ("snapshots".into(), Json::u64(s.snapshots)),
+        ("healths".into(), Json::u64(s.healths)),
         ("compacts".into(), Json::u64(s.compacts)),
         ("traces".into(), Json::u64(s.traces)),
         ("p50_ns".into(), Json::u64(s.p50_ns)),
@@ -639,6 +657,14 @@ fn metrics_json(shared: &Shared) -> Json {
                             Some(m) => Json::Str(m.clone()),
                         },
                     ),
+                    ("best".into(), st.best.map(Json::f64).unwrap_or(Json::Null)),
+                    ("regret_slope".into(), Json::f64(st.regret_slope)),
+                    (
+                        "loo_lpd".into(),
+                        st.loo_lpd.map(Json::f64).unwrap_or(Json::Null),
+                    ),
+                    ("stall".into(), Json::u64(st.stall)),
+                    ("flags".into(), Json::u64(st.flags)),
                 ])
             })
             .collect(),
@@ -680,6 +706,7 @@ fn metrics_prom(shared: &Shared) -> String {
         ("dbe_serve_asks", s.asks),
         ("dbe_serve_tells", s.tells),
         ("dbe_serve_snapshots", s.snapshots),
+        ("dbe_serve_healths", s.healths),
         ("dbe_serve_compacts", s.compacts),
         ("dbe_serve_traces", s.traces),
     ] {
@@ -708,6 +735,23 @@ fn metrics_prom(shared: &Shared) -> String {
                 &[("study", &st.name), ("status", st.status)],
                 st.restarts as f64,
             );
+            // Health gauges (ISSUE 10): published post-commit by each
+            // study actor, read here lock-free. Absent values (no
+            // tells yet / health off) are simply not exposed.
+            if let Some(b) = st.best {
+                prom_line(&mut out, "dbe_study_best", &[("study", &st.name)], b);
+            }
+            prom_line(
+                &mut out,
+                "dbe_study_regret",
+                &[("study", &st.name)],
+                st.regret_slope,
+            );
+            if let Some(lpd) = st.loo_lpd {
+                prom_line(&mut out, "dbe_study_loo_lpd", &[("study", &st.name)], lpd);
+            }
+            prom_line(&mut out, "dbe_study_stall", &[("study", &st.name)], st.stall as f64);
+            prom_line(&mut out, "dbe_study_flags", &[("study", &st.name)], st.flags as f64);
         }
     } else {
         prom_line(&mut out, "dbe_serve_ready", &[], 0.0);

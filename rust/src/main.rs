@@ -7,6 +7,7 @@
 //! dbe-bo hub    --studies 4 --q 2 --journal hub.jsonl [flags]
 //! dbe-bo serve  --addr 127.0.0.1:7341 --journal hub.jsonl [flags]
 //! dbe-bo client --addr 127.0.0.1:7341 --studies 2 [flags]
+//! dbe-bo top    --addr 127.0.0.1:7341 [--interval SECS] [--once]
 //! dbe-bo demo-coordinator --objective rastrigin --dim 5 --workers 2 [flags]
 //! dbe-bo info
 //! ```
@@ -46,6 +47,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("mso") => cmd_mso(args),
         Some("serve") => cmd_serve(args),
         Some("client") => cmd_client(args),
+        Some("top") => cmd_top(args),
         Some("demo-coordinator") => cmd_demo_coordinator(args),
         Some("hub") => cmd_hub(args),
         Some("info") => cmd_info(),
@@ -75,6 +77,9 @@ fn print_usage() {
                         --script FILE | --objective NAME --dim D --studies M --trials N --q Q]\n\
                         [--trace [--trace-out FILE]]  (arm the server's flight recorder,\n\
                         drive the workload, dump Chrome trace JSON)\n\
+           dbe-bo top   [--addr HOST:PORT] [--interval SECS] [--once]\n\
+                        (live watch: one line per study — status, trials, incumbent,\n\
+                        regret slope, LOO-LPD, EI, anomaly flags)\n\
            dbe-bo demo-coordinator --objective NAME --dim D [--workers K] [--studies M]\n\
            dbe-bo info\n\
          \n\
@@ -470,6 +475,7 @@ fn cmd_hub(args: &Args) -> Result<()> {
         sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
         restart_budget: args.get_usize("restart-budget", 3)?,
         snapshot_every: args.get_usize("snapshot-every", 0)?,
+        health: !args.has("no-health"),
     };
     println!(
         "hub: {} studies, pool workers {}, journal {}",
@@ -577,6 +583,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mailbox_cap: args.get_usize("mailbox-cap", 64)?,
         sync: SyncPolicy::parse(&args.get_str("sync", "os"))?,
         restart_budget: args.get_usize("restart-budget", 3)?,
+        health: !args.has("no-health"),
         snapshot_every: args.get_usize("snapshot-every", 0)?,
     };
     let serve_cfg = ServeConfig {
@@ -753,4 +760,193 @@ fn cmd_client(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+// --- `dbe-bo top`: polling live watch over the health + metrics ops ---
+
+/// Lenient JSON field readers for the watch: a missing/null/mistyped
+/// field renders as "absent" instead of killing the repaint loop
+/// (e.g. a crashed study answers `health` with an error frame).
+fn jget_f64(j: &dbe_bo::hub::json::Json, k: &str) -> Option<f64> {
+    j.field(k).ok().and_then(|v| v.as_f64().ok())
+}
+
+fn jget_u64(j: &dbe_bo::hub::json::Json, k: &str) -> u64 {
+    j.field(k).ok().and_then(|v| v.as_u64().ok()).unwrap_or(0)
+}
+
+fn jget_str<'a>(j: &'a dbe_bo::hub::json::Json, k: &str) -> &'a str {
+    j.field(k).ok().and_then(|v| v.as_str().ok()).unwrap_or("?")
+}
+
+/// `{v:>w.2e}` with `-` for an absent value.
+fn fmt_opt_e(v: Option<f64>, width: usize) -> String {
+    match v {
+        Some(v) => format!("{v:>width$.2e}"),
+        None => format!("{:>width$}", "-"),
+    }
+}
+
+/// The fixed column header `top` repaints above the study lines.
+fn top_columns() -> &'static str {
+    "STUDY            STATUS      RST     N  PEND          BEST      SLOPE   LOO-LPD    LOG-EI  STALL  FLAGS"
+}
+
+/// One study's line: supervision fields from its `study_stats` entry,
+/// everything else from its `health` frame (absent when the health op
+/// failed — e.g. a crashed study — or health is disabled server-side).
+fn top_line(
+    stat: &dbe_bo::hub::json::Json,
+    health: Option<&dbe_bo::hub::json::Json>,
+) -> String {
+    let name = jget_str(stat, "name");
+    let status = jget_str(stat, "status");
+    let restarts = jget_u64(stat, "restarts");
+    let (n, pend, best, slope, lpd, log_ei, stall, flags) = match health {
+        None => (0, 0, None, None, None, None, 0, "?".to_string()),
+        Some(h) => {
+            let best = h.field("best").ok().and_then(|b| b.field("value").ok());
+            let flags: Vec<&str> = h
+                .field("flags")
+                .ok()
+                .and_then(|f| f.as_arr().ok())
+                .map(|a| a.iter().filter_map(|f| f.as_str().ok()).collect())
+                .unwrap_or_default();
+            (
+                jget_u64(h, "n_trials"),
+                jget_u64(h, "pending"),
+                best.and_then(|b| b.as_f64().ok()),
+                jget_f64(h, "regret_slope"),
+                h.field("loo").ok().and_then(|l| jget_f64(l, "lpd")),
+                jget_f64(h, "log_ei"),
+                jget_u64(h, "since_improvement"),
+                if flags.is_empty() { "-".to_string() } else { flags.join(",") },
+            )
+        }
+    };
+    format!(
+        "{name:<16} {status:<10} {restarts:>4} {n:>5} {pend:>5} {} {} {} {} {stall:>6}  {flags}",
+        fmt_opt_e(best, 13),
+        fmt_opt_e(slope, 10),
+        fmt_opt_e(lpd, 9),
+        fmt_opt_e(log_ei, 9),
+    )
+}
+
+/// Render one full repaint (header + column row + one line per study).
+fn render_top(
+    addr: &str,
+    metrics: &dbe_bo::hub::json::Json,
+    healths: &[Option<dbe_bo::hub::json::Json>],
+) -> Result<String> {
+    use std::fmt::Write as _;
+    let serve = metrics.field("serve")?;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "dbe-bo top — {addr} | requests {} (errors {}, busy {}) | latency p50 {:.1}us p99 {:.1}us",
+        jget_u64(serve, "requests"),
+        jget_u64(serve, "errors"),
+        jget_u64(serve, "busy"),
+        jget_u64(serve, "p50_ns") as f64 / 1e3,
+        jget_u64(serve, "p99_ns") as f64 / 1e3,
+    );
+    let _ = writeln!(out, "{}", top_columns());
+    for (stat, health) in metrics.field("study_stats")?.as_arr()?.iter().zip(healths) {
+        let _ = writeln!(out, "{}", top_line(stat, health.as_ref()));
+    }
+    Ok(out)
+}
+
+/// Live watch over a serving hub: repaint one line per study (status,
+/// restarts, trials, incumbent, regret slope, LOO-LPD, last log-EI,
+/// stall count, anomaly flags) every `--interval` seconds. `--once`
+/// prints a single frame and exits (scriptable / CI-friendly).
+fn cmd_top(args: &Args) -> Result<()> {
+    use dbe_bo::hub::HubClient;
+    let addr = args.get_str("addr", "127.0.0.1:7341");
+    let interval = args.get_f64("interval", 2.0)?.max(0.1);
+    let once = args.has("once");
+    let mut client = HubClient::connect(&addr)?;
+    loop {
+        let metrics = client.metrics()?;
+        let names: Vec<String> = metrics
+            .field("studies")?
+            .as_arr()?
+            .iter()
+            .filter_map(|n| n.as_str().ok().map(str::to_string))
+            .collect();
+        // One health frame per study per tick; a failing one (crashed
+        // study, health disabled) renders as absent, never aborts.
+        let healths: Vec<_> =
+            names.iter().map(|name| client.health(name).ok()).collect();
+        let screen = render_top(&addr, &metrics, &healths)?;
+        if once {
+            print!("{screen}");
+            return Ok(());
+        }
+        // Plain-text repaint: ANSI clear + home, no TUI dependency.
+        print!("\x1b[2J\x1b[H{screen}");
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use dbe_bo::hub::json::Json;
+
+    #[test]
+    fn top_line_renders_health_fields_and_flags() {
+        let stat = Json::parse(
+            r#"{"name":"s0","status":"running","restarts":2,"last_panic":null}"#,
+        )
+        .unwrap();
+        let health = Json::parse(
+            r#"{"study":"s0","n_trials":12,"pending":1,"next_trial":13,
+                "best":{"value":-1.25,"tell":9},"since_improvement":3,
+                "regret_slope":-0.015,"last_delta":0.0,"log_ei":-4.5,
+                "gp_n_train":12,"loo":{"n":12,"lpd":-0.83,"max_abs_z":2.1,"coverage95":0.92},
+                "qn":null,"flags":["stalled","ei_collapsed"]}"#,
+        )
+        .unwrap();
+        let line = top_line(&stat, Some(&health));
+        assert!(line.starts_with("s0"), "{line}");
+        assert!(line.contains("running"), "{line}");
+        assert!(line.contains("-1.25e0"), "{line}");
+        assert!(line.contains("-8.30e-1"), "{line}");
+        assert!(line.contains("stalled,ei_collapsed"), "{line}");
+    }
+
+    #[test]
+    fn top_line_survives_missing_health() {
+        let stat = Json::parse(r#"{"name":"dead","status":"crashed","restarts":4}"#)
+            .unwrap();
+        let line = top_line(&stat, None);
+        assert!(line.starts_with("dead"), "{line}");
+        assert!(line.contains("crashed"), "{line}");
+        assert!(line.contains('-'), "absent values render as dashes: {line}");
+    }
+
+    #[test]
+    fn render_top_emits_header_and_one_line_per_study() {
+        let metrics = Json::parse(
+            r#"{"ready":true,
+                "serve":{"requests":10,"errors":1,"busy":0,"p50_ns":2048,"p99_ns":65536},
+                "studies":["a","b"],
+                "study_stats":[
+                  {"name":"a","status":"running","restarts":0},
+                  {"name":"b","status":"running","restarts":1}]}"#,
+        )
+        .unwrap();
+        let healths = vec![None, None];
+        let screen = render_top("127.0.0.1:7341", &metrics, &healths).unwrap();
+        let lines: Vec<&str> = screen.lines().collect();
+        assert_eq!(lines.len(), 4, "{screen}");
+        assert!(lines[0].contains("p50 2.0us"), "{screen}");
+        assert!(lines[1].starts_with("STUDY"), "{screen}");
+        assert!(lines[2].starts_with('a') && lines[3].starts_with('b'), "{screen}");
+    }
 }

@@ -1,0 +1,679 @@
+//! Study health: LOO-based GP diagnostics, a convergence ledger, and
+//! anomaly flags with hysteresis.
+//!
+//! The flight recorder (PR 7) made the system *traceable*; this module
+//! answers the operator's actual question — **is this study converging,
+//! and is its model trustworthy?** A [`HealthLedger`] lives inside each
+//! study actor and is appended on every committed ask/tell:
+//!
+//! - **GP diagnostics** — leave-one-out residuals/variances from
+//!   [`crate::gp::GpRegressor::loo_diagnostics`] (O(n²) off the cached
+//!   `w_half = L⁻ᵀ`, zero new factorizations), summarized into a mean
+//!   LOO log-predictive density, max |z|, and 95% coverage.
+//! - **Convergence ledger** — raw-units incumbent history,
+//!   simple-regret deltas, trials-since-improvement, and the log-EI of
+//!   accepted suggestions (EI-collapse detector).
+//! - **QN quality** — per-restart iteration counts, stop-reason mix,
+//!   and final projected-gradient ∞-norms from the MSO run behind each
+//!   ask: the paper's C-BE-vs-D-BE degradation signature as a live
+//!   metric instead of a post-hoc trace query.
+//!
+//! Everything here is **read-only with respect to the optimization
+//! state**: no RNG draws, no GP mutation, no fit-schedule interaction —
+//! suggestions stay bitwise-identical with the ledger on or off
+//! (proven in `tests/chaos.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::gp::kernel::GpParams;
+use crate::gp::regressor::LooDiagnostics;
+use crate::gp::stats::log_normal_pdf;
+use crate::optim::mso::MsoResult;
+
+// ---------------------------------------------------------------------
+// Flag taxonomy (stable wire tokens — README "Health & watch").
+
+/// A fitted hyperparameter is pinned at its MLL box bound: the fit
+/// wanted to leave the search box, so the model family is fighting the
+/// data (classic symptoms: noise at the floor → interpolating an
+/// unrepeatable signal; lengthscale at the ceiling → flat posterior).
+pub const FLAG_HYPERPARAM_AT_BOUND: &str = "hyperparam_at_bound";
+/// Accepted suggestions carry log-EI below [`LOG_EI_COLLAPSE`]: the
+/// acquisition surface has collapsed and asks are near-random.
+pub const FLAG_EI_COLLAPSED: &str = "ei_collapsed";
+/// No incumbent improvement for ≥ [`STALL_TRIALS`] tells.
+pub const FLAG_STALLED: &str = "stalled";
+/// LOO calibration is off: 95% coverage below [`MIN_COVERAGE95`] or a
+/// standardized LOO residual beyond [`MAX_ABS_Z`].
+pub const FLAG_MISCALIBRATED: &str = "miscalibrated";
+/// ≥ [`QN_FAIL_FRAC`] of recent QN restarts stopped on a line-search or
+/// numerical failure — the paper's coupled-update pathology, live.
+pub const FLAG_QN_LINESEARCH_FAILING: &str = "qn_linesearch_failing";
+
+/// All flags, in the order they are evaluated and reported.
+pub const ALL_FLAGS: [&str; 5] = [
+    FLAG_HYPERPARAM_AT_BOUND,
+    FLAG_EI_COLLAPSED,
+    FLAG_STALLED,
+    FLAG_MISCALIBRATED,
+    FLAG_QN_LINESEARCH_FAILING,
+];
+
+/// log-EI threshold below which an accepted suggestion counts as
+/// collapsed (EI < e⁻³⁰ ≈ 1e-13 in standardized units).
+pub const LOG_EI_COLLAPSE: f64 = -30.0;
+/// Tells without incumbent improvement before `stalled` raises.
+pub const STALL_TRIALS: u64 = 15;
+/// Minimum LOO sample size before calibration flags are trusted.
+pub const MIN_LOO_N: usize = 10;
+/// 95%-interval empirical coverage below this is miscalibration.
+pub const MIN_COVERAGE95: f64 = 0.6;
+/// Any |z| beyond this is miscalibration (a ~5σ LOO surprise).
+pub const MAX_ABS_Z: f64 = 5.0;
+/// Fraction of the recent QN window failing line search to raise.
+pub const QN_FAIL_FRAC: f64 = 0.5;
+/// Minimum restarts in the window before the QN flag is trusted.
+pub const MIN_QN_WINDOW: usize = 8;
+/// Consecutive true evaluations before a flag raises.
+const RAISE_AFTER: u32 = 2;
+/// Consecutive false evaluations before a raised flag clears.
+const CLEAR_AFTER: u32 = 3;
+/// Rolling QN window length (restarts) and accepted-acq window.
+const QN_WINDOW: usize = 64;
+const ACQ_WINDOW: usize = 32;
+/// Trailing window (tells) for the regret slope.
+const SLOPE_WINDOW: u64 = 20;
+
+// ---------------------------------------------------------------------
+// LOO summary.
+
+/// Aggregate view of one [`LooDiagnostics`] pass, raw target units
+/// where units matter.
+#[derive(Clone, Copy, Debug)]
+pub struct LooSummary {
+    /// Training points the diagnostics cover.
+    pub n: usize,
+    /// Mean LOO log predictive density in **raw** target units
+    /// (standardized LPD minus ln σ_raw): comparable across studies.
+    pub lpd: f64,
+    /// Largest |standardized LOO residual|.
+    pub max_abs_z: f64,
+    /// Fraction of points inside the central 95% LOO interval.
+    pub coverage95: f64,
+}
+
+impl LooSummary {
+    /// Summarize raw diagnostics. `raw_sigma` is the standardizer's
+    /// target scale (`Standardizer::std`), used to express the LPD in
+    /// raw units. Returns `None` for an empty model.
+    pub fn from_diagnostics(diag: &LooDiagnostics, raw_sigma: f64) -> Option<LooSummary> {
+        let n = diag.residuals.len();
+        if n == 0 {
+            return None;
+        }
+        let mut lpd = 0.0;
+        let mut max_abs_z = 0.0f64;
+        let mut covered = 0usize;
+        for (&e, &v) in diag.residuals.iter().zip(&diag.variances) {
+            let sigma = v.max(1e-300).sqrt();
+            let z = e / sigma;
+            lpd += log_normal_pdf(z) - sigma.ln() - raw_sigma.max(1e-300).ln();
+            max_abs_z = max_abs_z.max(z.abs());
+            if z.abs() <= 1.959963984540054 {
+                covered += 1;
+            }
+        }
+        Some(LooSummary {
+            n,
+            lpd: lpd / n as f64,
+            max_abs_z,
+            coverage95: covered as f64 / n as f64,
+        })
+    }
+}
+
+/// True when any fitted hyperparameter sits within `tol` (in log space)
+/// of its MLL search-box bound ([`GpParams::fit_bounds`]).
+pub fn params_at_bound(p: &GpParams, tol: f64) -> bool {
+    let theta = [p.log_len, p.log_sf2, p.log_noise];
+    GpParams::fit_bounds()
+        .iter()
+        .zip(theta)
+        .any(|(&(lo, hi), t)| (t - lo).abs() <= tol || (t - hi).abs() <= tol)
+}
+
+// ---------------------------------------------------------------------
+// Per-ask MSO quality.
+
+/// QN quality of one accepted suggestion, distilled from the MSO run
+/// (the existing `qn_restart` telemetry, kept instead of dropped).
+#[derive(Clone, Debug)]
+pub struct AskQuality {
+    pub trial_id: u64,
+    /// log-EI of the accepted suggestion (MSO minimizes −logEI, so this
+    /// is `−best_f`), standardized units.
+    pub log_ei: f64,
+    /// Per-restart QN iteration counts.
+    pub iters: Vec<u32>,
+    /// Per-restart evaluation counts (line-search probes included).
+    pub evals: Vec<u32>,
+    /// Per-restart final projected-gradient ∞-norms.
+    pub grad_inf: Vec<f64>,
+    /// Per-restart stop-reason tokens ([`crate::optim::StopReason::token`]).
+    pub reasons: Vec<&'static str>,
+}
+
+impl AskQuality {
+    pub fn from_mso(trial_id: u64, res: &MsoResult) -> AskQuality {
+        AskQuality {
+            trial_id,
+            log_ei: -res.best_f,
+            iters: res.restarts.iter().map(|r| r.iters as u32).collect(),
+            evals: res.restarts.iter().map(|r| r.evals as u32).collect(),
+            grad_inf: res.restarts.iter().map(|r| r.grad_inf).collect(),
+            reasons: res.restarts.iter().map(|r| r.reason.token()).collect(),
+        }
+    }
+}
+
+/// Aggregated QN-health view over the rolling restart window plus
+/// cumulative totals (the report payload).
+#[derive(Clone, Debug)]
+pub struct QnSummary {
+    /// Restarts in the rolling window.
+    pub window: usize,
+    /// Restarts observed since this ledger was built.
+    pub total: u64,
+    pub median_iters: f64,
+    pub grad_inf_p50: f64,
+    pub grad_inf_p90: f64,
+    /// Window fraction stopping on a converged reason (gradtol/ftol).
+    pub converged_frac: f64,
+    /// (stop-reason token, window count), every token listed.
+    pub reasons: Vec<(&'static str, u64)>,
+}
+
+#[derive(Clone, Debug)]
+struct QnRec {
+    iters: u32,
+    grad_inf: f64,
+    reason: &'static str,
+}
+
+// ---------------------------------------------------------------------
+// Hysteresis.
+
+#[derive(Clone, Copy, Debug, Default)]
+struct FlagState {
+    on: bool,
+    /// Consecutive evaluations agreeing with a pending transition.
+    streak: u32,
+}
+
+impl FlagState {
+    /// Feed one evaluation; returns `Some(new_state)` on a transition.
+    fn step(&mut self, cond: bool) -> Option<bool> {
+        if cond == self.on {
+            self.streak = 0;
+            return None;
+        }
+        self.streak += 1;
+        let needed = if self.on { CLEAR_AFTER } else { RAISE_AFTER };
+        if self.streak >= needed {
+            self.on = cond;
+            self.streak = 0;
+            return Some(cond);
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// The ledger.
+
+/// Per-study convergence ledger + anomaly flags. Owned by the study
+/// actor; all inputs are values already committed to the journal or
+/// read-only views of the synced model, so maintaining it cannot
+/// perturb suggestions.
+#[derive(Debug, Default)]
+pub struct HealthLedger {
+    n_tells: u64,
+    /// Raw-units incumbent (min) and the tell index that set it.
+    best: Option<f64>,
+    best_tell: u64,
+    /// (tell index, incumbent after that tell) at each improvement.
+    history: Vec<(u64, f64)>,
+    since_improvement: u64,
+    /// Last simple-regret delta (previous best − new best; 0 when the
+    /// tell did not improve).
+    last_delta: f64,
+    /// (trial_id, log-EI) of recent accepted suggestions.
+    acq: VecDeque<(u64, f64)>,
+    qn: VecDeque<QnRec>,
+    qn_total: u64,
+    loo: Option<LooSummary>,
+    gp_n_train: usize,
+    model_at_bound: bool,
+    flags: [FlagState; 5],
+}
+
+impl HealthLedger {
+    pub fn new() -> HealthLedger {
+        HealthLedger::default()
+    }
+
+    /// Record one committed tell. Pure function of the value stream —
+    /// also used verbatim by journal replay so a restarted actor's
+    /// convergence ledger matches a live one.
+    pub fn on_tell(&mut self, value: f64) {
+        self.n_tells += 1;
+        let improved = self.best.is_none_or(|b| value < b);
+        if improved {
+            self.last_delta = self.best.map_or(0.0, |b| b - value);
+            self.best = Some(value);
+            self.best_tell = self.n_tells;
+            self.history.push((self.n_tells, value));
+            self.since_improvement = 0;
+        } else {
+            self.last_delta = 0.0;
+            self.since_improvement += 1;
+        }
+    }
+
+    /// Record the MSO quality of one committed ask (live asks only;
+    /// replayed asks re-inject recorded points and never run MSO).
+    pub fn on_ask(&mut self, q: &AskQuality) {
+        self.acq.push_back((q.trial_id, q.log_ei));
+        while self.acq.len() > ACQ_WINDOW {
+            self.acq.pop_front();
+        }
+        for i in 0..q.iters.len() {
+            self.qn.push_back(QnRec {
+                iters: q.iters[i],
+                grad_inf: q.grad_inf[i],
+                reason: q.reasons[i],
+            });
+            self.qn_total += 1;
+        }
+        while self.qn.len() > QN_WINDOW {
+            self.qn.pop_front();
+        }
+    }
+
+    /// Refresh the model-dependent inputs (called with a read-only view
+    /// of the study's GP after a committed ask/tell).
+    pub fn observe_model(&mut self, at_bound: bool, loo: Option<LooSummary>, n_train: usize) {
+        self.model_at_bound = at_bound;
+        if loo.is_some() {
+            self.loo = loo;
+        }
+        self.gp_n_train = n_train;
+    }
+
+    /// Re-evaluate every flag through its hysteresis gate; returns the
+    /// transitions `(token, now_on)` that fired, for mirroring into the
+    /// flight recorder.
+    pub fn reeval_flags(&mut self) -> Vec<(&'static str, bool)> {
+        let conds = [
+            self.model_at_bound,
+            self.acq.back().is_some_and(|&(_, lei)| lei < LOG_EI_COLLAPSE),
+            self.n_tells >= STALL_TRIALS && self.since_improvement >= STALL_TRIALS,
+            self.loo.is_some_and(|l| {
+                l.n >= MIN_LOO_N && (l.coverage95 < MIN_COVERAGE95 || l.max_abs_z > MAX_ABS_Z)
+            }),
+            self.qn.len() >= MIN_QN_WINDOW && {
+                let failing = self
+                    .qn
+                    .iter()
+                    .filter(|r| r.reason == "linesearch" || r.reason == "numerical")
+                    .count();
+                failing as f64 >= QN_FAIL_FRAC * self.qn.len() as f64
+            },
+        ];
+        let mut transitions = Vec::new();
+        for (i, cond) in conds.into_iter().enumerate() {
+            if let Some(on) = self.flags[i].step(cond) {
+                transitions.push((ALL_FLAGS[i], on));
+            }
+        }
+        transitions
+    }
+
+    /// Currently-raised flags, in [`ALL_FLAGS`] order.
+    pub fn active_flags(&self) -> Vec<&'static str> {
+        ALL_FLAGS
+            .iter()
+            .zip(&self.flags)
+            .filter(|(_, s)| s.on)
+            .map(|(&t, _)| t)
+            .collect()
+    }
+
+    pub fn n_tells(&self) -> u64 {
+        self.n_tells
+    }
+
+    /// Raw-units incumbent and the tell index that set it.
+    pub fn best(&self) -> Option<(f64, u64)> {
+        self.best.map(|b| (b, self.best_tell))
+    }
+
+    pub fn since_improvement(&self) -> u64 {
+        self.since_improvement
+    }
+
+    pub fn last_delta(&self) -> f64 {
+        self.last_delta
+    }
+
+    /// log-EI of the most recent accepted suggestion.
+    pub fn last_log_ei(&self) -> Option<f64> {
+        self.acq.back().map(|&(_, lei)| lei)
+    }
+
+    pub fn loo(&self) -> Option<LooSummary> {
+        self.loo
+    }
+
+    pub fn gp_n_train(&self) -> usize {
+        self.gp_n_train
+    }
+
+    /// Incumbent improvement per tell over the trailing window
+    /// (`≥ 0`; larger = still improving, `0` = flat / too early).
+    pub fn regret_slope(&self) -> f64 {
+        let (Some(best), true) = (self.best, self.n_tells > 0) else {
+            return 0.0;
+        };
+        let w = SLOPE_WINDOW.min(self.n_tells);
+        if w == 0 {
+            return 0.0;
+        }
+        let from = self.n_tells - w;
+        // Incumbent as of tell `from`: last improvement at index ≤ from.
+        let then = self
+            .history
+            .iter()
+            .rev()
+            .find(|&&(i, _)| i <= from)
+            .map(|&(_, b)| b);
+        match then {
+            Some(then) => (then - best) / w as f64,
+            // No incumbent yet at the window start: slope from the
+            // first recorded incumbent.
+            None => match self.history.first() {
+                Some(&(i0, b0)) if self.n_tells > i0 => {
+                    (b0 - best) / (self.n_tells - i0) as f64
+                }
+                _ => 0.0,
+            },
+        }
+    }
+
+    /// Aggregate the rolling QN window (None before any model-based ask).
+    pub fn qn_summary(&self) -> Option<QnSummary> {
+        if self.qn.is_empty() {
+            return None;
+        }
+        let mut iters: Vec<f64> = self.qn.iter().map(|r| r.iters as f64).collect();
+        let mut grads: Vec<f64> = self.qn.iter().map(|r| r.grad_inf).collect();
+        let converged = self
+            .qn
+            .iter()
+            .filter(|r| r.reason == "gradtol" || r.reason == "ftol")
+            .count();
+        let reasons = crate::optim::StopReason::all_tokens()
+            .iter()
+            .map(|&t| (t, self.qn.iter().filter(|r| r.reason == t).count() as u64))
+            .collect();
+        Some(QnSummary {
+            window: self.qn.len(),
+            total: self.qn_total,
+            median_iters: quantile_of(&mut iters, 0.5),
+            grad_inf_p50: quantile_of(&mut grads, 0.5),
+            grad_inf_p90: quantile_of(&mut grads, 0.9),
+            converged_frac: converged as f64 / self.qn.len() as f64,
+            reasons,
+        })
+    }
+}
+
+/// In-place nearest-rank quantile of a small sample (deterministic:
+/// total order via `total_cmp`).
+fn quantile_of(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(f64::total_cmp);
+    let rank = ((xs.len() as f64 * q).ceil() as usize).clamp(1, xs.len());
+    xs[rank - 1]
+}
+
+// ---------------------------------------------------------------------
+// Shared gauges: the lock-cheap mirror the `metrics` op reads without
+// messaging the actor (prom `dbe_study_*` families).
+
+/// NaN-encoded "absent" sentinel for gauge f64 bits.
+const ABSENT: u64 = f64::NAN.to_bits();
+
+/// Atomic per-study health gauges, shared between the actor thread
+/// (writer) and the metrics renderers (readers).
+#[derive(Debug)]
+pub struct HealthGauges {
+    loo_lpd: AtomicU64,
+    regret_slope: AtomicU64,
+    best: AtomicU64,
+    stall: AtomicU64,
+    flags: AtomicU64,
+}
+
+impl Default for HealthGauges {
+    fn default() -> Self {
+        HealthGauges {
+            loo_lpd: AtomicU64::new(ABSENT),
+            regret_slope: AtomicU64::new(0f64.to_bits()),
+            best: AtomicU64::new(ABSENT),
+            stall: AtomicU64::new(0),
+            flags: AtomicU64::new(0),
+        }
+    }
+}
+
+impl HealthGauges {
+    pub fn new() -> HealthGauges {
+        HealthGauges::default()
+    }
+
+    /// Publish the current ledger view (actor thread, post-commit).
+    pub fn publish(&self, ledger: &HealthLedger) {
+        let lpd = ledger.loo().map_or(f64::NAN, |l| l.lpd);
+        self.loo_lpd.store(lpd.to_bits(), Ordering::Relaxed);
+        self.regret_slope.store(ledger.regret_slope().to_bits(), Ordering::Relaxed);
+        let best = ledger.best().map_or(f64::NAN, |(b, _)| b);
+        self.best.store(best.to_bits(), Ordering::Relaxed);
+        self.stall.store(ledger.since_improvement(), Ordering::Relaxed);
+        self.flags.store(ledger.active_flags().len() as u64, Ordering::Relaxed);
+    }
+
+    /// Mean LOO-LPD (`None` until a model has been diagnosed).
+    pub fn loo_lpd(&self) -> Option<f64> {
+        let v = f64::from_bits(self.loo_lpd.load(Ordering::Relaxed));
+        (!v.is_nan()).then_some(v)
+    }
+
+    pub fn regret_slope(&self) -> f64 {
+        f64::from_bits(self.regret_slope.load(Ordering::Relaxed))
+    }
+
+    pub fn best(&self) -> Option<f64> {
+        let v = f64::from_bits(self.best.load(Ordering::Relaxed));
+        (!v.is_nan()).then_some(v)
+    }
+
+    pub fn stall(&self) -> u64 {
+        self.stall.load(Ordering::Relaxed)
+    }
+
+    pub fn flag_count(&self) -> u64 {
+        self.flags.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incumbent_history_and_stall_counting() {
+        let mut l = HealthLedger::new();
+        for v in [5.0, 4.0, 4.5, 4.5, 3.0] {
+            l.on_tell(v);
+        }
+        assert_eq!(l.n_tells(), 5);
+        assert_eq!(l.best(), Some((3.0, 5)));
+        assert_eq!(l.since_improvement(), 0);
+        assert_eq!(l.last_delta(), 1.0);
+        l.on_tell(3.5);
+        l.on_tell(9.0);
+        assert_eq!(l.since_improvement(), 2);
+        assert_eq!(l.history, vec![(1, 5.0), (2, 4.0), (5, 3.0)]);
+    }
+
+    #[test]
+    fn regret_slope_is_improvement_per_tell() {
+        let mut l = HealthLedger::new();
+        // 10 tells: incumbent goes 10 → 0 linearly.
+        for i in 0..10 {
+            l.on_tell(10.0 - i as f64);
+        }
+        // Window covers all 10 tells; incumbent at window start is the
+        // first recorded one (10.0), so slope = (10 − 1)/9.
+        assert!((l.regret_slope() - 1.0).abs() < 1e-12, "{}", l.regret_slope());
+        // Flat tail: slope decays toward zero.
+        for _ in 0..30 {
+            l.on_tell(100.0);
+        }
+        assert_eq!(l.regret_slope(), 0.0);
+    }
+
+    #[test]
+    fn flags_raise_and_clear_with_hysteresis() {
+        let mut l = HealthLedger::new();
+        // One bad evaluation is not enough…
+        l.observe_model(true, None, 10);
+        assert!(l.reeval_flags().is_empty());
+        assert!(l.active_flags().is_empty());
+        // …the second raises (RAISE_AFTER = 2).
+        let tr = l.reeval_flags();
+        assert_eq!(tr, vec![(FLAG_HYPERPARAM_AT_BOUND, true)]);
+        assert_eq!(l.active_flags(), vec![FLAG_HYPERPARAM_AT_BOUND]);
+        // Clearing needs CLEAR_AFTER = 3 consecutive healthy evals.
+        l.observe_model(false, None, 10);
+        assert!(l.reeval_flags().is_empty());
+        assert!(l.reeval_flags().is_empty());
+        assert_eq!(l.reeval_flags(), vec![(FLAG_HYPERPARAM_AT_BOUND, false)]);
+        assert!(l.active_flags().is_empty());
+    }
+
+    #[test]
+    fn ei_collapse_and_stall_flags() {
+        let mut l = HealthLedger::new();
+        let q = AskQuality {
+            trial_id: 0,
+            log_ei: LOG_EI_COLLAPSE - 1.0,
+            iters: vec![3],
+            evals: vec![5],
+            grad_inf: vec![0.1],
+            reasons: vec!["gradtol"],
+        };
+        l.on_ask(&q);
+        l.reeval_flags();
+        l.reeval_flags();
+        assert!(l.active_flags().contains(&FLAG_EI_COLLAPSED));
+        // Stall: STALL_TRIALS tells with no improvement after the first.
+        l.on_tell(1.0);
+        for _ in 0..STALL_TRIALS {
+            l.on_tell(2.0);
+        }
+        l.reeval_flags();
+        l.reeval_flags();
+        assert!(l.active_flags().contains(&FLAG_STALLED));
+    }
+
+    #[test]
+    fn qn_window_flags_linesearch_pathology() {
+        let mut l = HealthLedger::new();
+        let q = AskQuality {
+            trial_id: 0,
+            log_ei: -1.0,
+            iters: vec![7; MIN_QN_WINDOW],
+            evals: vec![9; MIN_QN_WINDOW],
+            grad_inf: vec![0.5; MIN_QN_WINDOW],
+            reasons: vec!["linesearch"; MIN_QN_WINDOW],
+        };
+        l.on_ask(&q);
+        l.reeval_flags();
+        l.reeval_flags();
+        assert!(l.active_flags().contains(&FLAG_QN_LINESEARCH_FAILING));
+        let s = l.qn_summary().unwrap();
+        assert_eq!(s.window, MIN_QN_WINDOW);
+        assert_eq!(s.median_iters, 7.0);
+        assert_eq!(s.converged_frac, 0.0);
+        let ls = s.reasons.iter().find(|(t, _)| *t == "linesearch").unwrap();
+        assert_eq!(ls.1, MIN_QN_WINDOW as u64);
+    }
+
+    #[test]
+    fn loo_summary_coverage_and_lpd() {
+        // Perfectly-calibrated unit residuals: z = 1 everywhere.
+        let diag = LooDiagnostics {
+            residuals: vec![1.0; 20],
+            variances: vec![1.0; 20],
+        };
+        let s = LooSummary::from_diagnostics(&diag, 1.0).unwrap();
+        assert_eq!(s.n, 20);
+        assert_eq!(s.coverage95, 1.0);
+        assert!((s.max_abs_z - 1.0).abs() < 1e-12);
+        assert!((s.lpd - log_normal_pdf(1.0)).abs() < 1e-12);
+        // Raw-units shift: lpd drops by ln σ_raw.
+        let s2 = LooSummary::from_diagnostics(&diag, std::f64::consts::E).unwrap();
+        assert!((s2.lpd - (s.lpd - 1.0)).abs() < 1e-12);
+        // A 10σ outlier breaks coverage and max|z|.
+        let diag = LooDiagnostics {
+            residuals: vec![10.0; 1],
+            variances: vec![1.0; 1],
+        };
+        let s = LooSummary::from_diagnostics(&diag, 1.0).unwrap();
+        assert_eq!(s.coverage95, 0.0);
+        assert!((s.max_abs_z - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn params_at_bound_detects_pinned_hyperparameters() {
+        let inside =
+            GpParams { log_len: 0.0, log_sf2: 0.0, log_noise: (1e-3f64).ln() };
+        assert!(!params_at_bound(&inside, 1e-6));
+        let pinned =
+            GpParams { log_len: 0.0, log_sf2: 0.0, log_noise: (1e-6f64).ln() };
+        assert!(params_at_bound(&pinned, 1e-6));
+    }
+
+    #[test]
+    fn gauges_round_trip_absent_and_present() {
+        let g = HealthGauges::new();
+        assert_eq!(g.loo_lpd(), None);
+        assert_eq!(g.best(), None);
+        let mut l = HealthLedger::new();
+        l.on_tell(2.5);
+        l.observe_model(
+            false,
+            Some(LooSummary { n: 12, lpd: -1.25, max_abs_z: 2.0, coverage95: 0.9 }),
+            12,
+        );
+        g.publish(&l);
+        assert_eq!(g.best(), Some(2.5));
+        assert_eq!(g.loo_lpd(), Some(-1.25));
+        assert_eq!(g.stall(), 0);
+    }
+}

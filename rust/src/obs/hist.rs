@@ -84,6 +84,21 @@ impl Hist {
         unreachable!("cumulative count reaches total")
     }
 
+    /// Fold another histogram into this one (bucket-wise sum). Both
+    /// sides may be recording concurrently — each bucket is read and
+    /// added relaxed, so the merge is a consistent-enough snapshot for
+    /// exposition (the same guarantee a single `count()` read has).
+    /// Merging is exact for quantiles: the merged histogram answers
+    /// exactly as one that had recorded both sample streams.
+    pub fn merge(&self, other: &Hist) {
+        for (b, o) in self.buckets.iter().zip(&other.buckets) {
+            let v = o.load(Ordering::Relaxed);
+            if v > 0 {
+                b.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// Non-empty buckets as `(upper_bound_exclusive, count)` pairs in
     /// ascending order — the raw material for Prometheus-style
     /// cumulative `le` buckets.
@@ -175,6 +190,37 @@ mod tests {
         for q in [0.01, 0.5, 1.0] {
             assert_eq!(h.quantile(q), mid, "q={q}");
         }
+    }
+
+    /// `merge` must be exact: the merged histogram answers every
+    /// quantile exactly as a single histogram that recorded both
+    /// sample streams (bucket-wise sums commute with rank walks).
+    #[test]
+    fn merged_histogram_matches_combined_recording() {
+        let a = Hist::new();
+        let b = Hist::new();
+        let combined = Hist::new();
+        // Two very different shapes: a tight fast mode and a heavy tail.
+        for i in 0..200u64 {
+            let fast = 1_000 + i * 7;
+            a.record_ns(fast);
+            combined.record_ns(fast);
+        }
+        for i in 0..50u64 {
+            let slow = 1_000_000 + i * 100_000;
+            b.record_ns(slow);
+            combined.record_ns(slow);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.nonzero_buckets(), combined.nonzero_buckets());
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), combined.quantile(q), "q={q}");
+        }
+        // Merging an empty histogram is a no-op.
+        let before = a.nonzero_buckets();
+        a.merge(&Hist::new());
+        assert_eq!(a.nonzero_buckets(), before);
     }
 
     #[test]

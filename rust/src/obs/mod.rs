@@ -26,12 +26,18 @@
 //! The supervisor additionally attaches the crashed study's last-K
 //! recorder events to its `PanicRecord` — a black box for
 //! postmortems (see `hub::StudyHub::panic_log`).
+//!
+//! [`health`] (ISSUE 10) sits on top: a per-study convergence ledger +
+//! LOO-based GP diagnostics + anomaly flags, maintained inside the
+//! study actor and served by the `health` wire op and `dbe-bo top`.
 
+pub mod health;
 pub mod hist;
 pub mod recorder;
 pub mod registry;
 pub mod trace;
 
+pub use health::{AskQuality, HealthGauges, HealthLedger, LooSummary, QnSummary};
 pub use hist::Hist;
 pub use recorder::{armed, instant, span, span_args, ArgV, Event, Phase, Span, NO_STUDY};
 pub use registry::Counter;

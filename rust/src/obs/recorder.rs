@@ -409,6 +409,87 @@ mod tests {
         assert_eq!(trail.last().unwrap().args[0], ("i", ArgV::U(9)));
     }
 
+    /// After the ring wraps, `recent_for_study` must hand back the
+    /// study's *newest* events in ascending seq order — the trail a
+    /// `PanicRecord` attaches must read oldest→newest and must not
+    /// resurrect pre-wrap events whose slots were overwritten.
+    #[test]
+    fn recent_for_study_orders_newest_after_ring_wrap() {
+        let _g = exclusive();
+        arm();
+        // Interleave two studies until the ring has wrapped ~1.5×.
+        let rounds = (RING_CAP + RING_CAP / 2) as u64;
+        for i in 0..rounds {
+            instant("t", "a", 7, &[("i", ArgV::U(i))]);
+            instant("t", "b", 8, &[("i", ArgV::U(i))]);
+        }
+        disarm();
+        let k = 16;
+        let trail = recent_for_study(7, k);
+        assert_eq!(trail.len(), k);
+        assert!(trail.iter().all(|e| e.study == 7 && e.name == "a"));
+        // Oldest→newest, strictly increasing seq.
+        assert!(trail.windows(2).all(|w| w[0].seq < w[1].seq));
+        // The newest entry is the last emission for this study, and the
+        // k-window counts back from it without gaps in `i`.
+        for (j, e) in trail.iter().enumerate() {
+            let expect = rounds - (k - j) as u64;
+            assert_eq!(e.args[0], ("i", ArgV::U(expect)), "slot {j}");
+        }
+        // Every surviving seq postdates the wrap horizon.
+        let horizon = 2 * rounds - RING_CAP as u64;
+        assert!(trail.iter().all(|e| e.seq >= horizon));
+    }
+
+    /// `recent_for_study` racing a storm of writers: every event it
+    /// returns must be internally consistent (torn slots are skipped,
+    /// never surfaced), filtered to the requested study, ordered, and
+    /// capped at `k`.
+    #[test]
+    fn recent_for_study_under_writer_storm_returns_no_torn_events() {
+        let _g = exclusive();
+        arm();
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..4u32)
+            .map(|w| {
+                let stop = stop.clone();
+                std::thread::Builder::new()
+                    .name(format!("obs-storm-{w}"))
+                    .spawn(move || {
+                        let mut i = 0u64;
+                        while !stop.load(Ordering::Relaxed) {
+                            instant(
+                                "t",
+                                "s",
+                                w,
+                                &[("i", ArgV::U(i)), ("w", ArgV::U(w as u64))],
+                            );
+                            i += 1;
+                        }
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for _ in 0..200 {
+            let trail = recent_for_study(2, 64);
+            assert!(trail.len() <= 64);
+            assert!(trail.windows(2).all(|p| p[0].seq < p[1].seq));
+            for e in &trail {
+                assert_eq!(e.study, 2);
+                assert_eq!((e.cat, e.name), ("t", "s"));
+                let (_, ArgV::U(w)) = e.args[1] else {
+                    panic!("torn args surfaced: {e:?}")
+                };
+                assert_eq!(w, 2, "study/arg mismatch: torn slot surfaced");
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for j in writers {
+            j.join().unwrap();
+        }
+        disarm();
+    }
+
     #[test]
     fn concurrent_writers_never_tear_reads() {
         let _g = exclusive();

@@ -175,13 +175,28 @@ pub fn prom_line(out: &mut String, name: &str, labels: &[(&str, &str)], value: f
     out.push('\n');
 }
 
+/// One-line `# HELP` text for a registry metric, derived from the
+/// `<subsystem>.<metric>[_ns]` naming convention. Registry names are a
+/// fixed code-side vocabulary, so the text never needs Prometheus HELP
+/// escaping (no backslashes or newlines can appear).
+fn prom_help(name: &str) -> String {
+    let subsystem = name.split('.').next().unwrap_or("dbe");
+    if name.ends_with("_ns") {
+        format!("{subsystem} latency histogram for {name} (nanoseconds)")
+    } else {
+        format!("{subsystem} monotonic counter for {name}")
+    }
+}
+
 /// Render every registered metric in the Prometheus text exposition
 /// format: counters as `counter`, histograms as cumulative-`le` bucket
-/// series with `_count` (the classic histogram type).
+/// series with `_count` (the classic histogram type). Each family gets
+/// a `# HELP` line ahead of its `# TYPE`.
 pub fn prom_text() -> String {
     let mut out = String::new();
     for (name, v) in snapshot() {
         let pname = prom_name(name);
+        out.push_str(&format!("# HELP {pname} {}\n", prom_help(name)));
         match v {
             MetricValue::Counter(n) => {
                 out.push_str(&format!("# TYPE {pname} counter\n"));
@@ -263,5 +278,49 @@ mod tests {
         let mut out = String::new();
         prom_line(&mut out, "m.x", &[("study", "a\"b\\c")], 1.5);
         assert_eq!(out, "m_x{study=\"a\\\"b\\\\c\"} 1.5\n");
+    }
+
+    /// Study names reach the wire verbatim as `study` label values on
+    /// the `dbe_study_*` gauge families — a hostile or merely weird
+    /// name (quotes, backslashes, newlines) must come out as valid
+    /// Prometheus text, one sample per line.
+    #[test]
+    fn study_label_values_escape_for_every_health_gauge_family() {
+        let evil = "s\\1\"quoted\"\nnext";
+        for family in [
+            "dbe_study_restarts",
+            "dbe_study_best",
+            "dbe_study_regret",
+            "dbe_study_loo_lpd",
+            "dbe_study_stall",
+            "dbe_study_flags",
+        ] {
+            let mut out = String::new();
+            prom_line(&mut out, family, &[("study", evil)], -0.25);
+            assert_eq!(
+                out,
+                format!("{family}{{study=\"s\\\\1\\\"quoted\\\"\\nnext\"}} -0.25\n"),
+            );
+            // The raw newline was escaped, so the sample stays one line.
+            assert_eq!(out.matches('\n').count(), 1, "{out:?}");
+            assert!(!out.trim_end_matches('\n').contains('\n'), "{out:?}");
+        }
+    }
+
+    #[test]
+    fn prom_text_emits_help_ahead_of_type() {
+        counter("obs.test.help_counter").inc();
+        hist("obs.test.help_hist_ns").record_ns(500);
+        let text = prom_text();
+        let help_c = text.find("# HELP obs_test_help_counter ").expect("counter HELP");
+        let type_c = text.find("# TYPE obs_test_help_counter counter").expect("TYPE");
+        assert!(help_c < type_c, "HELP precedes TYPE:\n{text}");
+        let help_h = text.find("# HELP obs_test_help_hist_ns ").expect("hist HELP");
+        let type_h = text.find("# TYPE obs_test_help_hist_ns histogram").expect("TYPE");
+        assert!(help_h < type_h, "HELP precedes TYPE:\n{text}");
+        // HELP text itself never needs escaping (fixed vocabulary).
+        for line in text.lines().filter(|l| l.starts_with("# HELP")) {
+            assert!(!line.contains('\\'), "unexpected escape in HELP: {line}");
+        }
     }
 }

@@ -65,6 +65,12 @@ impl StopReason {
             StopReason::NumericalError => "numerical",
         }
     }
+
+    /// Every token, in enum order (stable reporting order for the
+    /// health ledger's stop-reason mix).
+    pub fn all_tokens() -> [&'static str; 6] {
+        ["gradtol", "ftol", "max_iters", "max_evals", "linesearch", "numerical"]
+    }
 }
 
 /// Common ask/tell interface implemented by [`lbfgsb::Lbfgsb`] and

@@ -70,8 +70,11 @@ impl Cbe {
             }
         };
 
-        // The paper reports C-BE's Iters. as the shared coupled count.
+        // The paper reports C-BE's Iters. as the shared coupled count;
+        // same shared semantics for evals and the final gradient norm.
         let iters = opt.n_iters();
+        let evals = opt.n_evals();
+        let grad_inf = opt.grad_inf_norm();
         if crate::obs::armed() {
             // One instant for the whole coupled run: the QN state is
             // shared, so there is no per-restart count to report.
@@ -81,15 +84,15 @@ impl Cbe {
                 crate::obs::NO_STUDY,
                 &[
                     ("iters", crate::obs::ArgV::U(iters as u64)),
-                    ("evals", crate::obs::ArgV::U(opt.n_evals() as u64)),
-                    ("grad_inf", crate::obs::ArgV::F(opt.grad_inf_norm())),
+                    ("evals", crate::obs::ArgV::U(evals as u64)),
+                    ("grad_inf", crate::obs::ArgV::F(grad_inf)),
                     ("reason", crate::obs::ArgV::S(reason.token())),
                 ],
             );
         }
         let restarts: Vec<RestartResult> = best_per
             .into_iter()
-            .map(|(f, x)| RestartResult { x, f, iters, reason })
+            .map(|(f, x)| RestartResult { x, f, iters, evals, grad_inf, reason })
             .collect();
 
         Ok(MsoResult::from_restarts(restarts, n_batches, n_points, t0.elapsed()))

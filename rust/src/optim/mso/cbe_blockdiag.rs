@@ -175,12 +175,14 @@ impl CbeBlockDiag {
             }
         };
 
+        // Final projected-gradient ∞-norm across blocks (shared stop, so
+        // every block reports the worst block's norm, mirroring C-BE).
+        let pg = x
+            .iter()
+            .zip(&gs)
+            .map(|(xb, gb)| proj_grad_norm(xb, gb, &cfg.bounds))
+            .fold(0.0f64, f64::max);
         if crate::obs::armed() {
-            let pg = x
-                .iter()
-                .zip(&gs)
-                .map(|(xb, gb)| proj_grad_norm(xb, gb, &cfg.bounds))
-                .fold(0.0f64, f64::max);
             crate::obs::instant(
                 "mso",
                 "qn_shared",
@@ -195,7 +197,14 @@ impl CbeBlockDiag {
         }
         let restarts: Vec<RestartResult> = best
             .into_iter()
-            .map(|(f, p)| RestartResult { x: p, f, iters, reason })
+            .map(|(f, p)| RestartResult {
+                x: p,
+                f,
+                iters,
+                evals: n_points,
+                grad_inf: pg,
+                reason,
+            })
             .collect();
         Ok(MsoResult::from_restarts(restarts, n_batches, n_points, t0.elapsed()))
     }

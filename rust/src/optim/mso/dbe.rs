@@ -104,6 +104,8 @@ pub(super) fn restart_result(opt: &Lbfgsb, reason: Option<StopReason>) -> Restar
         x: opt.best_x().to_vec(),
         f: opt.best_f(),
         iters: opt.n_iters(),
+        evals: opt.n_evals(),
+        grad_inf: opt.grad_inf_norm(),
         reason,
     }
 }

@@ -143,6 +143,13 @@ pub struct RestartResult {
     /// reports the shared coupled-optimizer iteration count (the paper's
     /// Iters. accounting).
     pub iters: usize,
+    /// Objective/gradient evaluations this restart consumed (line-search
+    /// probes included). Shared-count semantics for C-BE, like `iters`.
+    pub evals: usize,
+    /// Final projected-gradient ∞-norm at the restart's stopping point —
+    /// the paper's convergence-quality signal (C-BE stops with visibly
+    /// larger norms than D-BE; the health ledger tracks this live).
+    pub grad_inf: f64,
     pub reason: StopReason,
 }
 

@@ -731,6 +731,87 @@ fn armed_flight_recorder_never_perturbs_bitwise_equivalence() {
     assert_next_ask_bitwise_equal("armed", &hub, id, &twin, twin_id);
 }
 
+/// The health engine must be a PURE observer (ISSUE 10). A hub with
+/// the ledger ON — queried mid-run, under a supervised panic storm —
+/// must stay bitwise equal to a fault-free twin with the ledger OFF:
+/// same trials, same GP hyperparameters, same next suggestion, and a
+/// byte-identical journal. The ledger reads only committed state
+/// post-commit; it must never feed RNG, fit schedules, or suggestions.
+#[test]
+fn health_engine_on_vs_off_is_bitwise_equivalent() {
+    let _guard = failpoint::exclusive();
+    let _quiet = QuietPanics::install();
+    let n = 8;
+    let path_on = temp_journal("health_on");
+    let path_off = temp_journal("health_off");
+
+    // Twin: ledger OFF, fault-free. Split the drive at the same point
+    // as the faulted run so the committed sequences stay comparable.
+    let off = StudyHub::open(HubConfig {
+        health: false,
+        ..chaos_cfg(Some(path_off.clone()), 0)
+    })
+    .unwrap();
+    let off_id = off.create_study(StudySpec::new("s", quick_cfg(), 77)).unwrap();
+    drive(&off, off_id, n / 2, 2);
+    drive(&off, off_id, n, 2);
+
+    // Subject: ledger ON (the default), panic storm armed, health
+    // queried both mid-run and under the storm.
+    let on = StudyHub::open(chaos_cfg(Some(path_on.clone()), 0)).unwrap();
+    let on_id = on.create_study(StudySpec::new("s", quick_cfg(), 77)).unwrap();
+    configure(
+        "hub::actor::ask",
+        FailSpec::new(Trigger::EveryNth(3), FailAction::Panic("health storm".into()))
+            .with_max_fires(2),
+    );
+    drive(&on, on_id, n / 2, 2);
+    let query_health = |hub: &StudyHub, id| loop {
+        match hub.health(id) {
+            Ok(h) => break h,
+            Err(e) if recoverable(&e) => continue,
+            Err(e) => panic!("health must stay typed under chaos, got: {e}"),
+        }
+    };
+    let mid = query_health(&on, on_id);
+    assert_eq!(mid.n_trials, n / 2, "mid-run report sees committed tells");
+    drive(&on, on_id, n, 2);
+    failpoint::clear();
+    assert!(on.total_restarts() >= 1, "the storm must actually have fired");
+
+    // The ON hub's report carries the ledger; the OFF hub's report is
+    // the empty default (gated, not partially fed).
+    let h_on = query_health(&on, on_id);
+    assert_eq!(h_on.n_trials, n);
+    let (best, _) = h_on.best.expect("ledger tracked the incumbent");
+    let snap_best = on.snapshot(on_id).unwrap().best.unwrap().value;
+    assert_eq!(best.to_bits(), snap_best.to_bits(), "ledger incumbent agrees");
+    assert!(h_on.loo.is_some(), "a fitted GP yields LOO diagnostics");
+    let h_off = query_health(&off, off_id);
+    assert_eq!(h_off.n_trials, n, "report counts come from study state");
+    assert!(h_off.best.is_none(), "health off: the ledger is never fed");
+    assert!(h_off.loo.is_none() && h_off.qn.is_none() && h_off.flags.is_empty());
+
+    assert_snapshots_bitwise_equal(
+        "health",
+        &on.snapshot(on_id).unwrap(),
+        &off.snapshot(off_id).unwrap(),
+    );
+    assert_next_ask_bitwise_equal("health", &on, on_id, &off, off_id);
+
+    // Committed-state equivalence extends to durability: the journals
+    // must be byte-identical (the ledger journals nothing).
+    drop(on);
+    drop(off);
+    assert_eq!(
+        std::fs::read(&path_on).unwrap(),
+        std::fs::read(&path_off).unwrap(),
+        "health ledger must not perturb or extend the journal"
+    );
+    let _ = std::fs::remove_file(&path_on);
+    let _ = std::fs::remove_file(&path_off);
+}
+
 /// Supervision lint (mirrors `no_dense_inverse_on_hot_paths`): every
 /// thread inside the hub must be spawned through a named
 /// `thread::Builder` so panics and joins are attributable. A bare

@@ -168,6 +168,136 @@ fn refit_append_then_full_fit_warm_start_stays_consistent() {
     );
 }
 
+/// Dense symmetric solve by Gaussian elimination with partial
+/// pivoting — deliberately naive, so the brute-force LOO below shares
+/// no code path with the factor-cache identities under test.
+fn solve_dense(a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut m: Vec<Vec<f64>> = a.iter().map(|r| r.clone()).collect();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs()))
+            .unwrap();
+        m.swap(col, piv);
+        rhs.swap(col, piv);
+        let d = m[col][col];
+        assert!(d.abs() > 1e-300, "brute-force solve hit a singular pivot");
+        for row in col + 1..n {
+            let f = m[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row][k] -= f * m[col][k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = rhs[row];
+        for k in row + 1..n {
+            s -= m[row][k] * x[k];
+        }
+        x[row] = s / m[row][row];
+    }
+    x
+}
+
+/// ISSUE 10 acceptance: `loo_diagnostics()` — the O(n²) identities off
+/// the cached factors (`residual_i = α_i/[K⁻¹]_ii`, `σ²_{−i} =
+/// 1/[K⁻¹]_ii`) — must match brute-force leave-one-out at ≤ 1e-10.
+/// Brute force here means independent linear algebra: reconstruct the
+/// noisy covariance `K_n = L·Lᵀ` from the regressor's own factor, then
+/// for every held-out point solve the (n−1)-point system from scratch
+/// with dense elimination, all in the FULL model's standardized frame
+/// (fixed hyperparameters, fixed standardizer — LOO at fixed params is
+/// not a re-fit).
+#[test]
+fn loo_diagnostics_match_brute_force_holdout() {
+    let params = [
+        GpParams::default(),
+        GpParams { log_len: (0.4f64).ln(), log_sf2: (0.8f64).ln(), log_noise: (1e-3f64).ln() },
+        GpParams { log_len: (2.0f64).ln(), log_sf2: (0.2f64).ln(), log_noise: (0.1f64).ln() },
+    ];
+    for &(n, d, seed) in &[(14usize, 2usize, 3u64), (20, 3, 5)] {
+        let (x, y) = toy_data(n, d, seed);
+        for p in &params {
+            let gp = GpRegressor::with_params(x.clone(), &y, *p).unwrap();
+            let diag = gp.loo_diagnostics();
+            assert_eq!(diag.residuals.len(), n);
+            assert_eq!(diag.variances.len(), n);
+
+            // K_n = L·Lᵀ (noise included — LOO predicts the noisy target).
+            let l = gp.chol_l();
+            let kn: Vec<Vec<f64>> = (0..n)
+                .map(|i| {
+                    (0..n)
+                        .map(|j| {
+                            l.row(i).iter().zip(l.row(j)).map(|(a, b)| a * b).sum()
+                        })
+                        .collect()
+                })
+                .collect();
+            let y_std = gp.train_y_std();
+
+            for i in 0..n {
+                let keep: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+                let sub: Vec<Vec<f64>> = keep
+                    .iter()
+                    .map(|&r| keep.iter().map(|&c| kn[r][c]).collect())
+                    .collect();
+                let y_sub: Vec<f64> = keep.iter().map(|&j| y_std[j]).collect();
+                let k_i: Vec<f64> = keep.iter().map(|&j| kn[i][j]).collect();
+                let w_y = solve_dense(&sub, &y_sub);
+                let w_k = solve_dense(&sub, &k_i);
+                let mu = k_i.iter().zip(&w_y).map(|(a, b)| a * b).sum::<f64>();
+                let var = kn[i][i]
+                    - k_i.iter().zip(&w_k).map(|(a, b)| a * b).sum::<f64>();
+                close(diag.residuals[i], y_std[i] - mu, 1e-10).unwrap_or_else(|e| {
+                    panic!("LOO residual {i} (n={n} seed={seed}): {e}")
+                });
+                close(diag.variances[i], var, 1e-10).unwrap_or_else(|e| {
+                    panic!("LOO variance {i} (n={n} seed={seed}): {e}")
+                });
+            }
+        }
+    }
+}
+
+/// ISSUE 10 grep lint (mirrors `no_dense_inverse_on_hot_paths`): the
+/// health engine must derive every diagnostic from factors the
+/// regressor already caches. A factorization, dense solve, inverse, or
+/// GP re-fit inside `obs/health.rs` would turn an O(n²) observer into
+/// an O(n³) tax on the tell path. CI's health-smoke job runs the same
+/// grep.
+#[test]
+fn health_engine_never_factorizes_or_refits() {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/obs/health.rs");
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read obs/health.rs: {e}"));
+    let lower = src.to_lowercase();
+    for needle in ["cholesky", "solve", "inverse", "with_params"] {
+        assert!(
+            !lower.contains(needle),
+            "obs/health.rs mentions '{needle}' — health must consume \
+             LooDiagnostics/AskQuality computed from cached factors, \
+             never run its own linear algebra or fits"
+        );
+    }
+    // And the O(n²) identity source must exist where health expects it.
+    let reg = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/src/gp/regressor.rs");
+    let reg_src = std::fs::read_to_string(&reg).unwrap();
+    assert!(
+        reg_src.contains("pub fn loo_diagnostics"),
+        "gp/regressor.rs no longer exposes loo_diagnostics; update the \
+         health engine wiring"
+    );
+}
+
 /// Grep-enforced acceptance criterion: the MLL-evaluation and posterior
 /// hot paths must not materialize a dense inverse. `gp/naive.rs` (the
 /// frozen reference) and `runtime/evaluator.rs` (once-per-fit artifact

@@ -337,6 +337,76 @@ fn client_during_journal_replay_gets_starting_then_replayed_state() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// End-to-end `health` wire op (ISSUE 10) — the data path behind
+/// `dbe-bo top`: drive a study over loopback, then assert the health
+/// frame carries the ledger (incumbent, LOO diagnostics, QN quality,
+/// flags array), unknown studies answer a typed frame, and the
+/// `dbe_study_*` gauge families show up in both metrics formats.
+#[test]
+fn health_op_reports_the_ledger_over_the_wire() {
+    let (server, addr) = start_server(1 << 20);
+    let mut client = HubClient::connect(&addr).unwrap();
+    client.create(&StudySpec::new("h", quick_cfg(), 5)).unwrap();
+
+    // Before any tells the report exists with an empty ledger side.
+    let h = client.health("h").unwrap();
+    assert_eq!(h.field("n_trials").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(h.field("best").unwrap(), &Json::Null);
+    assert!(h.field("flags").unwrap().as_arr().unwrap().is_empty());
+
+    let mut told_best = f64::INFINITY;
+    for _ in 0..8 {
+        let sugs = client.ask("h", 1).unwrap();
+        let v = bowl(&sugs[0].x);
+        told_best = told_best.min(v);
+        client.tell("h", sugs[0].trial_id, v).unwrap();
+    }
+
+    let h = client.health("h").unwrap();
+    assert_eq!(h.field("n_trials").unwrap().as_u64().unwrap(), 8);
+    assert_eq!(h.field("pending").unwrap().as_u64().unwrap(), 0);
+    let best = h.field("best").unwrap();
+    let bv = best.field("value").unwrap().as_f64().unwrap();
+    assert_eq!(bv.to_bits(), told_best.to_bits(), "ledger incumbent is the min tell");
+    assert!(best.field("tell").unwrap().as_u64().unwrap() >= 1);
+    // n_startup=4, fit_every=2 ⇒ the GP is fitted and LOO is live.
+    let loo = h.field("loo").unwrap();
+    assert!(loo.field("n").unwrap().as_u64().unwrap() >= 4);
+    assert!(loo.field("lpd").unwrap().as_f64().unwrap().is_finite());
+    // Model-based asks ran the multi-start optimizer, so QN quality
+    // telemetry is populated.
+    let qn = h.field("qn").unwrap();
+    assert!(qn.field("total").unwrap().as_u64().unwrap() >= 1);
+    h.field("flags").unwrap().as_arr().unwrap();
+
+    // Unknown study: typed error frame, connection keeps serving.
+    let mut raw = Raw::connect(&addr);
+    raw.send_line("{\"id\":9,\"op\":\"health\",\"study\":\"nope\"}");
+    assert_error(&raw.recv(), "unknown_study", &Json::u64(9));
+
+    // The per-study gauges reach both metrics formats.
+    let m = client.metrics().unwrap();
+    assert!(m.field("serve").unwrap().field("healths").unwrap().as_u64().unwrap() >= 2);
+    let stats = m.field("study_stats").unwrap().as_arr().unwrap();
+    let st = stats[0].field("best").unwrap().as_f64().unwrap();
+    assert_eq!(st.to_bits(), told_best.to_bits(), "study_stats gauge agrees");
+    let prom = client.metrics_prom().unwrap();
+    for family in ["dbe_study_best", "dbe_study_regret", "dbe_study_stall", "dbe_study_flags"]
+    {
+        assert!(
+            prom.contains(&format!("{family}{{study=\"h\"}}")),
+            "prom output missing {family}:\n{prom}"
+        );
+    }
+    assert!(prom.contains("dbe_study_loo_lpd{study=\"h\"}"));
+    assert!(prom.contains("# HELP"), "registry families carry HELP lines");
+
+    drop(raw);
+    drop(client);
+    server.shutdown();
+    server.join();
+}
+
 #[test]
 fn shutdown_frame_drains_idempotently() {
     let (server, addr) = start_server(1 << 20);
